@@ -1,0 +1,65 @@
+"""Paper Table 3: tile-based compression efficacy — the codec model's fit
+to the paper's measurements, plus the tile-grouping gain on real masks."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import paper_scene, offline_crossroi, save_json, table
+from repro.core.compression import (CodecModel, TABLE3_RESOLUTIONS,
+                                    TABLE3_SETTINGS, TABLE3_SIZES_MB,
+                                    _tiling_tile_area, fit_boundary_constant)
+
+
+def run(verbose: bool = True):
+    # --- part 1: model vs paper Table 3 -----------------------------------
+    rows = []
+    worst = 0.0
+    for cam in range(5):
+        k = fit_boundary_constant(cam)
+        res = TABLE3_RESOLUTIONS[cam]
+        full_a = res[0] * res[1]
+        s0 = TABLE3_SIZES_MB[cam][0]
+        row = [f"C{cam+1}", f"k={k:.1f}"]
+        for setting, actual in zip(TABLE3_SETTINGS[1:],
+                                   TABLE3_SIZES_MB[cam][1:]):
+            a = _tiling_tile_area(res, setting)
+            pred = s0 * (1 + k / np.sqrt(a)) / (1 + k / np.sqrt(full_a))
+            err = abs(pred - actual) / actual
+            worst = max(worst, err)
+            row.append(f"{pred:.1f}/{actual}")
+        rows.append(row)
+
+    # --- part 2: grouping gain on the real RoI masks ----------------------
+    scene = paper_scene()
+    off = offline_crossroi()
+    codec = CodecModel.calibrated(scene.cameras)
+    gain_rows = []
+    tot_merged, tot_tiles = 0.0, 0.0
+    for c in scene.cameras:
+        cid = c.cam_id
+        n_tiles = int(off.cam_grids[cid].sum())
+        merged = codec.groups_bytes(cid, off.cam_groups[cid], 600)
+        per_tile = codec.tiles_bytes(cid, n_tiles, 600)
+        tot_merged += merged
+        tot_tiles += per_tile
+        gain_rows.append([f"C{cid+1}", n_tiles, len(off.cam_groups[cid]),
+                          f"{per_tile/2**20:.1f}",
+                          f"{merged/2**20:.1f}",
+                          f"{1 - merged/max(per_tile,1e-9):.1%}"])
+    overall = 1 - tot_merged / tot_tiles
+    if verbose:
+        print("== Table 3 fit: predicted/actual MB per tiling ==")
+        print(table(rows, ["cam", "fit"] + TABLE3_SETTINGS[1:]))
+        print(f"worst fit error: {worst:.2%}")
+        print("\n== Tile grouping gain (60 s of RoI video) ==")
+        print(table(gain_rows, ["cam", "tiles", "groups", "per-tile MB",
+                                "merged MB", "saved"]))
+        print(f"overall grouping saving: {overall:.1%}")
+    payload = {"fit_worst_err": worst, "grouping_saved": overall,
+               "rows": gain_rows}
+    save_json("bench_compression.json", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Roofline table from the calibration sweep (results/roofline.json,
+produced by repro.launch.roofline_run: 4-point unrolled fits per cell).
+
+Renders EXPERIMENTS.md §Roofline: per (arch x shape), the three terms
+(compute / memory / collective, per device), the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS usefulness ratio, and the roofline fraction.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, save_json, table
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def terms_from_record(r: dict):
+    if "flops_per_dev" not in r:
+        return None
+    flops = r["flops_per_dev"]      # per device, unroll-calibrated
+    hbm = r["hbm_bytes_per_dev"]
+    coll = r["coll_bytes_per_dev"]
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = hbm / HBM_BW
+    t_x = coll / ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    chips = r.get("chips", 256)
+    model_flops = r.get("model_flops", 0.0)
+    useful = model_flops / max(flops * chips, 1e-9)
+    ideal = model_flops / chips / PEAK_FLOPS_BF16
+    roof = ideal / max(t_c, t_m, t_x, 1e-12)
+    return dict(t_compute=t_c, t_memory=t_m, t_collective=t_x, dominant=dom,
+                useful=useful, roofline_fraction=roof)
+
+
+def run(verbose: bool = True, path: str | None = None):
+    path = path or os.path.join(RESULTS_DIR, "roofline.json")
+    if not os.path.exists(path):
+        print(f"[bench_roofline] {path} missing — run "
+              f"`python -m repro.launch.roofline_run --out {path}` "
+              f"first; skipping")
+        return None
+    with open(path) as f:
+        records = json.load(f)
+    rows, payload = [], []
+    for r in records:
+        if not r.get("ok"):
+            continue
+        t = terms_from_record(r)
+        if t is None:
+            continue
+        rows.append([r["arch"], r["shape"], r["sharding"],
+                     f"{t['t_compute']:.2e}", f"{t['t_memory']:.2e}",
+                     f"{t['t_collective']:.2e}", t["dominant"],
+                     f"{t['useful']:.3f}", f"{t['roofline_fraction']:.3f}"])
+        payload.append({**{k: r[k] for k in ("arch", "shape", "sharding")},
+                        **t})
+    if verbose:
+        print("== Roofline (per device, single-pod 16x16, calibrated) ==")
+        print(table(rows, ["arch", "shape", "shard", "t_comp s", "t_mem s",
+                           "t_coll s", "dominant", "useful", "roofline"]))
+        n_ok = sum(1 for r in records if r.get("ok"))
+        print(f"\n{n_ok}/{len(records)} cells calibrated (single-pod); "
+              f"compile pass/fail proof incl. multi-pod lives in "
+              f"results/dryrun_baseline.json")
+    save_json("bench_roofline.json", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Paper Figures 9-11: hyperparameter sensitivity.
+
+Fig 9  — SVM gamma (non-linearity) vs accuracy / network / latency
+Fig 10 — RANSAC theta (residual threshold) vs the same
+Fig 11 — segment length vs network / latency tradeoff
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (EVAL, PROFILE, offline_crossroi, paper_scene,
+                               save_json, table)
+from repro.core import OfflineConfig, OnlineConfig, run_offline, run_online
+from repro.core.filters import FilterConfig, RansacConfig, SVMConfig
+
+
+def _run_with_filters(scene, fc: FilterConfig):
+    off = run_offline(scene, OfflineConfig(profile_frames=PROFILE[1],
+                                           solver="greedy", filters=fc))
+    m = run_online(scene, off, OnlineConfig(), *EVAL)
+    return off, m
+
+
+def run(verbose: bool = True):
+    scene = paper_scene()
+    out = {}
+
+    # --- Fig 9: gamma sweep ------------------------------------------------
+    rows9 = []
+    for gamma in (1e-6, 1e-5, 1e-4, 1e-3):
+        off, m = _run_with_filters(scene, FilterConfig(
+            svm=SVMConfig(gamma=gamma)))
+        rows9.append([f"{gamma:.0e}", len(off.mask),
+                      off.filter_stats.fn_removed, f"{m.accuracy:.4f}",
+                      f"{m.network_mbps:.2f}", f"{m.latency_s:.3f}"])
+    out["gamma"] = rows9
+
+    # --- Fig 10: theta sweep ------------------------------------------------
+    rows10 = []
+    for theta in (0.02, 0.1, 0.2, 0.5, 1.0):
+        off, m = _run_with_filters(scene, FilterConfig(
+            ransac=RansacConfig(theta=theta)))
+        rows10.append([theta, len(off.mask), off.filter_stats.fp_decoupled,
+                       f"{m.accuracy:.4f}", f"{m.network_mbps:.2f}",
+                       f"{m.latency_s:.3f}"])
+    out["theta"] = rows10
+
+    # --- Fig 11: segment length ---------------------------------------------
+    off = offline_crossroi()
+    rows11 = []
+    for seg in (0.5, 1.0, 2.0, 4.0, 8.0):
+        m = run_online(scene, off, OnlineConfig(segment_s=seg), *EVAL)
+        rows11.append([seg, f"{m.network_mbps:.2f}", f"{m.latency_s:.3f}"])
+    out["segment"] = rows11
+
+    if verbose:
+        print("== Fig 9: SVM gamma sweep ==")
+        print(table(rows9, ["gamma", "mask", "fn_removed", "acc",
+                            "net Mbps", "lat s"]))
+        print("\n== Fig 10: RANSAC theta sweep ==")
+        print(table(rows10, ["theta", "mask", "fp_decoupled", "acc",
+                             "net Mbps", "lat s"]))
+        print("\n== Fig 11: segment length ==")
+        print(table(rows11, ["seg s", "net Mbps", "lat s"]))
+    save_json("bench_sensitivity.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Shared benchmark fixtures: the paper-scale scene + cached offline phase.
+
+Paper setup (§5.1): 5 cameras, 10 fps, 180 s of video; first 60 s profile
+the offline phase, last 120 s evaluate online.  Scene generation and the
+offline solve are cached per-process so every benchmark reuses them.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import (FilterConfig, OfflineConfig, OnlineConfig,
+                        full_frame_offline, run_offline, run_online)
+from repro.core.scene import SceneConfig, generate_scene
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+PROFILE = (0, 600)       # first 60 s
+EVAL = (600, 1800)       # last 120 s
+
+
+@functools.lru_cache(maxsize=1)
+def paper_scene():
+    return generate_scene(SceneConfig(duration_s=180, seed=0))
+
+
+@functools.lru_cache(maxsize=4)
+def offline_crossroi(solver: str = "greedy", filters: bool = True,
+                     merge: bool = True):
+    return run_offline(paper_scene(), OfflineConfig(
+        profile_frames=PROFILE[1], solver=solver,
+        filters=FilterConfig(enabled=filters), merge_tiles=merge))
+
+
+@functools.lru_cache(maxsize=1)
+def offline_baseline():
+    return full_frame_offline(paper_scene())
+
+
+def save_json(name: str, payload):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def table(rows, headers):
+    widths = [max(len(str(r[i])) for r in rows + [headers])
+              for i in range(len(headers))]
+    fmt = "  ".join(f"{{:<{w}}}" for w in widths)
+    out = [fmt.format(*headers), fmt.format(*["-" * w for w in widths])]
+    out += [fmt.format(*[str(c) for c in r]) for r in rows]
+    return "\n".join(out)

@@ -1,0 +1,33 @@
+"""Benchmark driver: one benchmark per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--only reid,ablations,...]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+BENCHES = ["reid", "compression", "ablations", "sensitivity", "reducto",
+           "kernels", "roofline"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"comma list of: {','.join(BENCHES)}")
+    args = ap.parse_args()
+    selected = args.only.split(",") if args.only else BENCHES
+
+    import importlib
+    t00 = time.time()
+    for name in selected:
+        mod = importlib.import_module(f"benchmarks.bench_{name}")
+        print(f"\n{'=' * 72}\n== bench_{name}\n{'=' * 72}")
+        t0 = time.time()
+        mod.run()
+        print(f"[bench_{name}: {time.time() - t0:.1f}s]")
+    print(f"\nall benchmarks done in {time.time() - t00:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

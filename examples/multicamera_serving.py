@@ -1,0 +1,74 @@
+"""End-to-end driver: multi-camera video analytics served by the framework.
+
+  PYTHONPATH=src python examples/multicamera_serving.py
+
+The paper's full online pipeline, wired through every layer of the stack:
+  1. offline phase computes cross-camera RoI masks (core/)
+  2. the camera stream pipeline emits per-segment patch tokens + keep-lists
+     derived from the masks (data/streams.py)
+  3. the RoI detector runs SBNet-style sparse conv on active tiles
+     (serving/detector.py -> kernels/roi_conv, interpret mode on CPU)
+  4. the serving engine prefills the *packed* fleet patch stream through a
+     (smoke) VLM backbone — the CrossRoI technique as token sparsity —
+     and decodes a short analytics summary (serving/engine.py)
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ServeConfig
+from repro.configs.registry import get_config
+from repro.core import OfflineConfig, OnlineConfig, run_offline, run_online
+from repro.core.scene import SceneConfig, generate_scene
+from repro.data.streams import CameraStreamPipeline
+from repro.models.params import init_params
+from repro.serving.detector import DetectorConfig, RoIDetector
+from repro.serving.engine import ServingEngine
+
+
+def main():
+    t0 = time.time()
+    scene = generate_scene(SceneConfig(duration_s=90, seed=0))
+    off = run_offline(scene, OfflineConfig(profile_frames=600))
+    print(f"offline masks: {off.fleet_density:.0%} of fleet pixels kept "
+          f"({time.time()-t0:.1f}s)")
+
+    # --- detector on RoI tiles (one frame, camera 1) -----------------------
+    det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(1))
+    grid = np.kron(off.cam_grids[0], np.ones((4, 4), bool))[:33, :60]
+    frame = jnp.asarray(np.random.default_rng(0).normal(
+        size=(grid.shape[0] * 16, grid.shape[1] * 16, 3)), jnp.float32)
+    t1 = time.time()
+    heat = det.forward(frame, grid)
+    print(f"RoI detector: frame {frame.shape[:2]}, density "
+          f"{grid.mean():.0%}, est speedup "
+          f"{det.speedup_estimate(float(grid.mean())):.2f}x "
+          f"({time.time()-t1:.1f}s interpret-mode)")
+
+    # --- packed VLM prefill over the fleet stream --------------------------
+    cfg = get_config("internvl2-26b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, ServeConfig(roi_sparsity=True), params)
+    pipe = CameraStreamPipeline(scene, off, patch_dim=cfg.frontend_dim)
+    seg = next(pipe.segments(600, 610))
+    toks, keep = pipe.fleet_tokens(seg, frame=0)
+    # pad to the engine block; patch streams enter via the VLM frontend
+    res = engine.roi_prefill(jnp.asarray(toks, jnp.bfloat16),
+                             jnp.asarray(keep), block=128)
+    print(f"packed prefill: {res.n_kept}/{res.n_total} fleet patch tokens "
+          f"({res.compute_fraction:.0%} of dense compute)")
+    nxt = jnp.argmax(res.logits[:, -1], -1)
+    out, _ = engine.decode_tokens(res.caches, nxt, res.n_kept, 6)
+    print(f"decoded analytics tokens: {out[0].tolist()}")
+
+    # --- whole-system accounting -------------------------------------------
+    m = run_online(scene, off, OnlineConfig(), 600, 900)
+    print(f"\nsystem: accuracy {m.accuracy:.4f}, network "
+          f"{m.network_mbps:.1f} Mbps, server {m.server_hz:.0f} Hz, "
+          f"latency {m.latency_s:.2f} s   (total {time.time()-t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

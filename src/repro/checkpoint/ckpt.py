@@ -1,0 +1,165 @@
+"""Sharded checkpointing with elastic restore.
+
+Layout per step::
+
+    <dir>/step_000123/
+        MANIFEST.json     — step, tree structure, shapes/dtypes, mesh note
+        arrays/<name>.npy — one file per leaf (full logical array)
+        COMMIT            — written last; a step without it is torn and
+                            ignored (crash-safe without atomic renames)
+
+Design choices for the 1000+-node posture:
+  * restore is *elastic*: arrays are loaded as full logical values and
+    re-placed with the target mesh's NamedShardings — a different device
+    count/mesh shape than the saver's is fine (re-mesh after failure).
+  * save gathers per-leaf to host then writes; an async flag moves the
+    write to a background thread (step N+1 overlaps the I/O of step N).
+    On a real cluster each host would write only its addressable shards;
+    the manifest/commit protocol is unchanged.
+  * data pipeline needs no state: batches are a pure function of the step
+    counter (data/lm.py), so the manifest's step is sufficient for replay.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[name] = leaf
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, trees: Dict[str, Any]):
+    """trees: {"params": ..., "opt": ..., ...} pytrees of jax/np arrays."""
+    d = os.path.join(directory, f"step_{step:06d}")
+    arrays = os.path.join(d, "arrays")
+    os.makedirs(arrays, exist_ok=True)
+    manifest = {"step": step, "groups": {}}
+    for group, tree in trees.items():
+        flat = _flatten(tree)
+        names = {}
+        for name, leaf in flat.items():
+            arr = np.asarray(jax.device_get(leaf))
+            fname = f"{group}__{name.replace('/', '__')}.npy"
+            dtype_name = str(arr.dtype)
+            if arr.dtype.kind == "V" or "bfloat16" in dtype_name:
+                # numpy cannot serialize bf16: store the raw uint16 view
+                dtype_name = "bfloat16"
+                arr = arr.view(np.uint16)
+            np.save(os.path.join(arrays, fname), arr)
+            names[name] = {"file": fname, "shape": list(arr.shape),
+                           "dtype": dtype_name}
+        manifest["groups"][group] = names
+    with open(os.path.join(d, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(d, "COMMIT"), "w") as f:
+        f.write("ok")
+
+
+def _complete_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and os.path.exists(
+                os.path.join(directory, name, "COMMIT")):
+            steps.append(int(name.split("_")[1]))
+    return sorted(steps)
+
+
+def load_checkpoint(directory: str, template: Dict[str, Any],
+                    step: Optional[int] = None,
+                    shardings: Optional[Dict[str, Any]] = None
+                    ) -> Tuple[int, Dict[str, Any]]:
+    """Restore trees shaped like ``template``; optionally place each group
+    with a NamedSharding tree (elastic re-mesh).  Returns (step, trees)."""
+    steps = _complete_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no complete checkpoint under {directory}")
+    step = steps[-1] if step is None else step
+    d = os.path.join(directory, f"step_{step:06d}")
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    out = {}
+    for group, tmpl in template.items():
+        names = manifest["groups"][group]
+        flat_tmpl = _flatten(tmpl)
+        shard_tree = _flatten(shardings[group]) if shardings and \
+            shardings.get(group) is not None else None
+        restored = {}
+        for name, leaf in flat_tmpl.items():
+            info = names[name]
+            arr = np.load(os.path.join(d, "arrays", info["file"]))
+            if info["dtype"] == "bfloat16":
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            want = np.asarray(jax.eval_shape(lambda: leaf)) \
+                if not hasattr(leaf, "shape") else leaf
+            assert tuple(arr.shape) == tuple(want.shape), \
+                f"{group}/{name}: ckpt {arr.shape} vs template {want.shape}"
+            if shard_tree is not None and name in shard_tree:
+                restored[name] = jax.device_put(arr, shard_tree[name])
+            else:
+                restored[name] = jax.numpy.asarray(arr)
+        # re-assemble using the template's structure
+        treedef = jax.tree_util.tree_structure(tmpl)
+        keys = list(_flatten(tmpl).keys())
+        restored_leaves = [restored[k] for k in keys]
+        out[group] = jax.tree_util.tree_unflatten(treedef, restored_leaves)
+    return step, out
+
+
+@dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+    async_save: bool = True
+    _thread: Optional[threading.Thread] = field(default=None, repr=False)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, trees: Dict[str, Any]):
+        self.wait()
+        # snapshot to host before returning (async only the file I/O)
+        host = {g: jax.tree.map(lambda x: np.asarray(jax.device_get(x)), t)
+                for g, t in trees.items()}
+
+        def run():
+            save_checkpoint(self.directory, step, host)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=run, daemon=True)
+            self._thread.start()
+        else:
+            run()
+
+    def restore(self, template, shardings=None, step=None):
+        self.wait()
+        return load_checkpoint(self.directory, template, step, shardings)
+
+    def latest_step(self) -> Optional[int]:
+        self.wait()
+        steps = _complete_steps(self.directory)
+        return steps[-1] if steps else None
+
+    def _gc(self):
+        steps = _complete_steps(self.directory)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:06d}"),
+                          ignore_errors=True)

@@ -1,0 +1,21 @@
+from repro.configs.base import ModelConfig, ShapeCell, SHAPES, TrainConfig, ServeConfig
+from repro.configs.registry import (
+    ARCH_IDS,
+    LONG_CONTEXT_ARCHS,
+    all_cells,
+    cell_is_applicable,
+    get_config,
+)
+
+__all__ = [
+    "ModelConfig",
+    "ShapeCell",
+    "SHAPES",
+    "TrainConfig",
+    "ServeConfig",
+    "ARCH_IDS",
+    "LONG_CONTEXT_ARCHS",
+    "all_cells",
+    "cell_is_applicable",
+    "get_config",
+]

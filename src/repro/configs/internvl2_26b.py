@@ -1,0 +1,39 @@
+"""internvl2-26b — VLM: InternViT frontend (STUB) + InternLM2-20B backbone.
+[arXiv:2404.16821; hf]
+
+Per the assignment, the modality frontend is a stub: ``input_specs()`` provides
+precomputed patch embeddings (frontend_dim-wide), and the model owns only the
+projection into the backbone width. This is the arch most representative of the
+paper's technique: cross-camera RoI masks drop redundant patches before the
+backbone (see DESIGN.md §Arch-applicability).
+"""
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    source="[arXiv:2404.16821; hf]",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=92553,
+    rope_theta=1_000_000.0,
+    frontend="vit_patch",
+    frontend_dim=3200,  # InternViT-6B output width
+    tie_embeddings=False,
+)
+
+SMOKE = FULL.replace(
+    name="internvl2-26b-smoke",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    frontend_dim=48,
+)

@@ -1,0 +1,49 @@
+"""Architecture registry: ``--arch <id>`` resolution + the CrossRoI app config."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeCell
+
+_ARCH_MODULES = {
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "h2o-danube3-4b": "repro.configs.h2o_danube3_4b",
+    "mistral-nemo-12b": "repro.configs.mistral_nemo_12b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "whisper-small": "repro.configs.whisper_small",
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+# Sub-quadratic-capable archs run long_500k; pure full-attention archs skip it
+# (DESIGN.md §Arch-applicability records the rationale per arch).
+LONG_CONTEXT_ARCHS = {"gemma3-27b", "h2o-danube3-4b", "zamba2-2.7b", "rwkv6-7b"}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {ARCH_IDS}")
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    return mod.SMOKE if smoke else mod.FULL
+
+
+def cell_is_applicable(arch: str, shape_name: str) -> bool:
+    """Whether a (arch x shape) dry-run cell runs or is a recorded skip."""
+    if shape_name == "long_500k":
+        return arch in LONG_CONTEXT_ARCHS
+    return True
+
+
+def all_cells(include_skips: bool = False):
+    """Yield (arch, ShapeCell, applicable) over the 40-cell assignment grid."""
+    for arch in ARCH_IDS:
+        for shape in SHAPES.values():
+            ok = cell_is_applicable(arch, shape.name)
+            if ok or include_skips:
+                yield arch, shape, ok

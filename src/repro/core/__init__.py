@@ -1,0 +1,34 @@
+"""CrossRoI core: the paper's contribution as a composable library.
+
+Offline phase: scene profiling -> noisy ReID -> tandem statistical filters
+-> cross-camera association table -> set-cover RoI masks -> tile grouping.
+Online phase: mask-cropped tile streaming (codec model) + RoI-based
+inference (SBNet-adapted Pallas kernels in repro.kernels) + metrics.
+"""
+from repro.core.association import (AssociationTable, Region, TileUniverse,
+                                    build_association_table)
+from repro.core.compression import CodecModel, EncoderModel
+from repro.core.filters import (FilterConfig, KernelSVM, RansacConfig,
+                                SVMConfig, apply_filters, ransac_regression)
+from repro.core.grouping import TileGroup, group_tiles, groups_cover
+from repro.core.pipeline import (OfflineConfig, OfflineResult, OnlineConfig,
+                                 OnlineMetrics, ServerModel,
+                                 full_frame_offline, run_offline, run_online)
+from repro.core.reducto import ReductoResult, tune_and_run
+from repro.core.reid import (ReIDNoiseConfig, ReIDRecord,
+                             characterize_pairwise, run_noisy_reid)
+from repro.core.scene import Scene, SceneConfig, default_cameras, \
+    generate_scene
+from repro.core import setcover
+
+__all__ = [
+    "AssociationTable", "Region", "TileUniverse", "build_association_table",
+    "CodecModel", "EncoderModel", "FilterConfig", "KernelSVM", "RansacConfig",
+    "SVMConfig", "apply_filters", "ransac_regression", "TileGroup",
+    "group_tiles", "groups_cover", "OfflineConfig", "OfflineResult",
+    "OnlineConfig", "OnlineMetrics", "ServerModel", "full_frame_offline",
+    "run_offline", "run_online", "ReductoResult", "tune_and_run",
+    "ReIDNoiseConfig", "ReIDRecord", "characterize_pairwise",
+    "run_noisy_reid", "Scene", "SceneConfig", "default_cameras",
+    "generate_scene", "setcover",
+]

@@ -1,0 +1,4 @@
+from repro.data.lm import SyntheticLM, lm_batch_specs
+from repro.data.streams import CameraStreamPipeline
+
+__all__ = ["SyntheticLM", "lm_batch_specs", "CameraStreamPipeline"]

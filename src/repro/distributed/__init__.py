@@ -1,0 +1,11 @@
+"""Distribution: sharding rules, collectives, compression, fault tolerance."""
+from repro.distributed.shardings import (param_pspecs, batch_pspec,
+                                         make_dist, cache_pspecs)
+from repro.distributed.compression import (int8_allreduce_mean,
+                                           quantize_int8, dequantize_int8)
+from repro.distributed.fault import (ElasticMesh, StragglerMonitor,
+                                     FaultInjector)
+
+__all__ = ["param_pspecs", "batch_pspec", "make_dist", "cache_pspecs",
+           "int8_allreduce_mean", "quantize_int8", "dequantize_int8",
+           "ElasticMesh", "StragglerMonitor", "FaultInjector"]

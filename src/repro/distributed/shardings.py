@@ -1,0 +1,220 @@
+"""PartitionSpec assignment for every parameter in the zoo.
+
+Pattern-matches the stable names emitted by models/params.py.  Three modes:
+
+  tp       — Megatron-style tensor parallelism only (the paper-era baseline
+             for the §Perf comparison): params replicated over data axes,
+             contracted/expanded dims sharded over "model".
+  fsdp     — TP over "model" + fully-sharded params/optimizer over "data"
+             (the optimized default).
+  fsdp_pod — same, but the FSDP axis spans ("pod", "data") on the
+             multi-pod mesh.
+
+MoE expert tensors shard experts over "model" (expert parallelism); GSPMD
+inserts the dispatch all-to-alls.  Stacked layers carry a leading L dim that
+always stays unsharded (it is scanned over).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.dist import DistContext
+
+
+# suffix-pattern rules: (regex on the trailing name, fn(ndim) -> dims role)
+# roles: "col" = shard last dim on model; "row" = shard second-to-last on
+# model; "expert" = shard expert dim; "rep" = replicated.
+_RULES: Tuple[Tuple[str, str], ...] = (
+    # order matters: expert/shared rules must fire before the generic
+    # wg/w1 suffixes ("moe_wg" ends in "_wg" too)
+    (r"(^|_)(moe_wg|moe_wu|moe_wd)$", "expert"),
+    (r"(^|_)(shared_wg|shared_wu)$", "col"),
+    (r"(^|_)shared_wd$", "row"),
+    (r"(^|_)(wq|wk|wv|bq|bv)$", "col"),
+    (r"(^|_)wo$", "row"),
+    (r"(^|_)(w1|w3|b1|cmix_k|wr|wg)$", "col"),
+    (r"(^|_)(w2|cmix_v)$", "row"),
+    (r"(^|_)(m_in)$", "col"),
+    (r"(^|_)(m_out)$", "row"),
+    (r"(^|_)(embed|unembed)$", "vocab"),
+    (r"(^|_)cmix_r$", "col"),
+)
+
+
+def _role(name: str) -> str:
+    for pat, role in _RULES:
+        if re.search(pat, name):
+            return role
+    return "rep"
+
+
+def _spec_for(name: str, shape, mode: str, fsdp_axes, axis_size) -> P:
+    """Build the PartitionSpec for one param, respecting divisibility."""
+    role = _role(name) if mode != "dp_only" else "rep"
+    ndim = len(shape)
+    model = "model"
+    dims = [None] * ndim
+
+    def ok(i, axes) -> bool:
+        return shape[i] % axis_size(axes) == 0
+
+    if role == "col" and ndim >= 2 and ok(-1 % ndim + 0, model):
+        dims[-1] = model
+    elif role == "row" and ndim >= 2 and ok(ndim - 2, model):
+        dims[-2] = model
+    elif role == "expert" and ndim >= 3 and ok(ndim - 3, model):
+        dims[-3] = model            # (L, E, d, F): experts over model
+    elif role == "vocab" and ok(0, model):
+        dims[0] = model             # (V, d): vocab-sharded
+    # (indivisible cases — e.g. whisper's 51865 / internvl2's 92553 vocab —
+    # fall through replicated on the model axis: Megatron-style vocab
+    # padding is the alternative; replication costs < 1.2 GiB here)
+
+    if mode in ("fsdp", "fsdp_pod", "dp_only"):
+        # shard the largest remaining divisible dim over the data axes
+        free = [i for i, d in enumerate(dims)
+                if d is None and shape[i] % axis_size(fsdp_axes) == 0
+                and shape[i] >= axis_size(fsdp_axes)]
+        if free:
+            tgt = max(free, key=lambda i: shape[i])
+            dims[tgt] = fsdp_axes
+    if all(d is None for d in dims):
+        return P()
+    return P(*dims)
+
+
+def param_pspecs(cfg: ModelConfig, specs: Dict, mode: str = "tp",
+                 multi_pod: bool = False,
+                 mesh: Optional[Mesh] = None) -> Dict:
+    """PartitionSpec tree matching a param (or optimizer-state) tree.
+
+    With ``mesh`` given, divisibility is checked against the actual axis
+    sizes; without it the production sizes (16 / 2x16) are assumed.
+    """
+    fsdp_axes = ("pod", "data") if multi_pod else ("data",)
+    if mode == "fsdp_pod":
+        multi_pod = True
+        fsdp_axes = ("pod", "data")
+    if mode == "dp_only":
+        # pure data parallelism over the WHOLE mesh (TP=1): the model axis
+        # joins the data axes; no tensor sharding roles apply — the lever
+        # for collective-bound attention-free cells (§Perf A)
+        fsdp_axes = ("pod", "data", "model") if multi_pod             else ("data", "model")
+
+    def axis_size(axes) -> int:
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            if mesh is not None:
+                n *= mesh.shape.get(a, 1)
+            else:
+                n *= {"pod": 2, "data": 16, "model": 16}[a]
+        return n
+
+    out = {}
+    for name, v in specs.items():
+        nd = len(v.shape)
+        if nd <= 1 or min(v.shape) == 0:
+            out[name] = P()
+        else:
+            out[name] = _spec_for(name, v.shape, mode, fsdp_axes, axis_size)
+    return out
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def batch_pspec(multi_pod: bool = False) -> P:
+    return P(("pod", "data") if multi_pod else ("data",))
+
+
+def batch_pspecs_for(specs: Dict, mesh: Mesh,
+                     multi_pod: bool = False) -> Dict:
+    """Shard the leading (batch) dim of every input when divisible;
+    fall back to sequence-dim sharding (SP) for batch=1 long-context."""
+    b = ("pod", "data") if multi_pod else ("data",)
+    dp = _axis_size(mesh, b)
+    out = {}
+    for k, v in specs.items():
+        dims = [None] * len(v.shape)
+        if v.shape and v.shape[0] % dp == 0 and v.shape[0] > 0:
+            dims[0] = b
+        elif len(v.shape) >= 2 and v.shape[1] % dp == 0:
+            dims[1] = b            # (1, S, ...) long-context: shard S
+        out[k] = P(*dims)
+    return out
+
+
+def cache_pspecs(cache, mesh: Mesh, multi_pod: bool = False,
+                 kv_seq_shard: bool = False):
+    """KV caches and recurrent states, shape-aware.
+
+    kv (L, B, S, KH, Dh): B over data when divisible (else S takes data —
+    the batch=1 long-context case, i.e. sequence parallelism); KH over
+    model when divisible (GQA with few KV heads cannot split 16-way), else
+    S over model (flash-decoding-style KV partitioning: GSPMD reduces the
+    softmax stats across the axis).
+    """
+    b = ("pod", "data") if multi_pod else ("data",)
+    dp = _axis_size(mesh, b)
+    tp = _axis_size(mesh, "model")
+
+    def one(leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        if nd >= 5:      # (L, B, S, KH, Dh)
+            L, B, S, KH, Dh = shape[-5:]
+            bdim = b if (B % dp == 0 and not kv_seq_shard) else None
+            s_axes = [] if bdim is not None else list(b)
+            hdim = "model" if KH % tp == 0 else None
+            if hdim is None:
+                s_axes.append("model")
+            sdim = tuple(s_axes) if s_axes else None
+            if sdim is not None and S % _axis_size(mesh, sdim) != 0:
+                sdim = None     # give up: replicate sequence
+            return P(None, bdim, sdim, hdim, None)
+        if nd == 3:      # (L, B, S) position cache: follow the kv B/S split
+            L, B, S = shape
+            if B % dp == 0 and not kv_seq_shard:
+                return P(None, b, None)
+            return P(None, None, b if S % dp == 0 else None)
+        if nd >= 2:      # recurrent states (L, B, H, ...) / conv (L, B, W, C)
+            B = shape[1]
+            bdim = b if B % dp == 0 else None
+            dims = [None, bdim] + [None] * (nd - 2)
+            # shard the widest trailing dim over model when divisible
+            for i in range(nd - 1, 1, -1):
+                if shape[i] % tp == 0 and shape[i] >= tp:
+                    dims[i] = "model"
+                    break
+            return P(*dims)
+        return P()
+
+    return jax.tree.map(one, cache)
+
+
+def make_dist(mesh: Optional[Mesh], auto_moe: bool = False,
+              dp_only: bool = False) -> DistContext:
+    if mesh is None:
+        return DistContext(mesh=None)
+    axes = ("pod", "data", "model") if dp_only else ("pod", "data")
+    batch_axes = tuple(a for a in axes if a in mesh.shape)
+    return DistContext(mesh=mesh, batch_axes=batch_axes,
+                       model_axis="model" if not dp_only else "__none__",
+                       auto_moe=auto_moe)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)

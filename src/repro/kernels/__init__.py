@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical RoI inference path.
+
+sbnet.py          — SBNet gather/scatter, TPU-adapted (scalar-prefetch DMA)
+roi_conv.py       — fused gather + 3x3 conv on active tiles (MXU matmuls)
+roi_attention.py  — RoI-packed prefill flash attention (position causality)
+ops.py            — jit'd public wrappers (mask->indices, padding, batching)
+ref.py            — pure-jnp oracles (the semantics contracts for tests)
+"""

@@ -1,0 +1,103 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles the framework-facing conveniences: mask -> index-list conversion,
+padding to hardware-aligned block counts, batching (vmap), and the
+interpret switch (True on CPU; on a real TPU deployment set
+REPRO_PALLAS_INTERPRET=0).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.roi_attention import PAD_POS, roi_attention as _roi_attn
+from repro.kernels.roi_conv import roi_conv as _roi_conv
+from repro.kernels.sbnet import sbnet_gather as _gather, \
+    sbnet_scatter as _scatter
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def mask_to_indices(grid: np.ndarray) -> np.ndarray:
+    """Bool (ty, tx) RoI grid -> (n, 2) int32 active-tile coords (static:
+    computed offline from the RoI mask, exactly like SBNet's reduce_mask)."""
+    ys, xs = np.nonzero(grid)
+    return np.stack([ys, xs], axis=1).astype(np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("th", "tw", "interpret"))
+def sbnet_gather(x: jax.Array, idx: jax.Array, th: int, tw: int,
+                 interpret: bool = INTERPRET) -> jax.Array:
+    """(H, W, C) + (n, 2) tile coords -> packed (n, th, tw, C)."""
+    return _gather(x, idx, th, tw, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sbnet_scatter(packed: jax.Array, idx: jax.Array, base: jax.Array,
+                  interpret: bool = INTERPRET) -> jax.Array:
+    """Packed tiles -> full map, untouched regions keep ``base`` values."""
+    return _scatter(packed, idx, base, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("th", "tw", "interpret"))
+def roi_conv(x: jax.Array, w: jax.Array, idx: jax.Array, th: int, tw: int,
+             interpret: bool = INTERPRET) -> jax.Array:
+    """Fused gather+3x3 conv on active tiles -> packed (n, th, tw, Cout)."""
+    return _roi_conv(x, w, idx, th, tw, interpret=interpret)
+
+
+def roi_conv_batched(x: jax.Array, w: jax.Array, idx: jax.Array,
+                     th: int, tw: int) -> jax.Array:
+    """(B, H, W, Cin) -> (B, n, th, tw, Cout), shared active set."""
+    return jax.vmap(lambda xi: roi_conv(xi, w, idx, th, tw))(x)
+
+
+def pack_tokens(x: jax.Array, keep: jax.Array, block: int = 128):
+    """Pack kept rows of (S, ...) to a dense prefix padded to ``block``.
+
+    keep: (S,) bool.  Returns (packed, positions, n_kept) where positions
+    holds original indices (padding rows = PAD_POS).  Padded length is the
+    smallest multiple of ``block`` >= S (static shape, jit-friendly).
+    """
+    S = x.shape[0]
+    Sp = -(-S // block) * block
+    order = jnp.argsort(~keep, stable=True)          # kept rows first
+    n_kept = jnp.sum(keep.astype(jnp.int32))
+    gathered = x[order]
+    positions = jnp.where(jnp.arange(S) < n_kept, order, PAD_POS)
+    pad = [(0, Sp - S)] + [(0, 0)] * (x.ndim - 1)
+    packed = jnp.pad(gathered, pad)
+    positions = jnp.pad(positions, (0, Sp - S), constant_values=PAD_POS)
+    return packed, positions.astype(jnp.int32), n_kept
+
+
+def unpack_tokens(packed: jax.Array, positions: jax.Array, S: int,
+                  fill: float = 0.0) -> jax.Array:
+    """Inverse of pack_tokens: scatter packed rows back to (S, ...)."""
+    out = jnp.full((S,) + packed.shape[1:], fill, packed.dtype)
+    # padding rows carry PAD_POS; route them out-of-bounds and drop, so
+    # they can never collide with a real write
+    pos = jnp.where(positions < S, positions, S)
+    return out.at[pos].set(packed, mode="drop")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_q", "block_k", "interpret"))
+def roi_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  positions: jax.Array, block_q: int = 128,
+                  block_k: int = 128,
+                  interpret: bool = INTERPRET) -> jax.Array:
+    """Packed-prefill attention over (S, H, D) with original-position
+    causality.  S must already be block-padded (pack_tokens does this)."""
+    return _roi_attn(q, k, v, positions, block_q=block_q, block_k=block_k,
+                     interpret=interpret)
+
+
+__all__ = ["mask_to_indices", "sbnet_gather", "sbnet_scatter", "roi_conv",
+           "roi_conv_batched", "pack_tokens", "unpack_tokens",
+           "roi_attention", "PAD_POS", "ref"]

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contracts: tests sweep shapes/dtypes and assert
+the Pallas kernels (run in interpret mode on CPU) match these references.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# sbnet gather / scatter (tile granularity)
+# ---------------------------------------------------------------------------
+
+def sbnet_gather(x: jax.Array, idx: jax.Array, th: int, tw: int) -> jax.Array:
+    """x: (H, W, C); idx: (n, 2) int32 tile coords (ty, tx).
+    Returns packed (n, th, tw, C)."""
+    def take(t):
+        ty, tx = t[0], t[1]
+        return jax.lax.dynamic_slice(
+            x, (ty * th, tx * tw, 0), (th, tw, x.shape[-1]))
+    return jax.vmap(take)(idx)
+
+
+def sbnet_scatter(packed: jax.Array, idx: jax.Array, base: jax.Array,
+                  th: int, tw: int) -> jax.Array:
+    """Write packed tiles back into ``base`` at their tile positions.
+    Tiles must be disjoint (guaranteed by mask construction)."""
+    def body(i, acc):
+        ty, tx = idx[i, 0], idx[i, 1]
+        return jax.lax.dynamic_update_slice(
+            acc, packed[i], (ty * th, tx * tw, 0))
+    return jax.lax.fori_loop(0, idx.shape[0], body, base)
+
+
+# ---------------------------------------------------------------------------
+# roi conv (3x3, stride 1, same padding over the *full* frame, evaluated
+# only on active tiles)
+# ---------------------------------------------------------------------------
+
+def roi_conv(x: jax.Array, w: jax.Array, idx: jax.Array,
+             th: int, tw: int) -> jax.Array:
+    """x: (H, W, Cin); w: (3, 3, Cin, Cout); idx: (n, 2) tile coords.
+    Returns packed conv outputs (n, th, tw, Cout): identical to running a
+    SAME conv over the whole frame then gathering the active tiles."""
+    full = jax.lax.conv_general_dilated(
+        x[None].astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
+    return sbnet_gather(full.astype(x.dtype), idx, th, tw)
+
+
+# ---------------------------------------------------------------------------
+# roi attention (packed prefill with original-position causal mask)
+# ---------------------------------------------------------------------------
+
+def roi_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  positions: jax.Array, scale: float | None = None
+                  ) -> jax.Array:
+    """q,k,v: (S, H, D) packed (RoI-kept) tokens; positions: (S,) int32
+    original positions (padding rows use position INT32_MAX for k-masking).
+    Causal over original positions: query i attends key j iff
+    positions[i] >= positions[j]."""
+    S, H, D = q.shape
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    logits = jnp.einsum("qhd,khd->hqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = positions[:, None] >= positions[None, :]
+    logits = jnp.where(mask[None], logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("hqk,khd->qhd", p / denom, v.astype(jnp.float32))
+    return out.astype(q.dtype)

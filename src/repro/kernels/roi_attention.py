@@ -1,0 +1,94 @@
+"""RoI-packed prefill attention as a Pallas TPU kernel.
+
+The CrossRoI technique lifted to transformer serving (DESIGN.md §2): the
+offline set-cover mask maps to a token keep-list; kept tokens are packed
+into a dense prefix and prefilled in one pass.  Causality must follow the
+tokens' *original* positions, so the kernel carries a positions vector and
+masks with pos_q >= pos_k instead of the block-triangular structure.
+
+Flash-attention structure: grid = (heads, q_blocks); the q block lives in
+VMEM via BlockSpec; K/V stay in ANY/HBM and the kernel walks k-blocks with
+dynamic-slice loads, maintaining the online-softmax running max/denominator.
+Padding rows carry position INT32_MAX (never attended, never attending).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+PAD_POS = jnp.iinfo(jnp.int32).max
+
+
+def _roi_attn_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *,
+                     block_k: int, scale: float):
+    qi = pl.program_id(1)
+    bq, D = q_ref.shape[1], q_ref.shape[2]
+    S = k_ref.shape[1]
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
+    pos_q = pos_ref[pl.ds(qi * bq, bq)]               # (bq,)
+
+    nk = S // block_k
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = pl.load(k_ref, (0, pl.ds(j * block_k, block_k), slice(None))
+                    ).astype(jnp.float32)             # (bk, D)
+        v = pl.load(v_ref, (0, pl.ds(j * block_k, block_k), slice(None))
+                    ).astype(jnp.float32)
+        pos_k = pos_ref[pl.ds(j * block_k, block_k)]
+        s = q @ k.T                                   # (bq, bk)
+        mask = pos_q[:, None] >= pos_k[None, :]
+        s = jnp.where(mask, s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((bq, D), jnp.float32)
+    m0 = jnp.full((bq,), _NEG, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nk, body, (acc0, m0, l0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def roi_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  positions: jax.Array, *, block_q: int = 128,
+                  block_k: int = 128, scale: float | None = None,
+                  interpret: bool = True) -> jax.Array:
+    """q,k,v: (S, H, D) packed tokens; positions: (S,) int32 original
+    positions (padding = PAD_POS).  S must divide by block_q and block_k
+    (ops.roi_attention pads).  Returns (S, H, D)."""
+    S, H, D = q.shape
+    assert S % block_q == 0 and S % block_k == 0
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    kernel = functools.partial(_roi_attn_kernel, block_k=block_k, scale=scale)
+    # layout: (H, S, D) so heads are the leading grid axis
+    qh = jnp.swapaxes(q, 0, 1)
+    kh = jnp.swapaxes(k, 0, 1)
+    vh = jnp.swapaxes(v, 0, 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(H, S // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda h, i, pos: (h, i, 0)),
+            pl.BlockSpec((1, S, D), lambda h, i, pos: (h, 0, 0)),
+            pl.BlockSpec((1, S, D), lambda h, i, pos: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda h, i, pos: (h, i, 0)),
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((H, S, D), q.dtype),
+        interpret=interpret,
+    )(positions, qh, kh, vh)
+    return jnp.swapaxes(out, 0, 1)

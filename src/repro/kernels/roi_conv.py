@@ -1,0 +1,64 @@
+"""RoI-sparse 3x3 convolution as a Pallas TPU kernel.
+
+The RoI-YOLO layer (paper §4.4): convolution evaluated only on active tiles.
+TPU formulation: grid=(n_active,); per step the kernel DMAs one *haloed*
+(th+2, tw+2, Cin) window from the padded feature map in HBM (dynamic-start,
+static-size slice — a block DMA on Mosaic), then computes the 3x3 conv as 9
+shifted (th*tw, Cin) @ (Cin, Cout) matmuls on the MXU.  This replaces
+SBNet's gather -> cuDNN conv -> scatter trio with one fused kernel and
+keeps matmul operands MXU-aligned (pick th*tw and channel dims as multiples
+of 128 for full utilization; functional for any size).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _roi_conv_kernel(idx_ref, x_ref, w_ref, o_ref, *, th: int, tw: int):
+    i = pl.program_id(0)
+    ty = idx_ref[i, 0]
+    tx = idx_ref[i, 1]
+    cin = x_ref.shape[-1]
+    cout = o_ref.shape[-1]
+    # haloed window from the (H+2, W+2, Cin) padded map
+    win = pl.load(x_ref, (pl.ds(ty * th, th + 2), pl.ds(tx * tw, tw + 2),
+                          slice(None)))
+    acc = jnp.zeros((th * tw, cout), jnp.float32)
+    for dy in range(3):
+        for dx in range(3):
+            patch = win[dy:dy + th, dx:dx + tw, :].reshape(th * tw, cin)
+            acc += patch.astype(jnp.float32) @ w_ref[dy, dx].astype(
+                jnp.float32)
+    o_ref[0] = acc.reshape(th, tw, cout).astype(o_ref.dtype)
+
+
+def roi_conv(x: jax.Array, w: jax.Array, idx: jax.Array, th: int, tw: int,
+             *, interpret: bool = True) -> jax.Array:
+    """x: (H, W, Cin); w: (3, 3, Cin, Cout); idx: (n, 2) int32 tile coords.
+    Returns packed SAME-conv outputs on active tiles: (n, th, tw, Cout)."""
+    H, W, Cin = x.shape
+    Cout = w.shape[-1]
+    n = idx.shape[0]
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+    import functools
+    kernel = functools.partial(_roi_conv_kernel, th=th, tw=tw)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            # whole padded map stays in ANY/HBM; the kernel slices windows
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec((3, 3, Cin, Cout), lambda i, idx_ref: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, th, tw, Cout),
+                               lambda i, idx_ref: (i, 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, th, tw, Cout), x.dtype),
+        interpret=interpret,
+    )(idx, xp, w)

@@ -1,0 +1,84 @@
+"""SBNet gather/scatter as Pallas TPU kernels (paper §4.4, TPU-adapted).
+
+The paper's SBNet is a CUDA kernel: per-thread gather of active tile pixels
+into a packed tensor, dense conv, then scatter back.  The TPU-native
+formulation (DESIGN.md §2): the active-tile index list is *scalar-prefetched*
+into SMEM and drives the BlockSpec index_map, so each grid step DMAs one
+whole (th, tw, C) tile HBM->VMEM.  DMA granularity == tile granularity: no
+per-element addressing (a VPU anti-pattern), and the packed output feeds the
+MXU dense.
+
+Both kernels are grid=(n_active,) with data-dependent block indexing — the
+Pallas analogue of SBNet's tile-gather warp loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, x_ref, o_ref):
+    # x_ref block = the (th, tw, C) tile selected by idx_ref[i]; copy to
+    # packed slot i.  The DMA is issued by the BlockSpec machinery.
+    o_ref[0] = x_ref[...]
+
+
+def sbnet_gather(x: jax.Array, idx: jax.Array, th: int, tw: int,
+                 *, interpret: bool = True) -> jax.Array:
+    """x: (H, W, C), idx: (n, 2) int32 tile coords -> packed (n, th, tw, C)."""
+    H, W, C = x.shape
+    n = idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((th, tw, C),
+                         lambda i, idx_ref: (idx_ref[i, 0], idx_ref[i, 1], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, th, tw, C),
+                               lambda i, idx_ref: (i, 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, th, tw, C), x.dtype),
+        interpret=interpret,
+    )(idx, x)
+
+
+def _scatter_kernel(idx_ref, p_ref, o_ref):
+    o_ref[...] = p_ref[...]
+
+
+def sbnet_scatter(packed: jax.Array, idx: jax.Array, base: jax.Array,
+                  *, interpret: bool = True) -> jax.Array:
+    """packed: (n, th, tw, C) -> write tiles into ``base`` (H, W, C) at the
+    tile positions in ``idx``; untouched regions keep base values (the
+    output aliases ``base``)."""
+    n, th, tw, C = packed.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, th, tw, C), lambda i, idx_ref: (i, 0, 0, 0)),
+            pl.BlockSpec(base.shape, lambda i, idx_ref: (0, 0, 0)),  # unused
+        ],
+        out_specs=pl.BlockSpec((th, tw, C),
+                               lambda i, idx_ref: (idx_ref[i, 0],
+                                                   idx_ref[i, 1], 0)),
+    )
+
+    def kernel(idx_ref, p_ref, b_ref, o_ref):
+        o_ref[...] = p_ref[0]
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(base.shape, base.dtype),
+        input_output_aliases={2: 0},   # args: (idx, packed, base) -> out
+        interpret=interpret,
+    )(idx, packed, base)

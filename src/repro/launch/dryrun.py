@@ -1,0 +1,187 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers and
+compiles on the production meshes, and extract roofline inputs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-67b \
+      --shape train_4k [--multi-pod] [--sharding fsdp] [--calibrate]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+      --out results.json
+
+Per cell it prints compiled.memory_analysis() (fits-per-device proof) and
+cost_analysis() (FLOPs/bytes for §Roofline), plus the collective schedule
+parsed from the partitioned HLO.  --calibrate adds the two-point
+layer-count compiles that undo XLA's scan-body-once cost counting
+(launch/roofline.py).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, TrainConfig
+from repro.configs.registry import ARCH_IDS, all_cells, cell_is_applicable, \
+    get_config
+from repro.launch import roofline as R
+from repro.launch.mesh import CHIPS_PER_POD, HBM_PER_CHIP, \
+    make_production_mesh
+from repro.launch.steps import build_cell
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             sharding_mode: str = "tp", calibrate: bool = False,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 2 * CHIPS_PER_POD if multi_pod else CHIPS_PER_POD
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if sharding_mode == "auto":
+        # paper-era TP baseline when it fits; FSDP upgrade when TP-only
+        # parameter replication cannot fit 16 GiB/chip (e.g. 235B MoE)
+        from repro.launch.memory import estimate_cell
+        from repro.launch.steps import auto_microbatch
+        k0 = auto_microbatch(cfg, cell, mesh, multi_pod) \
+            if cell.kind == "train" else 1
+        est0 = estimate_cell(cfg, cell, mesh, multi_pod, "tp",
+                             microbatch=k0)
+        sharding_mode = "tp" if est0["fits"] else \
+            ("fsdp_pod" if multi_pod else "fsdp")
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "sharding": sharding_mode, "ok": False}
+    t0 = time.time()
+
+    fn, args, _ = build_cell(cfg, cell, mesh, multi_pod, sharding_mode)
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    coll = R.collective_bytes(compiled.as_text())
+    per_dev = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+               + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    # analytic TPU-side estimate (XLA:CPU float-normalization inflates the
+    # measured numbers with f32 upcast buffers that do not exist on TPU)
+    from repro.launch.memory import estimate_cell
+    from repro.launch.steps import auto_microbatch
+    k = auto_microbatch(cfg, cell, mesh, multi_pod) \
+        if cell.kind == "train" else 1
+    est = estimate_cell(cfg, cell, mesh, multi_pod, sharding_mode,
+                        microbatch=k)
+    rec.update(
+        ok=True, lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        flops_per_dev=float(ca.get("flops", 0.0)),
+        bytes_per_dev=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes=coll, arg_bytes=mem.argument_size_in_bytes,
+        temp_bytes=mem.temp_size_in_bytes, out_bytes=mem.output_size_in_bytes,
+        alias_bytes=mem.alias_size_in_bytes,
+        mem_per_device=per_dev, microbatch=k,
+        mem_estimate=round(est["total"]), fits=bool(est["fits"]),
+        mem_breakdown={kk: round(v) for kk, v in est.items()
+                       if kk not in ("total", "fits")},
+    )
+
+    if calibrate:
+        l1, l2 = R.calib_depths(cfg)
+        cal = {}
+        for L in (l1, l2):
+            ccfg = R.with_depth(cfg, L)
+            cfn, cargs, _ = build_cell(ccfg, cell, mesh, multi_pod,
+                                       sharding_mode)
+            cc = cfn.lower(*cargs).compile()
+            cca = cc.cost_analysis() or {}
+            ccoll = R.collective_bytes(cc.as_text())
+            cal[L] = {"flops": float(cca.get("flops", 0.0)),
+                      "bytes": float(cca.get("bytes accessed", 0.0)),
+                      "coll": float(ccoll["total"])}
+        lf = R.full_depth(cfg)
+        rec["calibrated"] = {
+            "depths": [l1, l2], "full_depth": lf,
+            "flops": R.extrapolate(cal[l1]["flops"], cal[l2]["flops"],
+                                   l1, l2, lf),
+            "bytes": R.extrapolate(cal[l1]["bytes"], cal[l2]["bytes"],
+                                   l1, l2, lf),
+            "coll": R.extrapolate(cal[l1]["coll"], cal[l2]["coll"],
+                                  l1, l2, lf),
+        }
+        rec["model_flops"] = R.model_flops_for(cfg, cell)
+        rec["chips"] = chips
+
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name} ({sharding_mode})] "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s  "
+              f"mem/dev est {est['total']/2**30:.2f} GiB "
+              f"({'FITS' if rec['fits'] else 'OVER'}; "
+              f"xla-cpu {per_dev/2**30:.1f})  "
+              f"coll {coll['total']/2**20:.1f} MiB  mb={k}", flush=True)
+        if calibrate:
+            c = rec["calibrated"]
+            print(f"    calibrated/dev: {c['flops']:.3e} FLOP "
+                  f"{c['bytes']:.3e} B hbm  {c['coll']:.3e} B ici")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--sharding", default="auto",
+                    choices=["auto", "tp", "fsdp", "fsdp_pod"])
+    ap.add_argument("--calibrate", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch, cell, ok in all_cells(include_skips=True):
+            if ok:
+                cells.append((arch, cell.name))
+            else:
+                print(f"[skip] {arch} x {cell.name} "
+                      f"(recorded skip: see DESIGN.md §Arch-applicability)")
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        if not cell_is_applicable(args.arch, args.shape):
+            print(f"[skip] {args.arch} x {args.shape} is a recorded skip")
+            return
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                # roofline calibration only on the single-pod mesh (the
+                # multi-pod pass is the sharding-coherence proof)
+                results.append(run_cell(arch, shape, multi_pod=mp,
+                                        sharding_mode=args.sharding,
+                                        calibrate=args.calibrate and not mp))
+            except Exception as e:
+                traceback.print_exc()
+                results.append({"arch": arch, "shape": shape,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "ok": False, "error": str(e)[:500]})
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n== {n_ok}/{len(results)} cells compiled ==")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Analytic per-device HBM estimator for the dry-run cells.
+
+Why not trust compiled.memory_analysis() alone: the container lowers for
+XLA:CPU, whose float-normalization pass upcasts every bf16 dot to f32 and
+materializes f32 copies of weight stacks and KV caches.  Those buffers do
+not exist on TPU (native bf16 MXU), so the CPU numbers overstate HBM by up
+to 2x.  This estimator prices exactly what the TPU program holds, from the
+same PartitionSpecs the dry-run lowers with; EXPERIMENTS.md reports both.
+
+Accounting (per device):
+  params        — by param tree, divided by each leaf's shard count
+  grads + opt   — train only: fp32 accumulator + m/v in the ZeRO sharding
+  activations   — train: remat boundaries L x (B/k) x S x d x 2B / dp
+  kv caches     — serve: cache tree, divided by shard counts
+  workspace     — one transformer block's transient working set
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.distributed.shardings import param_pspecs
+from repro.launch.mesh import HBM_PER_CHIP
+from repro.models import model as M
+from repro.models.params import param_specs
+
+
+def _shards(mesh: Mesh, spec) -> int:
+    n = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for a in axes:
+            n *= mesh.shape.get(a, 1)
+    return n
+
+
+def _tree_bytes(specs: Dict, pspecs: Dict, mesh: Mesh,
+                dtype_bytes=None) -> float:
+    total = 0.0
+    for k, v in specs.items():
+        nb = dtype_bytes if dtype_bytes else v.dtype.itemsize
+        total += float(np.prod(v.shape)) * nb / _shards(mesh, pspecs[k])
+    return total
+
+
+def estimate_cell(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                  multi_pod: bool = False, sharding_mode: str = "tp",
+                  microbatch: int = 1) -> Dict[str, float]:
+    specs = param_specs(cfg)
+    pspecs = param_pspecs(cfg, specs, sharding_mode, multi_pod, mesh=mesh)
+    opt_mode = "fsdp_pod" if multi_pod else "fsdp"
+    ospecs = param_pspecs(cfg, specs, opt_mode, multi_pod, mesh=mesh)
+    dp = 1
+    for a in (("pod", "data") if multi_pod else ("data",)):
+        dp *= mesh.shape.get(a, 1)
+
+    out = {"params": _tree_bytes(specs, pspecs, mesh)}
+    d = cfg.d_model
+    L = cfg.num_layers or (cfg.encoder_layers + cfg.decoder_layers)
+
+    if cell.kind == "train":
+        out["grads_fp32"] = _tree_bytes(specs, ospecs, mesh, 4)
+        out["opt_m_v"] = 2 * out["grads_fp32"]
+        mb_tokens = cell.global_batch * cell.seq_len / max(microbatch, 1)
+        out["act_boundaries"] = L * mb_tokens * d * 2 / dp
+        # transient: one block's internals for the rematerialized backward
+        width = max(cfg.d_ff, cfg.moe_d_ff * cfg.experts_per_token
+                    + cfg.shared_d_ff, 1)
+        out["workspace"] = mb_tokens * (2 * d + 2 * width) * 2 / dp
+    else:
+        from jax.sharding import PartitionSpec
+        from jax.tree_util import tree_leaves
+        from repro.distributed.shardings import cache_pspecs
+        caches = M.init_cache(cfg, cell.global_batch, cell.seq_len,
+                              abstract=True)
+        kv_seq = cell.kind == "decode" and cell.seq_len >= 200_000
+        cspecs = cache_pspecs(caches, mesh, multi_pod, kv_seq_shard=kv_seq)
+        total = 0.0
+        for leaf, sp in zip(tree_leaves(caches), tree_leaves(
+                cspecs, is_leaf=lambda x: isinstance(x, PartitionSpec))):
+            total += float(np.prod(leaf.shape)) * leaf.dtype.itemsize \
+                / _shards(mesh, sp)
+        out["kv_cache"] = total
+        toks = cell.global_batch * (cell.seq_len if cell.kind == "prefill"
+                                    else 1)
+        out["workspace"] = max(toks * 4 * d * 2 / dp, 64 * 2 ** 20)
+
+    out["total"] = sum(out.values())
+    out["fits"] = out["total"] <= HBM_PER_CHIP
+    return out

@@ -1,0 +1,35 @@
+"""Production meshes.
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the pod axis
+is the slow (DCN/inter-pod ICI) dimension; batch shards over ("pod","data").
+
+Functions, not module constants: importing this module must never touch
+jax device state (smoke tests and benches run on 1 real CPU device; only
+dryrun.py forces the 512-device platform).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, pod: int = 1):
+    """Small mesh for in-test lowering on host platforms with few fake
+    devices."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link
+CHIPS_PER_POD = 256
+HBM_PER_CHIP = 16 * 2 ** 30     # 16 GiB

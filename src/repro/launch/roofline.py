@@ -1,0 +1,185 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch x shape x mesh), all computed per device — verified
+convention: compiled.cost_analysis() reports PER-DEVICE flops/bytes for an
+SPMD-partitioned module, and compiled.as_text() is the per-device program:
+
+    compute    = flops_per_device / PEAK_FLOPS_BF16
+    memory     = hbm_bytes_per_device / HBM_BW
+    collective = ici_bytes_per_device / ICI_BW
+
+ici bytes = sum of collective-op result sizes in the partitioned HLO
+(all-reduce counted twice: ring reduce-scatter + all-gather phases).
+
+Scan calibration: XLA's cost model counts a lax.scan body ONCE, not
+x trip-count.  Every trunk here scans over layers, so raw numbers omit
+(L-1)/L of the work.  We therefore compile each cell at two small layer
+counts, fit cost(L) = slope*L + intercept, and extrapolate to the full
+depth.  Memory analysis (fits-per-device) always comes from the full-depth
+compile.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(.+?)\s"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes by collective kind, from partitioned HLO text."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        nbytes = _shape_bytes(m.group(1))   # result shape(s), incl. tuples
+        if kind == "all-reduce":
+            nbytes *= 2           # ring: reduce-scatter + all-gather phases
+        out[kind] = out.get(kind, 0.0) + nbytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    cell: str
+    mesh: str
+    flops: float                 # per device
+    hbm_bytes: float
+    coll_bytes: float
+    coll_by_kind: Dict[str, float]
+    model_flops: float           # analytic 6*N*D (global)
+    chips: int
+    calibrated: bool = True
+    mem_per_device: float = 0.0  # arg+temp+output bytes (full compile)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO flops (remat/redundancy waste catch)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-term bound that is useful model compute:
+        (model_flops/chips/peak) / bound_time — the score we hillclimb."""
+        ideal = self.model_flops / self.chips / PEAK_FLOPS_BF16
+        return ideal / self.bound_time if self.bound_time else 0.0
+
+    def row(self) -> str:
+        return (f"{self.arch:22s} {self.cell:12s} {self.mesh:9s} "
+                f"c={self.t_compute:9.3e} m={self.t_memory:9.3e} "
+                f"x={self.t_collective:9.3e} dom={self.dominant:10s} "
+                f"useful={self.useful_ratio:6.3f} "
+                f"roof={self.roofline_fraction:6.3f}")
+
+
+def model_flops_for(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """Analytic useful FLOPs per step: 6*N*D train, 2*N*D forward-only
+    (D = tokens processed; decode: one token per sequence)."""
+    n = cfg.active_param_count()
+    if cell.kind == "train":
+        toks = cell.global_batch * cell.seq_len
+        return 6.0 * n * toks
+    if cell.kind == "prefill":
+        toks = cell.global_batch * cell.seq_len
+        return 2.0 * n * toks
+    toks = cell.global_batch * 1
+    return 2.0 * n * toks
+
+
+# ---------------------------------------------------------------------------
+# calibration depths per arch family (structure-respecting small configs)
+# ---------------------------------------------------------------------------
+
+def calib_depths(cfg: ModelConfig) -> Tuple[int, int]:
+    if cfg.family in ("dense", "vlm") and cfg.global_every > 1:
+        g = cfg.global_every
+        return g, 2 * g
+    if cfg.family == "moe" and cfg.first_dense_layers:
+        f = cfg.first_dense_layers
+        return f + 1, f + 3
+    if cfg.family == "hybrid":
+        a = cfg.attn_every
+        return a, 2 * a
+    if cfg.family == "encdec":
+        return 2, 4            # encoder+decoder layers together
+    return 1, 2
+
+
+def with_depth(cfg: ModelConfig, L: int) -> ModelConfig:
+    if cfg.family == "encdec":
+        return cfg.replace(num_layers=2 * L, encoder_layers=L,
+                           decoder_layers=L)
+    if cfg.family == "hybrid":
+        blocks = max(L // cfg.attn_every, 1)
+        return cfg.replace(num_layers=L,
+                           num_shared_attn_blocks=min(
+                               cfg.num_shared_attn_blocks, blocks))
+    return cfg.replace(num_layers=L)
+
+
+def full_depth(cfg: ModelConfig) -> int:
+    if cfg.family == "encdec":
+        return cfg.encoder_layers
+    return cfg.num_layers
+
+
+def extrapolate(c1: float, c2: float, l1: int, l2: int, lf: int) -> float:
+    slope = (c2 - c1) / max(l2 - l1, 1)
+    intercept = c1 - slope * l1
+    return max(slope * lf + intercept, 0.0)

@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline calibration runner.
+
+Per (arch x shape) cell, compiles FOUR fully-unrolled reduced variants —
+(L1,S1) (L2,S1) (L1,S2) (L2,S2) with a reduced batch — where XLA's
+cost_analysis is exact (models/unroll.py), then fits
+
+  train/prefill:  per_layer(S) = c1*S + c2*S^2      (token-linear + attn)
+  decode:         per_layer(S) = c0 + c1*S          (const + cache reads)
+
+and extrapolates to the full depth/sequence/batch.  The same fit runs for
+HLO flops, HLO bytes, and parsed collective bytes (per-layer collectives
+inside the scan are otherwise counted once).
+
+  PYTHONPATH=src python -m repro.launch.roofline_run --out results/roofline.json
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, ShapeCell, TrainConfig
+from repro.configs.registry import all_cells, get_config
+from repro.launch import roofline as R
+from repro.launch.mesh import CHIPS_PER_POD, make_production_mesh
+from repro.launch.steps import build_cell
+from repro.models import unroll as UR
+
+
+def calib_seqs(cell: ShapeCell, cfg=None):
+    if cfg is not None and cfg.family == "ssm" and cell.kind != "decode":
+        # attention-free: cost is linear in S, and the chunked-wkv bodies
+        # unroll per chunk — tiny S keeps the compile tractable
+        return 256, 512
+    if cell.kind == "train":
+        return 1024, 2048
+    if cell.kind == "prefill":
+        return 2048, 4096
+    if cell.seq_len >= 200_000:
+        return 8192, 16384
+    return 4096, 8192
+
+
+def calib_batch(cell: ShapeCell, dp: int = 16) -> int:
+    if cell.global_batch <= dp:
+        return cell.global_batch
+    return dp
+
+
+def _cost(cfg, cell, mesh, sharding_mode, tcfg_kwargs=None):
+    tcfg = TrainConfig(microbatch=1, sharding_mode=sharding_mode,
+                       **(tcfg_kwargs or {})) \
+        if cell.kind == "train" else None
+    with UR.unrolled():
+        fn, args, _ = build_cell(cfg, cell, mesh, False, sharding_mode,
+                                 tcfg=tcfg)
+        compiled = fn.lower(*args).compile()
+    ca = compiled.cost_analysis() or {}
+    coll = R.collective_bytes(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": float(coll["total"])}
+
+
+def _fit_and_extrapolate(c, l1, l2, s1, s2, lf, sf, bscale, kind,
+                         affine: bool = False):
+    """c[(L,S)] -> full-cell estimate for one metric.
+
+    affine=True (attention-free archs): per_layer(S) = w + a*S — exact for
+    linear-cost layers whose weight reads do not scale with S (the
+    through-origin quadratic would extrapolate the constant term to
+    negative curvature)."""
+    out = {}
+    for key in ("flops", "bytes", "coll"):
+        pl_s1 = (c[(l2, s1)][key] - c[(l1, s1)][key]) / (l2 - l1)
+        pl_s2 = (c[(l2, s2)][key] - c[(l1, s2)][key]) / (l2 - l1)
+        head_s1 = max(c[(l1, s1)][key] - l1 * pl_s1, 0.0)
+        if kind == "decode" or affine:
+            # per_layer(S) = c0 + c1*S
+            c1 = (pl_s2 - pl_s1) / (s2 - s1)
+            c0 = pl_s1 - c1 * s1
+            per_layer_full = c0 + c1 * sf
+            head_full = head_s1          # decode head is S-independent
+        else:
+            # per_layer(S) = c1*S + c2*S^2
+            # solve from two points
+            a1, a2 = pl_s1 / s1, pl_s2 / s2
+            c2_ = (a2 - a1) / (s2 - s1)
+            c1 = a1 - c2_ * s1
+            per_layer_full = c1 * sf + c2_ * sf * sf
+            head_full = head_s1 * (sf / s1)   # embed/CE are token-linear
+        out[key] = max(lf * per_layer_full + head_full, 0.0) * bscale
+    return out
+
+
+def run_cell(arch: str, shape_name: str, sharding_mode: str = "auto",
+             verbose: bool = True, cfg_transform=None, tcfg_kwargs=None,
+             cell_transform=None, label: str = "") -> dict:
+    cfg = get_config(arch)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+    cell = SHAPES[shape_name]
+    if cell_transform is not None:
+        cell = cell_transform(cell)
+    mesh = make_production_mesh()
+    if sharding_mode == "auto":
+        from repro.launch.memory import estimate_cell
+        from repro.launch.steps import auto_microbatch
+        k0 = auto_microbatch(cfg, cell, mesh) if cell.kind == "train" else 1
+        est0 = estimate_cell(cfg, cell, mesh, False, "tp", microbatch=k0)
+        sharding_mode = "tp" if est0["fits"] else "fsdp"
+
+    l1, l2 = R.calib_depths(cfg)
+    s1, s2 = calib_seqs(cell, cfg)
+    bcal = calib_batch(cell)
+    t0 = time.time()
+    c = {}
+    for L in (l1, l2):
+        for S in (s1, s2):
+            ccfg = R.with_depth(cfg, L)
+            ccell = ShapeCell(cell.name, S, bcal, cell.kind)
+            c[(L, S)] = _cost(ccfg, ccell, mesh, sharding_mode,
+                              tcfg_kwargs)
+    lf = R.full_depth(cfg)
+    bscale = cell.global_batch / bcal
+    est = _fit_and_extrapolate(c, l1, l2, s1, s2, lf, cell.seq_len, bscale,
+                               cell.kind, affine=cfg.family == "ssm")
+    rec = {"arch": arch, "shape": shape_name, "sharding": sharding_mode,
+           "label": label, "ok": True, "chips": CHIPS_PER_POD,
+           "model_flops": R.model_flops_for(cfg, cell),
+           "calib_points": {f"L{L}_S{S}": v for (L, S), v in c.items()},
+           "flops_per_dev": est["flops"], "hbm_bytes_per_dev": est["bytes"],
+           "coll_bytes_per_dev": est["coll"],
+           "wall_s": round(time.time() - t0, 1)}
+    if verbose:
+        t = R.RooflineTerms(arch, shape_name, "16x16", est["flops"],
+                            est["bytes"], est["coll"], {},
+                            rec["model_flops"], CHIPS_PER_POD)
+        print(t.row(), f"  ({rec['wall_s']}s)", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    args = ap.parse_args()
+    results = []
+    cells = [(a, c.name) for a, c, ok in all_cells() if ok]
+    if args.arch:
+        wanted = set(args.arch.split(","))
+        cells = [(a, s) for a, s in cells if a in wanted
+                 and (not args.shape or s == args.shape)]
+    for arch, shape in cells:
+        try:
+            results.append(run_cell(arch, shape))
+        except Exception as e:
+            traceback.print_exc()
+            results.append({"arch": arch, "shape": shape, "ok": False,
+                            "error": str(e)[:500]})
+        with open(args.out, "w") as f:     # incremental: survive kills
+            json.dump(results, f, indent=1)
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} cells calibrated -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Abstract step builders shared by dryrun.py and the roofline tool.
+
+For every (arch, shape) cell this module produces the jitted-but-unlowered
+step function plus ShapeDtypeStruct arguments and shardings:
+
+  train cells   -> train_step(state, batch)
+  prefill cells -> prefill_step(params, batch, caches)
+  decode cells  -> serve_step(params, tokens, caches, pos)  (one new token
+                   against a seq_len-deep KV cache, per the assignment)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell, TrainConfig
+from repro.distributed.shardings import (batch_pspecs_for, cache_pspecs,
+                                         make_dist, named, param_pspecs)
+from repro.models import model as M
+from repro.models.params import param_specs
+from repro.optim.adamw import AdamWState, adamw_abstract
+from repro.train.loop import TrainState, make_train_step
+
+
+def _abstract_state(cfg: ModelConfig) -> TrainState:
+    p = param_specs(cfg)
+    return TrainState(p, adamw_abstract(p))
+
+
+def auto_microbatch(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                    multi_pod: bool = False,
+                    act_budget: float = 2 * 2 ** 30) -> int:
+    """Gradient-accumulation factor so the per-device remat boundary
+    activations (L x microbatch-tokens x d_model x 2B / dp) fit the budget.
+    Returns a power-of-two divisor of the global batch."""
+    dp = 1
+    for a in (("pod", "data") if multi_pod else ("data",)):
+        dp *= mesh.shape.get(a, 1)
+    L = cfg.num_layers or (cfg.encoder_layers + cfg.decoder_layers)
+    d = cfg.d_model
+    per_k = L * cell.global_batch * cell.seq_len * d * 2 / dp
+    k = 1
+    while per_k / k > act_budget and k < cell.global_batch:
+        k *= 2
+    return k
+
+
+def build_train(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                tcfg: Optional[TrainConfig] = None,
+                multi_pod: bool = False):
+    """Returns (jitted_fn, args, static_meta)."""
+    tcfg = tcfg or TrainConfig()
+    if tcfg.microbatch == 0:
+        import dataclasses
+        k = auto_microbatch(cfg, cell, mesh, multi_pod)
+        tcfg = dataclasses.replace(tcfg, microbatch=k)
+    step = make_train_step(cfg, tcfg, mesh, multi_pod)
+    state = _abstract_state(cfg)
+    batch = M.input_specs(cfg, cell)
+    batch_sh = named(mesh, batch_pspecs_for(batch, mesh, multi_pod))
+    # make_train_step already set state shardings; batch shardings ride in
+    # via the arg shardings at lower time
+    return step, (state, batch), {"batch_shardings": batch_sh}
+
+
+def build_prefill(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                  multi_pod: bool = False, sharding_mode: str = "tp"):
+    dist = make_dist(mesh)
+    pspecs = param_pspecs(cfg, param_specs(cfg), sharding_mode, multi_pod,
+                          mesh=mesh)
+    params = param_specs(cfg)
+    batch = M.input_specs(cfg, cell)
+    caches = M.init_cache(cfg, cell.global_batch, cell.seq_len,
+                          abstract=True)
+
+    def prefill_step(p, b, c):
+        return M.prefill(p, cfg, b, c, dist=dist)
+
+    shardings = (named(mesh, pspecs),
+                 named(mesh, batch_pspecs_for(batch, mesh, multi_pod)),
+                 named(mesh, cache_pspecs(caches, mesh, multi_pod)))
+    fn = jax.jit(prefill_step, in_shardings=shardings, donate_argnums=(2,))
+    return fn, (params, batch, caches), {}
+
+
+def build_decode(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                 multi_pod: bool = False, sharding_mode: str = "tp",
+                 kv_seq_shard: bool = False):
+    dist = make_dist(mesh)
+    pspecs = param_pspecs(cfg, param_specs(cfg), sharding_mode, multi_pod,
+                          mesh=mesh)
+    params = param_specs(cfg)
+    B, S = cell.global_batch, cell.seq_len
+    caches = M.init_cache(cfg, B, S, abstract=True)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+
+    def serve_step(p, t, c, pos):
+        return M.decode_step(p, cfg, t, c, pos, dist=dist)
+
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    dp = 1
+    for a in dp_axes:
+        dp *= mesh.shape.get(a, 1)
+    tok_spec = P(dp_axes, None) if B % dp == 0 else P(None, None)
+    shardings = (named(mesh, pspecs),
+                 NamedSharding(mesh, tok_spec),
+                 named(mesh, cache_pspecs(caches, mesh, multi_pod,
+                                          kv_seq_shard)),
+                 None)
+    fn = jax.jit(serve_step, in_shardings=shardings, donate_argnums=(2,))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return fn, (params, tokens, caches, pos), {}
+
+
+def build_cell(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+               multi_pod: bool = False, sharding_mode: str = "tp",
+               tcfg: Optional[TrainConfig] = None):
+    if cell.kind == "train":
+        tcfg = tcfg or TrainConfig(sharding_mode=sharding_mode)
+        return build_train(cfg, cell, mesh, tcfg, multi_pod)
+    if cell.kind == "prefill":
+        return build_prefill(cfg, cell, mesh, multi_pod, sharding_mode)
+    if cell.kind == "decode":
+        kv_seq = cell.seq_len >= 200_000   # long-context: SP for the cache
+        return build_decode(cfg, cell, mesh, multi_pod, sharding_mode,
+                            kv_seq_shard=kv_seq)
+    raise ValueError(cell.kind)

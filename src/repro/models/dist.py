@@ -1,0 +1,49 @@
+"""Distribution context threaded through model code.
+
+Model functions are mesh-agnostic: they receive a ``DistContext`` that names
+the batch axes (data parallel, possibly ("pod", "data")) and the model/tensor
+axis. ``dist=None`` (or a context with no mesh) means single-device execution
+— used by smoke tests and the CPU examples.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+
+
+@dataclass(frozen=True)
+class DistContext:
+    mesh: Optional[jax.sharding.Mesh] = None
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    # GSPMD-auto expert parallelism instead of the explicit shard_map
+    # dispatch.  The shard_map path is the production default; auto is the
+    # fallback for backward-of-shard_map patterns that trip XLA:CPU's
+    # partitioner (dry-run only — see DESIGN.md §6).
+    auto_moe: bool = False
+
+    @property
+    def manual_moe(self) -> bool:
+        """Whether MoE should run under shard_map over the model axis."""
+        return (not self.auto_moe and self.mesh is not None
+                and self.model_axis in self.mesh.shape)
+
+    @property
+    def tp(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape.get(self.model_axis, 1)
+
+    @property
+    def dp(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for ax in self.batch_axes:
+            n *= self.mesh.shape[ax]
+        return n
+
+
+LOCAL = DistContext(mesh=None)

@@ -1,0 +1,696 @@
+"""Forward passes for every architecture family.
+
+Modes:
+  train   — full-sequence causal loss (chunked CE so (B,S,V) never lives).
+  prefill — fill KV caches / SSM states, return last-position logits.
+  decode  — one token per sequence against the caches.
+
+All layer stacks run under lax.scan (small HLO, fast 512-device compiles).
+Sliding-window layers keep *ring-buffer* KV caches of size ``window`` so
+decode memory for SWA archs is O(window), not O(seq) — this is what makes
+h2o-danube3 / gemma3 long_500k cells fit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import unroll as UR
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.dist import DistContext
+from repro.models.moe import moe_layer
+from repro.models.rwkv import RWKVState, rwkv6_block
+from repro.models.ssm import MambaState, mamba2_block, conv_dim
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _sub(params: Dict, prefix: str) -> Dict:
+    """Strip a key prefix: {'blocks_wq': a} -> {'wq': a}."""
+    n = len(prefix)
+    return {k[n:]: v for k, v in params.items() if k.startswith(prefix)}
+
+
+def shard_act(x, dist: Optional[DistContext], *spec_tail):
+    if dist is None or dist.mesh is None:
+        return x
+    spec = P(dist.batch_axes, *spec_tail)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(dist.mesh, spec))
+
+
+def _maybe_remat(fn, remat: bool):
+    return jax.checkpoint(fn) if remat else fn
+
+
+def _embed(params, cfg: ModelConfig, tokens):
+    return params["embed"][tokens]
+
+
+def _unembed(params, cfg: ModelConfig, x):
+    w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return x @ w.T
+
+
+def chunked_ce(params, cfg: ModelConfig, x, labels, chunk: int = 512):
+    """Cross-entropy without materializing (B, S, V). x: (B,S,D)."""
+    B, S, D = x.shape
+    chunk = max(1, min(chunk, S))
+    while S % chunk:
+        chunk //= 2
+    n = S // chunk
+    xr = x.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    lr = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(tot, xs):
+        xc, lc = xs
+        logits = _unembed(params, cfg, xc)
+        return tot + L.cross_entropy(logits, lc) * (1.0 / n), None
+
+    tot, _ = UR.scan(body, jnp.zeros((), jnp.float32), (xr, lr))
+    return tot
+
+
+# ---------------------------------------------------------------------------
+# attention sub-block (dense / moe / shared attention)
+# ---------------------------------------------------------------------------
+
+def attn_sublayer(
+    x, lp: Dict, cfg: ModelConfig, *,
+    window: int = 0,
+    rope_sincos=None,
+    mode: str = "train",
+    cache: Optional[Tuple] = None,  # (k_cache, v_cache) (B, Smax, KH, Dh)
+    pos=0,
+    causal: bool = True,
+    kv_src=None,  # cross-attention source (B, S_kv, D)
+    positions=None,
+    causal_skip: bool = False,
+    prefix: str = "",
+    dist=None,
+):
+    """Returns (attn_out (B,S,qd), new_cache or None)."""
+    B, S, D = x.shape
+    H, KH, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KH
+
+    def proj(name, src, heads):
+        w = lp[prefix + "w" + name]
+        y = src @ w
+        b = lp.get(prefix + "b" + name)
+        if b is not None:
+            y = y + b
+        return y.reshape(src.shape[0], src.shape[1], heads, Dh)
+
+    q = proj("q", x, H)
+    src = kv_src if kv_src is not None else x
+    k = proj("k", src, KH)
+    v = proj("v", src, KH)
+
+    if prefix + "qnorm" in lp:
+        q = L.rmsnorm(q, lp[prefix + "qnorm"], cfg.norm_eps)
+        k = L.rmsnorm(k, lp[prefix + "knorm"], cfg.norm_eps)
+
+    if rope_sincos is not None:
+        sin_q, cos_q, sin_k, cos_k = rope_sincos
+        q = L.apply_rope(q, sin_q, cos_q)
+        k = L.apply_rope(k, sin_k, cos_k)
+
+    new_cache = None
+    # Decode caches with KH % tp != 0 are sequence-sharded over the model
+    # axis (shardings.cache_pspecs); pin the attention to flash-decoding
+    # layout so GSPMD reduces softmax stats instead of replicating the KV.
+    constrain = None
+    if (mode == "decode" and dist is not None and dist.mesh is not None
+            and dist.tp > 1 and KH % dist.tp != 0):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def constrain(s):  # s: (B, H, Q, Smax)
+            bax = dist.batch_axes if s.shape[0] % dist.dp == 0 else None
+            return jax.lax.with_sharding_constraint(
+                s, NamedSharding(dist.mesh, P(bax, None, None, "model")))
+
+    if mode == "decode":
+        k_cache, v_cache = cache
+        Smax = k_cache.shape[1]
+        if window > 0 and Smax == window:  # ring buffer
+            slot = jnp.mod(pos, window)
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                k_cache, k.astype(k_cache.dtype), slot, 1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                v_cache, v.astype(v_cache.dtype), slot, 1)
+            # slot s holds position pos - ((pos - s) mod W); valid once >= 0.
+            # (decode writes in position order, so per-slot positions are
+            # analytic — no (L,B,S) position cache needed.)
+            slots = jnp.arange(window)
+            slot_pos = pos - jnp.mod(pos - slots, window)
+            valid = slot_pos >= 0
+            kf = L.repeat_kv(k_cache, G)
+            vf = L.repeat_kv(v_cache, G)
+            qf = q
+            s = jnp.einsum("bqhd,bkhd->bhqk", qf.astype(jnp.float32) / (Dh ** 0.5),
+                           kf.astype(jnp.float32))
+            if constrain is not None:
+                s = constrain(s)
+            if cfg.logit_softcap > 0:
+                s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
+            s = jnp.where(valid[None, None, None, :], s, L.NEG_INF)
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhqk,bkhd->bhqd", p, vf.astype(jnp.float32))
+            o = o.transpose(0, 2, 1, 3).astype(x.dtype)
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                k_cache, k.astype(k_cache.dtype), pos, 1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                v_cache, v.astype(v_cache.dtype), pos, 1)
+            if cfg.decode_grouped_attn:
+                o = L.decode_attention_grouped(
+                    q, k_cache, v_cache, pos + 1, window=window,
+                    softcap=cfg.logit_softcap, constrain=constrain)
+            else:
+                o = L.decode_attention(
+                    q, L.repeat_kv(k_cache, G), L.repeat_kv(v_cache, G),
+                    pos + 1, window=window, softcap=cfg.logit_softcap,
+                    constrain=constrain)
+        new_cache = (k_cache, v_cache)
+    else:
+        if mode == "prefill" and cache is not None:
+            k_cache, v_cache = cache
+            Smax = k_cache.shape[1]
+            if window > 0 and Smax == window:
+                take = min(window, S)
+                idx = (jnp.arange(Smax) + max(S - take, 0)) % window
+                k_cache = k_cache.at[:, idx[:take]].set(
+                    k[:, -take:].astype(k_cache.dtype))
+                v_cache = v_cache.at[:, idx[:take]].set(
+                    v[:, -take:].astype(v_cache.dtype))
+            else:
+                k_cache = jax.lax.dynamic_update_slice_in_dim(
+                    k_cache, k.astype(k_cache.dtype), 0, 1)
+                v_cache = jax.lax.dynamic_update_slice_in_dim(
+                    v_cache, v.astype(v_cache.dtype), 0, 1)
+            new_cache = (k_cache, v_cache)
+        o = L.blockwise_attention(
+            q, L.repeat_kv(k, G), L.repeat_kv(v, G),
+            causal=causal, window=window, softcap=cfg.logit_softcap,
+            q_positions=positions, kv_positions=positions,
+            causal_skip=causal_skip)
+    o = o.reshape(B, S, H * Dh)
+    out = o @ lp[prefix + "wo"]
+    bo = lp.get(prefix + "bo")
+    if bo is not None:
+        out = out + bo
+    return out, new_cache
+
+
+def dense_block(x, lp, cfg: ModelConfig, *, window, rope_sincos, mode="train",
+                cache=None, pos=0, positions=None, causal_skip=False,
+                dist=None):
+    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    a, new_cache = attn_sublayer(
+        h, lp, cfg, window=window, rope_sincos=rope_sincos, mode=mode,
+        cache=cache, pos=pos, positions=positions, causal_skip=causal_skip,
+        dist=dist)
+    x = x + a
+    h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    x = x + L.glu_mlp(h, lp["w1"], lp["w3"], lp["w2"], act=cfg.act)
+    return x, new_cache
+
+
+def moe_block(x, lp, cfg: ModelConfig, dist, *, rope_sincos, mode="train",
+              cache=None, pos=0, positions=None, causal_skip=False):
+    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    a, new_cache = attn_sublayer(
+        h, lp, cfg, window=0, rope_sincos=rope_sincos, mode=mode,
+        cache=cache, pos=pos, positions=positions, causal_skip=causal_skip,
+        dist=dist)
+    x = x + a
+    h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    shared = None
+    if "shared_wg" in lp:
+        shared = (lp["shared_wg"], lp["shared_wu"], lp["shared_wd"])
+    y, aux, dropped = moe_layer(
+        h, lp["router"], lp["moe_wg"], lp["moe_wu"], lp["moe_wd"],
+        cfg, dist, shared=shared)
+    return x + y, aux, dropped, new_cache
+
+
+# ---------------------------------------------------------------------------
+# rope tables
+# ---------------------------------------------------------------------------
+
+def _rope(cfg: ModelConfig, S: int, pos0=0, positions=None, theta=None):
+    theta = theta or cfg.rope_theta
+    if positions is None:
+        positions = jnp.arange(S) + pos0
+    sin, cos = L.rope_table(positions, cfg.head_dim, theta)
+    return (sin, cos, sin, cos)
+
+
+# ===========================================================================
+# DENSE / VLM
+# ===========================================================================
+
+def dense_trunk(params, cfg: ModelConfig, x, *, dist, mode="train",
+                caches=None, pos=0, positions=None, remat=False,
+                causal_skip=False):
+    """Runs the stacked dense blocks. caches: dict of stacked cache arrays.
+    Returns (x, new_caches)."""
+    B, S, D = x.shape
+    new_caches = {} if caches is not None else None
+
+    def run_stack(x, stack, n_layers, window, theta, cache_key):
+        rope_sincos = _rope(cfg, S, pos0=pos, positions=positions, theta=theta)
+
+        if mode == "train":
+            body = _maybe_remat(
+                lambda xx, lp: dense_block(
+                    xx, lp, cfg, window=window, rope_sincos=rope_sincos,
+                    positions=positions, causal_skip=causal_skip)[0], remat)
+            x, _ = UR.scan(lambda xx, lp: (body(xx, lp), None), x, stack)
+            return x
+        ck, cv = caches[cache_key]
+
+        def body(xx, xs):
+            lp, k_c, v_c = xs
+            y, nc = dense_block(
+                xx, lp, cfg, window=window, rope_sincos=rope_sincos,
+                mode=mode, cache=(k_c, v_c), pos=pos, positions=positions, dist=dist)
+            return y, nc
+
+        x, ncs = UR.scan(body, x, (stack, ck, cv))
+        new_caches[cache_key] = ncs
+        return x
+
+    if cfg.global_every > 1:  # gemma3 pattern
+        n_super = cfg.num_layers // cfg.global_every
+        n_lp = cfg.global_every - 1
+        n_trail = cfg.num_layers - n_super * cfg.global_every
+        local = _sub(params, "local_")
+        glob = _sub(params, "global_")
+        local_r = jax.tree.map(
+            lambda a: a.reshape((n_super, n_lp) + a.shape[1:]), local)
+        rope_l = _rope(cfg, S, pos0=pos, positions=positions, theta=10_000.0)
+        rope_g = _rope(cfg, S, pos0=pos, positions=positions,
+                       theta=cfg.rope_theta)
+
+        if mode == "train":
+            def super_body(xx, xs):
+                lstack, gp = xs
+
+                def lbody(xx2, lp):
+                    return _maybe_remat(
+                        lambda a, b: dense_block(
+                            a, b, cfg, window=cfg.window_size,
+                            rope_sincos=rope_l, positions=positions,
+                            causal_skip=causal_skip)[0], remat)(xx2, lp), None
+
+                xx, _ = UR.scan(lbody, xx, lstack)
+                xx = _maybe_remat(
+                    lambda a, b: dense_block(
+                        a, b, cfg, window=0, rope_sincos=rope_g,
+                        positions=positions, causal_skip=causal_skip)[0],
+                    remat)(xx, gp)
+                return xx, None
+
+            x, _ = UR.scan(super_body, x, (local_r, glob))
+            if n_trail:
+                trail = _sub(params, "trail_")
+
+                def tbody(xx, lp):
+                    return dense_block(
+                        xx, lp, cfg, window=cfg.window_size,
+                        rope_sincos=rope_l, positions=positions,
+                        causal_skip=causal_skip)[0], None
+
+                x, _ = UR.scan(tbody, x, trail)
+            return x, None
+
+        # prefill / decode with caches
+        lk, lv = caches["local"]  # (n_local_total, B, W, KH, Dh)
+        gk, gv = caches["global"]
+        lk_r, lv_r = (a.reshape((n_super, n_lp) + a.shape[1:])
+                      for a in (lk, lv))
+
+        def super_body(xx, xs):
+            lstack, lkc, lvc, gp, gkc, gvc = xs
+
+            def lbody(xx2, xs2):
+                lp2, k_c, v_c = xs2
+                y, nc = dense_block(
+                    xx2, lp2, cfg, window=cfg.window_size, rope_sincos=rope_l,
+                    mode=mode, cache=(k_c, v_c), pos=pos,
+                    positions=positions, dist=dist)
+                return y, nc
+
+            xx, lnc = UR.scan(lbody, xx, (lstack, lkc, lvc))
+            xx, gnc = dense_block(
+                xx, gp, cfg, window=0, rope_sincos=rope_g, mode=mode,
+                cache=(gkc, gvc), pos=pos, positions=positions, dist=dist)
+            return xx, (lnc, gnc)
+
+        x, (lnc, gnc) = UR.scan(
+            super_body, x, (local_r, lk_r, lv_r, glob, gk, gv))
+        new_caches["local"] = tuple(
+            a.reshape((n_super * n_lp,) + a.shape[2:]) for a in lnc)
+        new_caches["global"] = gnc
+        if n_trail:
+            trail = _sub(params, "trail_")
+            tk, tv = caches["trail"]
+
+            def tbody(xx, xs):
+                lp2, k_c, v_c = xs
+                y, nc = dense_block(
+                    xx, lp2, cfg, window=cfg.window_size, rope_sincos=rope_l,
+                    mode=mode, cache=(k_c, v_c), pos=pos,
+                    positions=positions, dist=dist)
+                return y, nc
+
+            x, tnc = UR.scan(tbody, x, (trail, tk, tv))
+            new_caches["trail"] = tnc
+        return x, new_caches
+
+    # uniform stack
+    stack = _sub(params, "blocks_")
+    window = cfg.window_size
+    rope_sc = _rope(cfg, S, pos0=pos, positions=positions)
+    if mode == "train":
+        body = _maybe_remat(
+            lambda xx, lp: dense_block(
+                xx, lp, cfg, window=window, rope_sincos=rope_sc,
+                positions=positions, causal_skip=causal_skip)[0], remat)
+        x, _ = UR.scan(lambda xx, lp: (body(xx, lp), None), x, stack)
+        return x, None
+
+    ck, cv = caches["blocks"]
+
+    def body(xx, xs):
+        lp, k_c, v_c = xs
+        y, nc = dense_block(
+            xx, lp, cfg, window=window, rope_sincos=rope_sc, mode=mode,
+            cache=(k_c, v_c), pos=pos, positions=positions, dist=dist)
+        return y, nc
+
+    x, ncs = UR.scan(body, x, (stack, ck, cv))
+    new_caches["blocks"] = ncs
+    return x, new_caches
+
+
+# ===========================================================================
+# MOE trunk
+# ===========================================================================
+
+def moe_trunk(params, cfg: ModelConfig, x, *, dist, mode="train", caches=None,
+              pos=0, positions=None, remat=False, causal_skip=False):
+    B, S, D = x.shape
+    rope_sc = _rope(cfg, S, pos0=pos, positions=positions)
+    new_caches = {} if caches is not None else None
+    aux_tot = jnp.zeros((), jnp.float32)
+    drop_tot = jnp.zeros((), jnp.float32)
+
+    nd = cfg.first_dense_layers
+    if nd:
+        dstack = _sub(params, "dense_")
+        if mode == "train":
+            body = _maybe_remat(
+                lambda xx, lp: dense_block(
+                    xx, lp, cfg, window=0, rope_sincos=rope_sc,
+                    positions=positions, causal_skip=causal_skip)[0], remat)
+            x, _ = UR.scan(lambda xx, lp: (body(xx, lp), None), x, dstack)
+        else:
+            ck, cv = caches["dense"]
+
+            def dbody(xx, xs):
+                lp, k_c, v_c = xs
+                y, nc = dense_block(
+                    xx, lp, cfg, window=0, rope_sincos=rope_sc, mode=mode,
+                    cache=(k_c, v_c), pos=pos, positions=positions, dist=dist)
+                return y, nc
+
+            x, ncs = UR.scan(dbody, x, (dstack, ck, cv))
+            new_caches["dense"] = ncs
+
+    stack = _sub(params, "blocks_")
+    if mode == "train":
+        def body(carry, lp):
+            xx, aux, drop = carry
+            def blk(xx2, lp2):
+                return moe_block(xx2, lp2, cfg, dist, rope_sincos=rope_sc,
+                                 positions=positions, causal_skip=causal_skip)[:3]
+            if remat:
+                blk = jax.checkpoint(blk)
+            y, a, dr = blk(xx, lp)
+            return (y, aux + a, drop + dr), None
+
+        (x, aux_tot, drop_tot), _ = UR.scan(
+            body, (x, aux_tot, drop_tot), stack)
+        return x, None, aux_tot, drop_tot
+
+    ck, cv = caches["blocks"]
+
+    def body(carry, xs):
+        xx, aux, drop = carry
+        lp, k_c, v_c = xs
+        y, a, dr, nc = moe_block(
+            xx, lp, cfg, dist, rope_sincos=rope_sc, mode=mode,
+            cache=(k_c, v_c), pos=pos, positions=positions)
+        return (y, aux + a, drop + dr), nc
+
+    (x, aux_tot, drop_tot), ncs = UR.scan(
+        body, (x, aux_tot, drop_tot), (stack, ck, cv))
+    new_caches["blocks"] = ncs
+    return x, new_caches, aux_tot, drop_tot
+
+
+# ===========================================================================
+# RWKV trunk
+# ===========================================================================
+
+def rwkv_trunk(params, cfg: ModelConfig, x, *, mode="train", states=None,
+               remat=False):
+    stack = _sub(params, "blocks_")
+    x = L.rmsnorm(x, params["ln_in"], cfg.norm_eps)
+    single = mode == "decode"
+
+    if states is None:
+        def body(xx, lp):
+            fn = lambda a, b: rwkv6_block(a, b, cfg)[0]
+            if remat:
+                fn = jax.checkpoint(fn)
+            return fn(xx, lp), None
+        x, _ = UR.scan(body, x, stack)
+        return x, None
+
+    def body(xx, xs):
+        lp, st = xs
+        y, ns = rwkv6_block(xx, lp, cfg, state=RWKVState(*st),
+                            single_step=single)
+        return y, tuple(ns)
+
+    x, ns = UR.scan(body, x, (stack, tuple(states)))
+    return x, ns
+
+
+# ===========================================================================
+# HYBRID (zamba2) trunk
+# ===========================================================================
+
+def _mamba_pdict(lp: Dict) -> Dict:
+    """Map stacked 'm_*' keys to mamba2_block parameter names."""
+    return {"in_proj": lp["m_in"], "conv_w": lp["m_conv_w"],
+            "conv_b": lp["m_conv_b"], "A_log": lp["m_A_log"],
+            "D_skip": lp["m_D"], "dt_bias": lp["m_dt_bias"],
+            "norm_w": lp["m_norm"], "out_proj": lp["m_out"]}
+
+def hybrid_trunk(params, cfg: ModelConfig, x, *, dist, mode="train",
+                 states=None, caches=None, pos=0, remat=False):
+    """Mamba2 stack with a shared attention block every ``attn_every`` layers.
+    states: (ssm (L,B,H,N,P), conv (L,B,cw-1,cd)); caches: attention KV for
+    each shared-block application (n_apps stacked)."""
+    B, S, D = x.shape
+    n_apps = cfg.num_layers // cfg.attn_every
+    per = cfg.attn_every
+    stack = _sub(params, "blocks_")
+    stack_r = jax.tree.map(lambda a: a.reshape((n_apps, per) + a.shape[1:]),
+                           stack)
+    shared = _sub(params, "sa_")
+    nb = cfg.num_shared_attn_blocks
+    rope_sc = _rope(cfg, S, pos0=pos)
+    single = mode == "decode"
+
+    def shared_at(i):
+        """Alternating shared block params: gather block i % nb."""
+        idx = i % nb
+        return jax.tree.map(lambda a: a[idx], shared)
+
+    train = states is None and caches is None
+    if train:
+        def super_body(xx, xs):
+            mstack, app_idx = xs
+
+            def mbody(xx2, lp):
+                def blk(a, b):
+                    h = L.rmsnorm(a, b["m_ln"], cfg.norm_eps)
+                    y, _ = mamba2_block(h, _mamba_pdict(b), cfg)
+                    return a + y
+                if remat:
+                    blk = jax.checkpoint(blk)
+                return blk(xx2, lp), None
+
+            xx, _ = UR.scan(mbody, xx, mstack)
+            sp = shared_at(app_idx)
+            h = L.rmsnorm(xx, sp["ln1"], cfg.norm_eps)
+            a, _ = attn_sublayer(h, sp, cfg, rope_sincos=rope_sc, mode="train")
+            xx = xx + a
+            h = L.rmsnorm(xx, sp["ln2"], cfg.norm_eps)
+            xx = xx + L.glu_mlp(h, sp["w1"], sp["w3"], sp["w2"], act=cfg.act)
+            return xx, None
+
+        x, _ = UR.scan(super_body, x, (stack_r, jnp.arange(n_apps)))
+        return x, None, None
+
+    ssm_s, conv_s = states  # (L,B,H,N,P), (L,B,cw-1,cd)
+    ssm_r = ssm_s.reshape((n_apps, per) + ssm_s.shape[1:])
+    conv_r = conv_s.reshape((n_apps, per) + conv_s.shape[1:])
+    ck, cv = caches  # (n_apps, B, Smax, KH, Dh) x2
+
+    def super_body(xx, xs):
+        mstack, app_idx, sstack, cstack, k_c, v_c = xs
+
+        def mbody(xx2, xs2):
+            lp, st_s, st_c = xs2
+            h = L.rmsnorm(xx2, lp["m_ln"], cfg.norm_eps)
+            y, ns = mamba2_block(h, _mamba_pdict(lp), cfg,
+                                 state=MambaState(st_s, st_c),
+                                 single_step=single)
+            return xx2 + y, (ns.ssm, ns.conv)
+
+        xx, (nss, ncs) = UR.scan(mbody, xx, (mstack, sstack, cstack))
+        sp = shared_at(app_idx)
+        h = L.rmsnorm(xx, sp["ln1"], cfg.norm_eps)
+        a, nc = attn_sublayer(h, sp, cfg, rope_sincos=rope_sc, mode=mode,
+                              cache=(k_c, v_c), pos=pos, dist=dist)
+        xx = xx + a
+        h = L.rmsnorm(xx, sp["ln2"], cfg.norm_eps)
+        xx = xx + L.glu_mlp(h, sp["w1"], sp["w3"], sp["w2"], act=cfg.act)
+        return xx, (nss, ncs, nc)
+
+    x, (nss, ncs, nc) = UR.scan(
+        super_body, x, (stack_r, jnp.arange(n_apps), ssm_r, conv_r, ck, cv))
+    new_states = (nss.reshape(ssm_s.shape), ncs.reshape(conv_s.shape))
+    return x, new_states, nc
+
+
+# ===========================================================================
+# ENC-DEC (whisper) trunk
+# ===========================================================================
+
+def encoder_trunk(params, cfg: ModelConfig, frames, *, remat=False):
+    """frames: (B, S, frontend_dim) precomputed conv-frontend embeddings."""
+    x = frames @ params["frontend_w"] + params["frontend_b"]
+    B, S, D = x.shape
+    x = x + L.sinusoid_positions(S, D)[None].astype(x.dtype)
+    stack = _sub(params, "e_")  # keys: wq/wk/wv/wo/bq/bv/bo, mlp_*, ln1*/ln2*
+
+    def body(xx, lp):
+        def blk(a, b):
+            h = L.layernorm(a, b["ln1"], b["ln1_b"], cfg.norm_eps)
+            o, _ = attn_sublayer(h, b, cfg, mode="train", causal=False)
+            a = a + o
+            h = L.layernorm(a, b["ln2"], b["ln2_b"], cfg.norm_eps)
+            return a + L.gelu_mlp(h, b["mlp_w1"], b["mlp_b1"],
+                                  b["mlp_w2"], b["mlp_b2"])
+        if remat:
+            blk = jax.checkpoint(blk)
+        return blk(xx, lp), None
+
+    x, _ = UR.scan(body, x, stack)
+    return L.layernorm(x, params["enc_final_norm"], params["enc_final_norm_b"],
+                       cfg.norm_eps)
+
+
+def decoder_trunk(params, cfg: ModelConfig, tokens, memory, *, mode="train",
+                  caches=None, pos=0, remat=False):
+    """tokens: (B, T); memory: (B, S_enc, D) or precomputed cross KV."""
+    x = _embed(params, cfg, tokens)
+    B, T, D = x.shape
+    pos_emb = jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, T, 0)
+    x = x + pos_emb[None]
+    dstack = _sub(params, "d_")  # self-attn + mlp_* + ln1/ln2/ln3 (+biases)
+    xstack = _sub(params, "x_")  # cross-attn projections
+
+    new_caches = {} if caches is not None else None
+
+    if caches is None:
+        def body(xx, lps):
+            lp, xp = lps
+
+            def blk(a, b, c):
+                h = L.layernorm(a, b["ln1"], b["ln1_b"], cfg.norm_eps)
+                o, _ = attn_sublayer(h, b, cfg, mode="train", causal=True)
+                a = a + o
+                h = L.layernorm(a, b["ln2"], b["ln2_b"], cfg.norm_eps)
+                o, _ = attn_sublayer(h, c, cfg, mode="train", causal=False,
+                                     kv_src=memory)
+                a = a + o
+                h = L.layernorm(a, b["ln3"], b["ln3_b"], cfg.norm_eps)
+                return a + L.gelu_mlp(h, b["mlp_w1"], b["mlp_b1"],
+                                      b["mlp_w2"], b["mlp_b2"])
+            if remat:
+                blk = jax.checkpoint(blk)
+            return blk(xx, lp, xp), None
+
+        x, _ = UR.scan(body, x, (dstack, xstack))
+        return x, None
+
+    sk, sv = caches["self"]
+    xk, xv = caches["cross"]  # precomputed (L, B, S_enc, KH, Dh)
+
+    def body(xx, xs):
+        lp, xp, k_c, v_c, xkc, xvc = xs
+        h = L.layernorm(xx, lp["ln1"], lp["ln1_b"], cfg.norm_eps)
+        o, nc = attn_sublayer(h, lp, cfg, mode=mode, cache=(k_c, v_c),
+                              pos=pos, causal=True)
+        xx = xx + o
+        h = L.layernorm(xx, lp["ln2"], lp["ln2_b"], cfg.norm_eps)
+        # cross attention against precomputed KV
+        H, KH, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        q = (h @ xp["wq"] + xp["bq"]).reshape(B, -1, H, Dh)
+        o = L.decode_attention(q, L.repeat_kv(xkc, H // KH),
+                               L.repeat_kv(xvc, H // KH), xkc.shape[1]) \
+            if mode == "decode" else \
+            L.blockwise_attention(q, L.repeat_kv(xkc, H // KH),
+                                  L.repeat_kv(xvc, H // KH), causal=False)
+        o = o.reshape(B, -1, H * Dh) @ xp["wo"] + xp["bo"]
+        xx = xx + o
+        h = L.layernorm(xx, lp["ln3"], lp["ln3_b"], cfg.norm_eps)
+        xx = xx + L.gelu_mlp(h, lp["mlp_w1"], lp["mlp_b1"],
+                             lp["mlp_w2"], lp["mlp_b2"])
+        return xx, nc
+
+    x, ncs = UR.scan(body, x, (dstack, xstack, sk, sv, xk, xv))
+    new_caches["self"] = ncs
+    new_caches["cross"] = (xk, xv)
+    return x, new_caches
+
+
+def cross_kv(params, cfg: ModelConfig, memory):
+    """Precompute decoder cross-attention K/V for all layers from memory."""
+    xstack = _sub(params, "x_")
+    B, S, D = memory.shape
+    KH, Dh = cfg.num_kv_heads, cfg.head_dim
+
+    def body(_, xp):
+        k = (memory @ xp["wk"]).reshape(B, S, KH, Dh)
+        v = (memory @ xp["wv"] + xp["bv"]).reshape(B, S, KH, Dh)
+        return None, (k, v)
+
+    _, (ks, vs) = UR.scan(body, None, xstack)
+    return ks, vs

@@ -1,0 +1,289 @@
+"""Unified model API over all architecture families.
+
+  train_loss(params, cfg, batch, ...)        -> (loss, metrics)
+  init_cache(cfg, batch, max_seq, abstract)  -> cache pytree (zeros or SDS)
+  prefill(params, cfg, batch, caches, ...)   -> (last_logits, caches)
+  decode_step(params, cfg, tokens, caches, pos, ...) -> (logits, caches)
+  input_specs(cfg, shape_cell)               -> batch of ShapeDtypeStructs
+
+Batch schemas:
+  dense/moe/ssm/hybrid: {tokens (B,S) i32, labels (B,S) i32}
+  vlm:    {tokens (B,S_txt), patches (B,S_img,Fd), labels (B,S_txt)}
+          with S_img = S // 2 (multi-camera patch slots, CrossRoI target)
+  encdec: {frames (B,S,Fd), tokens (B,T), labels (B,T)}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import forward as F
+from repro.models import layers as L
+from repro.models.dist import DistContext
+from repro.models.params import param_specs, init_params
+from repro.models.rwkv import LORA_MIX  # noqa: F401  (re-export convenience)
+from repro.models.ssm import conv_dim
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+    B, S = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+    if cfg.family == "vlm":
+        s_img = S // 2
+        s_txt = S - s_img
+        d = {"tokens": sds((B, s_txt), i32),
+             "patches": sds((B, s_img, cfg.frontend_dim), bf16)}
+        if cell.kind == "train":
+            d["labels"] = sds((B, s_txt), i32)
+        return d
+    if cfg.family == "encdec":
+        T = min(cfg.max_target_len, S)
+        d = {"frames": sds((B, S, cfg.frontend_dim), bf16),
+             "tokens": sds((B, T), i32)}
+        if cell.kind == "train":
+            d["labels"] = sds((B, T), i32)
+        return d
+    d = {"tokens": sds((B, S), i32)}
+    if cell.kind == "train":
+        d["labels"] = sds((B, S), i32)
+    return d
+
+
+def make_batch(cfg: ModelConfig, cell_or_shapes, key: jax.Array) -> Dict:
+    """Random concrete batch matching input_specs (smoke tests/examples)."""
+    specs = input_specs(cfg, cell_or_shapes) \
+        if isinstance(cell_or_shapes, ShapeCell) else cell_or_shapes
+    out = {}
+    for i, (name, s) in enumerate(sorted(specs.items())):
+        k = jax.random.fold_in(key, i)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab_size, s.dtype)
+        else:
+            out[name] = jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# embedding front
+# ---------------------------------------------------------------------------
+
+def _front(params, cfg: ModelConfig, batch) -> jax.Array:
+    if cfg.family == "vlm":
+        tok = F._embed(params, cfg, batch["tokens"])
+        patch = batch["patches"] @ params["frontend_w"] + params["frontend_b"]
+        return jnp.concatenate([patch.astype(tok.dtype), tok], axis=1)
+    return F._embed(params, cfg, batch["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# train loss
+# ---------------------------------------------------------------------------
+
+def train_loss(params, cfg: ModelConfig, batch, *, dist: Optional[DistContext]
+               = None, remat: bool = True, causal_skip: bool = False):
+    metrics: Dict[str, jax.Array] = {}
+    if cfg.family == "encdec":
+        memory = F.encoder_trunk(params, cfg, batch["frames"], remat=remat)
+        x, _ = F.decoder_trunk(params, cfg, batch["tokens"], memory,
+                               remat=remat)
+        x = L.layernorm(x, params["final_norm"], params["final_norm_b"],
+                        cfg.norm_eps)
+        loss = F.chunked_ce(params, cfg, x, batch["labels"])
+        return loss, metrics
+
+    x = _front(params, cfg, batch)
+    x = F.shard_act(x, dist, None, None)
+
+    if cfg.family in ("dense", "vlm"):
+        x, _ = F.dense_trunk(params, cfg, x, dist=dist, remat=remat,
+                             causal_skip=causal_skip)
+    elif cfg.family == "moe":
+        x, _, aux, dropped = F.moe_trunk(params, cfg, x, dist=dist,
+                                         remat=remat, causal_skip=causal_skip)
+        metrics["moe_aux"] = aux
+        metrics["moe_dropped"] = dropped
+    elif cfg.family == "ssm":
+        x, _ = F.rwkv_trunk(params, cfg, x, remat=remat)
+    elif cfg.family == "hybrid":
+        x, _, _ = F.hybrid_trunk(params, cfg, x, dist=dist, remat=remat)
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.family == "vlm":
+        s_txt = batch["tokens"].shape[1]
+        x = x[:, -s_txt:]
+    loss = F.chunked_ce(params, cfg, x, batch["labels"])
+    if "moe_aux" in metrics:
+        loss = loss + cfg.router_aux_coef * metrics["moe_aux"]
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _kv_cache(shape, abstract, dtype=jnp.bfloat16):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jnp.zeros(shape, dtype)
+
+
+def init_cache(cfg: ModelConfig, B: int, max_seq: int, abstract: bool = False):
+    """KV caches / recurrent states sized for a serving session.
+
+    Sliding-window layers get ring buffers of length ``window`` — decode
+    memory for SWA/local layers is O(window) regardless of context length.
+    """
+    KH, Dh = cfg.num_kv_heads, cfg.head_dim
+    fam = cfg.family
+    kv_dt = getattr(jnp, cfg.kv_cache_dtype)
+
+    def kv(Lc, Smax):
+        return (_kv_cache((Lc, B, Smax, KH, Dh), abstract, kv_dt),
+                _kv_cache((Lc, B, Smax, KH, Dh), abstract, kv_dt))
+
+    if fam in ("dense", "vlm"):
+        if cfg.global_every > 1:
+            n_super = cfg.num_layers // cfg.global_every
+            n_lp = cfg.global_every - 1
+            n_trail = cfg.num_layers - n_super * cfg.global_every
+            W = min(cfg.window_size, max_seq)
+            caches = {"local": kv(n_super * n_lp, W),
+                      "global": kv(n_super, max_seq)}
+            if n_trail:
+                caches["trail"] = kv(n_trail, W)
+            return caches
+        Smax = min(cfg.window_size, max_seq) if cfg.window_size else max_seq
+        return {"blocks": kv(cfg.num_layers, Smax)}
+    if fam == "moe":
+        caches = {"blocks": kv(cfg.num_layers - cfg.first_dense_layers, max_seq)}
+        if cfg.first_dense_layers:
+            caches["dense"] = kv(cfg.first_dense_layers, max_seq)
+        return caches
+    if fam == "ssm":
+        Lc, D = cfg.num_layers, cfg.d_model
+        H, P = cfg.ssm_num_heads, cfg.ssm_head_dim
+        mkf = (lambda s: jax.ShapeDtypeStruct(s, jnp.float32)) if abstract \
+            else (lambda s: jnp.zeros(s, jnp.float32))
+        return (mkf((Lc, B, H, P, P)), mkf((Lc, B, D)), mkf((Lc, B, D)))
+    if fam == "hybrid":
+        Lc = cfg.num_layers
+        H, N, P = cfg.ssm_num_heads, cfg.ssm_state_dim, cfg.ssm_head_dim
+        cd = conv_dim(cfg)
+        cw = cfg.ssm_conv_width
+        n_apps = Lc // cfg.attn_every
+        mkf = (lambda s: jax.ShapeDtypeStruct(s, jnp.float32)) if abstract \
+            else (lambda s: jnp.zeros(s, jnp.float32))
+        mkb = (lambda s: jax.ShapeDtypeStruct(s, jnp.bfloat16)) if abstract \
+            else (lambda s: jnp.zeros(s, jnp.bfloat16))
+        states = (mkf((Lc, B, H, N, P)), mkb((Lc, B, cw - 1, cd)))
+        return {"states": states, "attn": kv(n_apps, max_seq)}
+    if fam == "encdec":
+        Tmax = cfg.max_target_len
+        # cross KV sized to the encoder memory length; prefill overwrites
+        # it with the real projections (decode-only dry-runs lower against
+        # the abstract struct directly)
+        cross = (_kv_cache((cfg.decoder_layers, B, max_seq, KH, Dh),
+                           abstract),
+                 _kv_cache((cfg.decoder_layers, B, max_seq, KH, Dh),
+                           abstract))
+        return {"self": kv(cfg.decoder_layers, Tmax), "cross": cross}
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, batch, caches, *,
+            dist: Optional[DistContext] = None, positions=None,
+            last_index=None):
+    """Process the full prompt; fill caches; return last-position logits
+    (or the logits at ``last_index`` — RoI-packed prompts end at the last
+    *kept* row, not the last padded row)."""
+    fam = cfg.family
+    if fam == "encdec":
+        memory = F.encoder_trunk(params, cfg, batch["frames"])
+        xk, xv = F.cross_kv(params, cfg, memory)
+        caches = dict(caches)
+        caches["cross"] = (xk, xv)
+        x, caches = F.decoder_trunk(params, cfg, batch["tokens"], memory,
+                                    mode="prefill", caches=caches, pos=0)
+        x = L.layernorm(x, params["final_norm"], params["final_norm_b"],
+                        cfg.norm_eps)
+        logits = F._unembed(params, cfg, x[:, -1:])
+        return logits, caches
+
+    x = _front(params, cfg, batch)
+    x = F.shard_act(x, dist, None, None)
+    if fam in ("dense", "vlm"):
+        x, caches = F.dense_trunk(params, cfg, x, dist=dist, mode="prefill",
+                                  caches=caches, positions=positions)
+    elif fam == "moe":
+        x, caches, _, _ = F.moe_trunk(params, cfg, x, dist=dist,
+                                      mode="prefill", caches=caches,
+                                      positions=positions)
+    elif fam == "ssm":
+        x, states = F.rwkv_trunk(params, cfg, x, mode="prefill",
+                                 states=caches)
+        caches = states
+    elif fam == "hybrid":
+        x, states, attn = F.hybrid_trunk(params, cfg, x, dist=dist,
+                                         mode="prefill",
+                                         states=caches["states"],
+                                         caches=caches["attn"])
+        caches = {"states": states, "attn": attn}
+    else:
+        raise ValueError(fam)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if last_index is None:
+        xe = x[:, -1:]
+    else:
+        xe = jax.lax.dynamic_slice_in_dim(x, last_index, 1, axis=1)
+    logits = F._unembed(params, cfg, xe)
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, tokens, caches, pos, *,
+                dist: Optional[DistContext] = None):
+    """tokens: (B, 1) the token at absolute position ``pos`` (scalar)."""
+    fam = cfg.family
+    if fam == "encdec":
+        memory = None  # cross KV already in caches
+        x, caches = F.decoder_trunk(params, cfg, tokens, memory,
+                                    mode="decode", caches=caches, pos=pos)
+        x = L.layernorm(x, params["final_norm"], params["final_norm_b"],
+                        cfg.norm_eps)
+        return F._unembed(params, cfg, x), caches
+
+    x = F._embed(params, cfg, tokens)
+    if fam in ("dense", "vlm"):
+        x, caches = F.dense_trunk(params, cfg, x, dist=dist, mode="decode",
+                                  caches=caches, pos=pos)
+    elif fam == "moe":
+        x, caches, _, _ = F.moe_trunk(params, cfg, x, dist=dist,
+                                      mode="decode", caches=caches, pos=pos)
+    elif fam == "ssm":
+        x, caches = F.rwkv_trunk(params, cfg, x, mode="decode", states=caches)
+    elif fam == "hybrid":
+        x, states, attn = F.hybrid_trunk(params, cfg, x, dist=dist,
+                                         mode="decode",
+                                         states=caches["states"],
+                                         caches=caches["attn"], pos=pos)
+        caches = {"states": states, "attn": attn}
+    else:
+        raise ValueError(fam)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return F._unembed(params, cfg, x), caches

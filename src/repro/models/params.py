@@ -1,0 +1,280 @@
+"""Parameter trees: one declarative builder emits either real initialized
+arrays (smoke tests / examples) or ShapeDtypeStructs (dry-run lowering).
+
+Layer stacks carry a leading L dim for lax.scan. Naming is stable and is what
+``distributed/shardings.py`` pattern-matches to assign PartitionSpecs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.rwkv import LORA_DECAY, LORA_MIX
+from repro.models import ssm as ssm_mod
+
+Creator = Callable[[str, tuple, jnp.dtype, float], object]
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Block param groups
+# ---------------------------------------------------------------------------
+
+def _attn_block(cfg: ModelConfig, mk: Creator, L: int, prefix: str,
+                biases: bool = False, qk_norm: bool = False) -> Dict:
+    d, dt = cfg.d_model, _dt(cfg)
+    qd, kvd = cfg.q_dim, cfg.kv_dim
+    p = {
+        f"{prefix}wq": mk(f"{prefix}wq", (L, d, qd), dt, d),
+        f"{prefix}wk": mk(f"{prefix}wk", (L, d, kvd), dt, d),
+        f"{prefix}wv": mk(f"{prefix}wv", (L, d, kvd), dt, d),
+        f"{prefix}wo": mk(f"{prefix}wo", (L, qd, d), dt, qd),
+    }
+    if biases:
+        p[f"{prefix}bq"] = mk(f"{prefix}bq", (L, qd), dt, 0)
+        p[f"{prefix}bv"] = mk(f"{prefix}bv", (L, kvd), dt, 0)
+        p[f"{prefix}bo"] = mk(f"{prefix}bo", (L, d), dt, 0)
+    if qk_norm:
+        p[f"{prefix}qnorm"] = mk(f"{prefix}qnorm", (L, cfg.head_dim), jnp.float32, -1)
+        p[f"{prefix}knorm"] = mk(f"{prefix}knorm", (L, cfg.head_dim), jnp.float32, -1)
+    return p
+
+
+def _glu_mlp_block(cfg: ModelConfig, mk: Creator, L: int, ff: int,
+                   prefix: str = "") -> Dict:
+    d, dt = cfg.d_model, _dt(cfg)
+    return {
+        f"{prefix}w1": mk(f"{prefix}w1", (L, d, ff), dt, d),
+        f"{prefix}w3": mk(f"{prefix}w3", (L, d, ff), dt, d),
+        f"{prefix}w2": mk(f"{prefix}w2", (L, ff, d), dt, ff),
+    }
+
+
+def _gelu_mlp_block(cfg: ModelConfig, mk: Creator, L: int, prefix: str) -> Dict:
+    d, ff, dt = cfg.d_model, cfg.d_ff, _dt(cfg)
+    return {
+        f"{prefix}w1": mk(f"{prefix}w1", (L, d, ff), dt, d),
+        f"{prefix}b1": mk(f"{prefix}b1", (L, ff), dt, 0),
+        f"{prefix}w2": mk(f"{prefix}w2", (L, ff, d), dt, ff),
+        f"{prefix}b2": mk(f"{prefix}b2", (L, d), dt, 0),
+    }
+
+
+def _norms(cfg: ModelConfig, mk: Creator, L: int, names, biases=False) -> Dict:
+    d = cfg.d_model
+    p = {}
+    for n in names:
+        p[n] = mk(n, (L, d), jnp.float32, -1)
+        if biases:
+            p[n + "_b"] = mk(n + "_b", (L, d), jnp.float32, 0)
+    return p
+
+
+def _dense_stack(cfg: ModelConfig, mk: Creator, L: int,
+                 qk_norm: bool = False) -> Dict:
+    p = {}
+    p.update(_attn_block(cfg, mk, L, "", qk_norm=qk_norm))
+    p.update(_glu_mlp_block(cfg, mk, L, cfg.d_ff))
+    p.update(_norms(cfg, mk, L, ["ln1", "ln2"]))
+    return p
+
+
+def _moe_stack(cfg: ModelConfig, mk: Creator, L: int) -> Dict:
+    d, dt = cfg.d_model, _dt(cfg)
+    E, Fe = cfg.num_experts, cfg.moe_d_ff
+    p = {}
+    p.update(_attn_block(cfg, mk, L, "", qk_norm=cfg.name.startswith("qwen3")))
+    p.update(_norms(cfg, mk, L, ["ln1", "ln2"]))
+    p["router"] = mk("router", (L, d, E), jnp.float32, d)
+    p["moe_wg"] = mk("moe_wg", (L, E, d, Fe), dt, d)
+    p["moe_wu"] = mk("moe_wu", (L, E, d, Fe), dt, d)
+    p["moe_wd"] = mk("moe_wd", (L, E, Fe, d), dt, Fe)
+    if cfg.num_shared_experts:
+        Fs = cfg.shared_d_ff
+        p["shared_wg"] = mk("shared_wg", (L, d, Fs), dt, d)
+        p["shared_wu"] = mk("shared_wu", (L, d, Fs), dt, d)
+        p["shared_wd"] = mk("shared_wd", (L, Fs, d), dt, Fs)
+    return p
+
+
+def _mamba_stack(cfg: ModelConfig, mk: Creator, L: int) -> Dict:
+    d, dt = cfg.d_model, _dt(cfg)
+    inner, N, H = cfg.ssm_inner, cfg.ssm_state_dim, cfg.ssm_num_heads
+    cd = ssm_mod.conv_dim(cfg)
+    return {
+        "m_in": mk("m_in", (L, d, 2 * inner + 2 * N + H), dt, d),
+        "m_conv_w": mk("m_conv_w", (L, cfg.ssm_conv_width, cd), jnp.float32, cfg.ssm_conv_width),
+        "m_conv_b": mk("m_conv_b", (L, cd), jnp.float32, 0),
+        "m_A_log": mk("m_A_log", (L, H), jnp.float32, -2),  # special init
+        "m_D": mk("m_D", (L, H), jnp.float32, -1),
+        "m_dt_bias": mk("m_dt_bias", (L, H), jnp.float32, 0),
+        "m_norm": mk("m_norm", (L, inner), jnp.float32, -1),
+        "m_out": mk("m_out", (L, inner, d), dt, inner),
+        "m_ln": mk("m_ln", (L, d), jnp.float32, -1),
+    }
+
+
+def _rwkv_stack(cfg: ModelConfig, mk: Creator, L: int) -> Dict:
+    d, dt = cfg.d_model, _dt(cfg)
+    H, P = cfg.ssm_num_heads, cfg.ssm_head_dim
+    F = cfg.d_ff
+    return {
+        "ln1_w": mk("ln1_w", (L, d), jnp.float32, -1),
+        "ln2_w": mk("ln2_w", (L, d), jnp.float32, -1),
+        "maa_x": mk("maa_x", (L, d), jnp.float32, 0),
+        "maa_w1": mk("maa_w1", (L, d, 5 * LORA_MIX), dt, d),
+        "maa_w2": mk("maa_w2", (L, 5, LORA_MIX, d), dt, LORA_MIX),
+        "maa_wkvrg": mk("maa_wkvrg", (L, 5, d), jnp.float32, 0),
+        "decay_base": mk("decay_base", (L, d), jnp.float32, -2),
+        "decay_w1": mk("decay_w1", (L, d, LORA_DECAY), dt, d),
+        "decay_w2": mk("decay_w2", (L, LORA_DECAY, d), dt, LORA_DECAY),
+        "u": mk("u", (L, H, P), jnp.float32, 0),
+        "wr": mk("wr", (L, d, d), dt, d),
+        "wk": mk("wk", (L, d, d), dt, d),
+        "wv": mk("wv", (L, d, d), dt, d),
+        "wg": mk("wg", (L, d, d), dt, d),
+        "wo": mk("wo", (L, d, d), dt, d),
+        "gn_w": mk("gn_w", (L, d), jnp.float32, -1),
+        "cmix_mu_k": mk("cmix_mu_k", (L, d), jnp.float32, 0),
+        "cmix_mu_r": mk("cmix_mu_r", (L, d), jnp.float32, 0),
+        "cmix_k": mk("cmix_k", (L, d, F), dt, d),
+        "cmix_v": mk("cmix_v", (L, F, d), dt, F),
+        "cmix_r": mk("cmix_r", (L, d, d), dt, d),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Family trees
+# ---------------------------------------------------------------------------
+
+def param_tree(cfg: ModelConfig, mk: Creator) -> Dict:
+    d, dt, V = cfg.d_model, _dt(cfg), cfg.vocab_size
+    p: Dict = {"embed": mk("embed", (V, d), dt, 1.0)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = mk("unembed", (V, d), dt, d)
+    p["final_norm"] = mk("final_norm", (d,), jnp.float32, -1)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        if cfg.global_every > 1:  # gemma3-style local/global pattern
+            n_super = cfg.num_layers // cfg.global_every
+            n_local_per = cfg.global_every - 1
+            n_trail = cfg.num_layers - n_super * cfg.global_every
+            local = {f"local_{k}": v for k, v in
+                     _dense_stack(cfg, mk, n_super * n_local_per).items()}
+            glob = {f"global_{k}": v for k, v in
+                    _dense_stack(cfg, mk, n_super).items()}
+            p.update(local)
+            p.update(glob)
+            if n_trail:
+                p.update({f"trail_{k}": v for k, v in
+                          _dense_stack(cfg, mk, n_trail).items()})
+        else:
+            p.update({f"blocks_{k}": v for k, v in
+                      _dense_stack(cfg, mk, cfg.num_layers).items()})
+        if cfg.frontend == "vit_patch":
+            p["frontend_w"] = mk("frontend_w", (cfg.frontend_dim, d), dt, cfg.frontend_dim)
+            p["frontend_b"] = mk("frontend_b", (d,), dt, 0)
+    elif fam == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            dense = _dense_stack(cfg, mk, nd)
+            p.update({f"dense_{k}": v for k, v in dense.items()})
+        p.update({f"blocks_{k}": v for k, v in
+                  _moe_stack(cfg, mk, cfg.num_layers - nd).items()})
+    elif fam == "ssm":
+        p.update({f"blocks_{k}": v for k, v in
+                  _rwkv_stack(cfg, mk, cfg.num_layers).items()})
+        p["ln_in"] = mk("ln_in", (d,), jnp.float32, -1)  # rwkv pre-ln
+    elif fam == "hybrid":
+        p.update({f"blocks_{k}": v for k, v in
+                  _mamba_stack(cfg, mk, cfg.num_layers).items()})
+        nb = cfg.num_shared_attn_blocks
+        shared = {}
+        shared.update(_attn_block(cfg, mk, nb, "sa_"))
+        shared.update(_glu_mlp_block(cfg, mk, nb, cfg.d_ff, "sa_"))
+        shared.update(_norms(cfg, mk, nb, ["sa_ln1", "sa_ln2"]))
+        p.update(shared)
+    elif fam == "encdec":
+        enc = {}
+        enc.update(_attn_block(cfg, mk, cfg.encoder_layers, "e_", biases=True))
+        enc.update(_gelu_mlp_block(cfg, mk, cfg.encoder_layers, "e_mlp_"))
+        enc.update(_norms(cfg, mk, cfg.encoder_layers, ["e_ln1", "e_ln2"], biases=True))
+        dec = {}
+        dec.update(_attn_block(cfg, mk, cfg.decoder_layers, "d_", biases=True))
+        dec.update(_attn_block(cfg, mk, cfg.decoder_layers, "x_", biases=True))
+        dec.update(_gelu_mlp_block(cfg, mk, cfg.decoder_layers, "d_mlp_"))
+        dec.update(_norms(cfg, mk, cfg.decoder_layers,
+                          ["d_ln1", "d_ln2", "d_ln3"], biases=True))
+        p.update(enc)
+        p.update(dec)
+        p["enc_final_norm_b"] = mk("enc_final_norm_b", (d,), jnp.float32, 0)
+        p["enc_final_norm"] = mk("enc_final_norm", (d,), jnp.float32, -1)
+        p["final_norm_b"] = mk("final_norm_b", (d,), jnp.float32, 0)
+        p["dec_pos"] = mk("dec_pos", (cfg.max_target_len, d), dt, 1.0)
+        if cfg.frontend == "conv_audio":
+            p["frontend_w"] = mk("frontend_w", (cfg.frontend_dim, d), dt, cfg.frontend_dim)
+            p["frontend_b"] = mk("frontend_b", (d,), dt, 0)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Creators
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
+    """Real initialization (truncated-normal fan-in; norms to 1, biases to 0).
+
+    scale semantics of the builder's 4th arg:
+      -1 -> ones (norm weights); 0 -> zeros (biases/mix offsets);
+      -2 -> family-specific special (A_log / decay bases);
+       n>0 -> normal with std 1/sqrt(n) (fan-in).
+    """
+    leaves: Dict = {}
+    counter = [0]
+
+    def mk(name, shape, dtype, scale):
+        counter[0] += 1
+        k = jax.random.fold_in(key, counter[0])
+        if scale == -1:
+            return jnp.ones(shape, dtype)
+        if scale == 0:
+            return jnp.zeros(shape, dtype)
+        if scale == -2:
+            if name == "m_A_log":
+                # A in [1, 16] (mamba2 default)
+                u = jax.random.uniform(k, shape, jnp.float32, 1.0, 16.0)
+                return jnp.log(u)
+            if name == "decay_base":
+                # rwkv6 decay init: spread across channels
+                n = shape[-1]
+                ramp = jnp.arange(n, dtype=jnp.float32) / max(n - 1, 1)
+                base = -6.0 + 5.0 * ramp  # log(-log w) range
+                return jnp.broadcast_to(base, shape)
+            return jnp.zeros(shape, jnp.float32)
+        std = 1.0 / math.sqrt(max(scale, 1.0)) if scale > 1 else 0.02
+        return (jax.random.truncated_normal(k, -2.0, 2.0, shape, jnp.float32)
+                * std).astype(dtype)
+
+    return param_tree(cfg, mk)
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    """ShapeDtypeStruct tree for AOT lowering (no allocation)."""
+    def mk(name, shape, dtype, scale):
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return param_tree(cfg, mk)
+
+
+def count_params(tree: Dict) -> int:
+    return sum(int(np.prod(v.shape)) for v in jax.tree.leaves(tree))

@@ -1,0 +1,176 @@
+"""RWKV6 ("Finch") — attention-free token mixing with data-dependent decay.
+
+Recurrence per head (head dim P, state S: (P_key, P_value)):
+    out_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+with per-channel decay w_t = exp(-exp(w0 + lora_w(x_t))) in (0, 1).
+
+Chunked parallel form: within a chunk of length Q the pairwise decay
+exp(lw_{t-1} - lw_s) is materialized as a (B,Q,Q,H,P) tensor and contracted
+with r and k. Exponents are differences of a cumsum of log-decay, which can
+be strongly negative but are clamped: per-step log decay is bounded below at
+``LOG_DECAY_CLAMP`` so Q * |clamp| stays under the f32 exp range. Channels
+decaying faster than exp(clamp) per step are numerically dead after two
+steps anyway (relative error < 1e-3); this is the standard chunked-RWKV
+stabilization and is recorded in DESIGN.md.
+
+Token shift (ddlerp) follows the RWKV6 structure: five mix coefficients from
+a low-rank tanh MLP on the shifted-delta, plus a low-rank decay head.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import unroll as UR
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rmsnorm
+
+LOG_DECAY_CLAMP = -5.0   # per-step; chunk 16 -> max |exponent| 80 < 88 (f32)
+CHUNK = 16
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+class RWKVState(NamedTuple):
+    wkv: jax.Array      # (B, H, P, P) f32
+    shift_t: jax.Array  # (B, D) last input of the token-mix sublayer
+    shift_c: jax.Array  # (B, D) last input of the channel-mix sublayer
+
+
+def _shift(x: jax.Array, last: Optional[jax.Array]) -> jax.Array:
+    """x: (B,S,D) -> previous-token tensor, seeded by ``last`` or zeros."""
+    B, S, D = x.shape
+    first = jnp.zeros((B, 1, D), x.dtype) if last is None \
+        else last[:, None, :].astype(x.dtype)
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _ddlerp(x, sx, p):
+    """Data-dependent lerp producing the 5 mixed streams (w,k,v,r,g)."""
+    xx = x + sx * p["maa_x"]
+    delta = jnp.tanh(xx @ p["maa_w1"])  # (B,S,5*LORA)
+    B, S, _ = delta.shape
+    delta = delta.reshape(B, S, 5, LORA_MIX)
+    deltas = jnp.einsum("bsfl,fld->bsfd", delta, p["maa_w2"])  # (B,S,5,D)
+    base = p["maa_wkvrg"]  # (5, D)
+    mixed = x[:, :, None, :] + sx[:, :, None, :] * (base[None, None] + deltas)
+    return [mixed[:, :, i, :] for i in range(5)]
+
+
+def wkv_chunked(r, k, v, lw, u, init_state=None):
+    """r,k,v: (B,S,H,P); lw: (B,S,H,P) log-decay (<=0); u: (H,P).
+    Returns (out (B,S,H,P) f32, final_state (B,H,P,P))."""
+    B, S, H, P = r.shape
+    Q = max(1, min(CHUNK, S))
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+
+    r = r.astype(jnp.float32).reshape(B, nc, Q, H, P)
+    k = k.astype(jnp.float32).reshape(B, nc, Q, H, P)
+    v = v.astype(jnp.float32).reshape(B, nc, Q, H, P)
+    lw = lw.reshape(B, nc, Q, H, P)
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, P), jnp.float32)
+    strict = jnp.tril(jnp.ones((Q, Q), jnp.bool_), k=-1)
+
+    def body(state, xs):
+        rq, kq, vq, lwq = xs  # (B,Q,H,P)
+        clw = jnp.cumsum(lwq, axis=1)  # inclusive
+        # pairwise decay from s (exclusive) to t-1 (inclusive): clw_{t-1}-clw_s
+        clw_tm1 = jnp.concatenate(
+            [jnp.zeros_like(clw[:, :1]), clw[:, :-1]], axis=1)
+        diff = clw_tm1[:, :, None] - clw[:, None, :, :]  # (B,t,s,H,P)
+        E = jnp.exp(jnp.where(strict[None, :, :, None, None], diff, -jnp.inf))
+        A = jnp.einsum("bthp,bshp,btshp->btsh", rq, kq, E)
+        A = A + jnp.einsum("bthp,bthp->bth", rq, kq * u[None, None])[
+            :, :, None, :] * jnp.eye(Q, dtype=jnp.float32)[None, :, :, None]
+        out = jnp.einsum("btsh,bshp->bthp", A, vq)
+        # inter-chunk: state contribution decayed to t-1
+        out = out + jnp.einsum("bthp,bhpz->bthz", rq * jnp.exp(clw_tm1), state)
+        # state update: S_new = diag(exp(clw_Q)) S + sum_s k_s exp(clw_Q-clw_s) v_s^T
+        w_tail = jnp.exp(clw[:, -1:, :] - clw)  # (B,Q,H,P)
+        state_new = state * jnp.exp(clw[:, -1])[..., None] \
+            + jnp.einsum("bshp,bshz->bhpz", kq * w_tail, vq)
+        return state_new, out
+
+    state, outs = UR.scan(
+        body, init_state,
+        (r.transpose(1, 0, 2, 3, 4), k.transpose(1, 0, 2, 3, 4),
+         v.transpose(1, 0, 2, 3, 4), lw.transpose(1, 0, 2, 3, 4)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P), state
+
+
+def wkv_step(state, r, k, v, lw, u):
+    """Single token. r,k,v,lw: (B,1,H,P); state: (B,H,P,P)."""
+    r1, k1, v1 = (t[:, 0].astype(jnp.float32) for t in (r, k, v))
+    w1 = jnp.exp(lw[:, 0])
+    kv = jnp.einsum("bhp,bhz->bhpz", k1, v1)
+    out = jnp.einsum("bhp,bhpz->bhz", r1, state + u[None] [..., None] * kv)
+    state_new = state * w1[..., None] + kv
+    return out[:, None], state_new
+
+
+def rwkv6_block(x: jax.Array, p: dict, cfg: ModelConfig,
+                state: Optional[RWKVState] = None,
+                single_step: bool = False) -> Tuple[jax.Array, RWKVState]:
+    """One RWKV6 layer (time mix + channel mix), pre-norm residual.
+
+    p keys: ln1_w, ln2_w, maa_x, maa_w1 (D,5*LORA_MIX), maa_w2 (5,LORA_MIX,D),
+    maa_wkvrg (5,D), decay_base (D,), decay_w1 (D,LORA_DECAY),
+    decay_w2 (LORA_DECAY,D), u (H,P), wr/wk/wv/wg/wo (D,D), gn_w (D,),
+    cmix_mu_k (D,), cmix_mu_r (D,), cmix_k (D,F), cmix_v (F,D), cmix_r (D,D).
+    """
+    B, S, D = x.shape
+    H, P = cfg.ssm_num_heads, cfg.ssm_head_dim
+
+    # ---- time mix ----------------------------------------------------------
+    xn = rmsnorm(x, p["ln1_w"], cfg.norm_eps)
+    last_t = state.shift_t if state is not None else None
+    sx = _shift(xn, last_t) - xn
+    mw, mk, mv, mr, mg = _ddlerp(xn, sx, p)
+
+    lw = p["decay_base"].astype(jnp.float32) + jnp.tanh(
+        mw.astype(jnp.float32) @ p["decay_w1"].astype(jnp.float32)
+    ) @ p["decay_w2"].astype(jnp.float32)
+    # decay = exp(-exp(lw)); log-decay = -exp(lw), clamped for chunk stability
+    log_decay = jnp.clip(-jnp.exp(lw), LOG_DECAY_CLAMP, 0.0)
+    log_decay = log_decay.reshape(B, S, H, P)
+
+    r = (mr @ p["wr"]).reshape(B, S, H, P)
+    k = (mk @ p["wk"]).reshape(B, S, H, P)
+    v = (mv @ p["wv"]).reshape(B, S, H, P)
+    g = jax.nn.silu(mg @ p["wg"])
+
+    prev = state.wkv if state is not None else None
+    if single_step:
+        assert prev is not None
+        out, new_wkv = wkv_step(prev, r, k, v, log_decay, p["u"])
+    else:
+        out, new_wkv = wkv_chunked(r, k, v, log_decay, p["u"], init_state=prev)
+    out = out.reshape(B, S, D)
+    # per-head group norm
+    out = out.reshape(B, S, H, P)
+    mu = jnp.mean(out, axis=-1, keepdims=True)
+    var = jnp.var(out, axis=-1, keepdims=True)
+    out = ((out - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(B, S, D)
+    out = out * p["gn_w"].astype(jnp.float32)
+    x = x + ((out.astype(x.dtype) * g.astype(x.dtype)) @ p["wo"]).astype(x.dtype)
+    new_shift_t = xn[:, -1, :].astype(jnp.float32)
+
+    # ---- channel mix --------------------------------------------------------
+    xn2 = rmsnorm(x, p["ln2_w"], cfg.norm_eps)
+    last_c = state.shift_c if state is not None else None
+    sx2 = _shift(xn2, last_c) - xn2
+    xk = (xn2 + sx2 * p["cmix_mu_k"]).astype(x.dtype)
+    xr = (xn2 + sx2 * p["cmix_mu_r"]).astype(x.dtype)
+    kc = jnp.square(jax.nn.relu(xk @ p["cmix_k"]))
+    out_c = jax.nn.sigmoid(xr @ p["cmix_r"]) * (kc @ p["cmix_v"])
+    x = x + out_c.astype(x.dtype)
+    new_shift_c = xn2[:, -1, :].astype(jnp.float32)
+
+    return x, RWKVState(new_wkv, new_shift_t, new_shift_c)

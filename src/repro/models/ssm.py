@@ -1,0 +1,164 @@
+"""Mamba2 (SSD) blocks — chunked parallel scan for train/prefill, O(1)-state
+recurrent step for decode.
+
+Math (per head h, head dim P, state dim N, ngroups=1):
+    a_t     = exp(dt_t * A_h)                      (scalar decay per head/step)
+    state_t = a_t * state_{t-1} + dt_t * B_t (x) x_t^T    state: (N, P)
+    y_t     = C_t . state_t + D_h * x_t
+
+Chunked computation (chunk Q): intra-chunk is a masked attention-like matmul
+M[t,s] = (C_t.B_s) * exp(la_t - la_s) * dt_s (s <= t, exponent always <= 0 so
+it is numerically safe), inter-chunk carries the (B,H,N,P) state through a
+lax.scan. All SSD math runs in f32.
+
+Sharding: heads over the model axis (in_proj column-parallel, out_proj
+row-parallel -> one psum per block, Megatron-style), batch over data axes.
+Because B/C are shared across heads (ngroups=1) they are computed from a
+replicated slice of the projection.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import unroll as UR
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rmsnorm
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array   # (B, H, N, P) f32
+    conv: jax.Array  # (B, cw-1, conv_dim) — FIR tail for the causal conv
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.ssm_inner + 2 * cfg.ssm_state_dim
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal FIR conv. x: (B,S,Cd); w: (cw, Cd); b: (Cd,).
+    ``tail``: (B, cw-1, Cd) carry-in from the previous segment (decode).
+    Returns (y (B,S,Cd), new_tail)."""
+    B, S, Cd = x.shape
+    cw = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((B, cw - 1, Cd), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = jnp.zeros((B, S, Cd), jnp.float32)
+    for i in range(cw):  # cw is 4: cheap shifted adds, no conv primitive needed
+        y = y + xp[:, i:i + S].astype(jnp.float32) * w[i].astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    new_tail = xp[:, S:S + cw - 1] if cw > 1 else tail
+    return jax.nn.silu(y).astype(x.dtype), new_tail
+
+
+def ssd_chunked(xh: jax.Array, dt: jax.Array, A_log: jax.Array,
+                Bc: jax.Array, Cc: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None):
+    """Chunked SSD. xh: (B,S,H,P); dt: (B,S,H) f32 (post-softplus);
+    A_log: (H,); Bc/Cc: (B,S,N). Returns (y (B,S,H,P) f32, final_state)."""
+    B, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    chunk = max(1, min(chunk, S))
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+    a = (dt * (-jnp.exp(A_log.astype(jnp.float32)))[None, None, :])  # (B,S,H) <= 0
+
+    xr = xh.astype(jnp.float32).reshape(B, nc, chunk, H, P)
+    dtr = dt.reshape(B, nc, chunk, H)
+    ar = a.reshape(B, nc, chunk, H)
+    Br = Bc.astype(jnp.float32).reshape(B, nc, chunk, N)
+    Cr = Cc.astype(jnp.float32).reshape(B, nc, chunk, N)
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, N, P), jnp.float32)
+
+    tril = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+
+    def body(state, xs):
+        xq, dtq, aq, Bq, Cq = xs  # leading dim = B (scan over chunks)
+        la = jnp.cumsum(aq, axis=1)  # (B,Q,H) inclusive
+        # intra-chunk: M[t,s,h] = (C_t.B_s) exp(la_t - la_s) dt_s  (s<=t)
+        # mask the exponent BEFORE exp: masked (s>t) pairs have positive
+        # exponents that overflow and would poison gradients through where.
+        CB = jnp.einsum("btn,bsn->bts", Cq, Bq)
+        expo = la[:, :, None, :] - la[:, None, :, :]  # (B,t,s,H)
+        expo = jnp.where(tril[None, :, :, None], expo, -jnp.inf)
+        M = CB[..., None] * jnp.exp(expo) * dtq[:, None, :, :]
+        y_intra = jnp.einsum("btsh,bshp->bthp", M, xq)
+        # inter-chunk: y_inter[t] = exp(la_t) * C_t . state
+        y_inter = jnp.einsum("btn,bhnp,bth->bthp", Cq, state, jnp.exp(la))
+        # state update
+        w_in = jnp.exp(la[:, -1:, :] - la) * dtq  # (B,Q,H)
+        state_add = jnp.einsum("bsn,bshp,bsh->bhnp", Bq, xq, w_in)
+        state_new = state * jnp.exp(la[:, -1, :])[:, :, None, None] + state_add
+        return state_new, y_intra + y_inter
+
+    state, ys = UR.scan(
+        body, init_state,
+        (xr.transpose(1, 0, 2, 3, 4), dtr.transpose(1, 0, 2, 3),
+         ar.transpose(1, 0, 2, 3), Br.transpose(1, 0, 2, 3),
+         Cr.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y, state
+
+
+def ssd_step(state: jax.Array, xh: jax.Array, dt: jax.Array, A_log: jax.Array,
+             Bc: jax.Array, Cc: jax.Array):
+    """Single-token SSD step. xh: (B,1,H,P); dt: (B,1,H); Bc/Cc: (B,1,N).
+    state: (B,H,N,P). Returns (y (B,1,H,P) f32, new_state)."""
+    a = jnp.exp(dt[:, 0] * (-jnp.exp(A_log.astype(jnp.float32)))[None, :])  # (B,H)
+    upd = jnp.einsum("bn,bhp,bh->bhnp", Bc[:, 0].astype(jnp.float32),
+                     xh[:, 0].astype(jnp.float32), dt[:, 0])
+    state_new = state * a[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cc[:, 0].astype(jnp.float32), state_new)
+    return y[:, None], state_new
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block (projections + conv + SSD + gate + norm)
+# ---------------------------------------------------------------------------
+
+def mamba2_block(x: jax.Array, p: dict, cfg: ModelConfig,
+                 state: Optional[MambaState] = None,
+                 single_step: bool = False):
+    """x: (B,S,D). p keys: in_proj (D, 2*inner+2N+H), conv_w (cw, inner+2N),
+    conv_b, A_log (H,), D_skip (H,), dt_bias (H,), norm_w (inner,),
+    out_proj (inner, D). Returns (y, new_state)."""
+    B, S, D = x.shape
+    inner, N, H = cfg.ssm_inner, cfg.ssm_state_dim, cfg.ssm_num_heads
+    P = cfg.ssm_head_dim
+
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :inner]
+    xbc = zxbcdt[..., inner: inner + inner + 2 * N]
+    dt_raw = zxbcdt[..., inner + inner + 2 * N:]
+
+    tail = state.conv if state is not None else None
+    xbc, new_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], tail)
+    xc = xbc[..., :inner]
+    Bc = xbc[..., inner: inner + N]
+    Cc = xbc[..., inner + N:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    xh = xc.reshape(B, S, H, P)
+
+    prev = state.ssm if state is not None else None
+    if single_step:
+        assert prev is not None
+        y, new_ssm = ssd_step(prev, xh, dt, p["A_log"], Bc, Cc)
+    else:
+        y, new_ssm = ssd_chunked(xh, dt, p["A_log"], Bc, Cc, cfg.ssm_chunk,
+                                 init_state=prev)
+    y = y + p["D_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(B, S, inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], MambaState(new_ssm, new_tail)

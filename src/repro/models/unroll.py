@@ -1,0 +1,53 @@
+"""Scan indirection for roofline calibration.
+
+XLA's cost_analysis() counts a while-loop body ONCE, regardless of trip
+count, so every scan-over-layers / scan-over-chunks model would report
+~1/L of its FLOPs.  The roofline calibrator therefore lowers *unrolled*
+reduced-size variants (small L, small S) where cost_analysis is exact, and
+extrapolates analytically (launch/roofline.py).
+
+Production code paths always take the lax.scan branch — ``unrolled()`` is
+only entered by the calibration tool.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+
+_UNROLL = False
+
+
+@contextlib.contextmanager
+def unrolled():
+    global _UNROLL
+    old = _UNROLL
+    _UNROLL = True
+    try:
+        yield
+    finally:
+        _UNROLL = old
+
+
+def active() -> bool:
+    return _UNROLL
+
+
+def scan(body, init, xs, length=None):
+    if not _UNROLL:
+        return jax.lax.scan(body, init, xs, length=length)
+    n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(int(n)):
+        xi = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if not ys:
+        return carry, None
+    leaves = jax.tree.leaves(ys[0])
+    if not leaves:          # ys are None / empty pytrees
+        return carry, None
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked

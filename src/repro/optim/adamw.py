@@ -1,0 +1,89 @@
+"""AdamW with sharded states, warmup+cosine schedule, global-norm clipping.
+
+States live in the same PartitionSpec tree as the params (FSDP shards both),
+so optimizer memory scales down with the data axis.  No-decay mask covers
+norms/biases/1-D params (standard).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # () int32
+    m: Dict
+    v: Dict
+
+
+def adamw_init(params: Dict) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_abstract(params: Dict) -> AdamWState:
+    """ShapeDtypeStruct state tree (dry-run lowering)."""
+    z = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+    return AdamWState(jax.ShapeDtypeStruct((), jnp.int32), z,
+                      jax.tree.map(lambda x: x, z))
+
+
+def cosine_schedule(cfg: TrainConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def clip_by_global_norm(grads: Dict, max_norm: float = 1.0
+                        ) -> Tuple[Dict, jax.Array]:
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def _decay_mask(params: Dict) -> Dict:
+    return jax.tree.map(lambda p: float(p.ndim >= 2), params)
+
+
+def adamw_update(params: Dict, grads: Dict, state: AdamWState,
+                 cfg: TrainConfig, *, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8) -> Tuple[Dict, AdamWState, Dict]:
+    grads, gnorm = clip_by_global_norm(grads)
+    step = state.step + 1
+    lr = cosine_schedule(cfg, step)
+    mask = _decay_mask(params)
+
+    def upd(p, g, m, v, wd_on):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mhat = m_new / (1 - b1 ** step)
+        vhat = v_new / (1 - b2 ** step)
+        delta = mhat / (jnp.sqrt(vhat) + eps) \
+            + cfg.weight_decay * wd_on * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), \
+            m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_mask = treedef.flatten_up_to(mask)
+    outs = [upd(p, g, m, v, w) for p, g, m, v, w in
+            zip(flat_p, flat_g, flat_m, flat_v, flat_mask)]
+    new_p = treedef.unflatten([o[0] for o in outs])
+    new_m = treedef.unflatten([o[1] for o in outs])
+    new_v = treedef.unflatten([o[2] for o in outs])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step, new_m, new_v), metrics

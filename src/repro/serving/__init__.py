@@ -1,0 +1,4 @@
+from repro.serving.engine import ServingEngine, Request, RoIPrefillResult
+from repro.serving.detector import RoIDetector
+
+__all__ = ["ServingEngine", "Request", "RoIPrefillResult", "RoIDetector"]

@@ -1,0 +1,89 @@
+"""RoI-YOLO-lite: a small conv detector running on active tiles only.
+
+The online-phase server model (paper §4.4): a YOLO-style backbone where
+every conv layer runs through the fused roi_conv Pallas kernel over the
+RoI-active tiles.  Dense fallback (the paper loads both models and routes
+large-RoI frames to dense YOLO) selected by the density switch.
+
+FLOP accounting drives the speedup model used in the system benchmarks:
+  dense cost  ~ H*W * sum(9*Cin*Cout)
+  roi cost    ~ n_active*th*tw * sum(9*Cin*Cout)  + gather/scatter bytes
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+
+@dataclass
+class DetectorConfig:
+    channels: Tuple[int, ...] = (8, 16, 16)   # conv stack (YOLO-lite)
+    tile: int = 16                            # feature-map tile (TPU block)
+    num_anchors: int = 2
+    switch_density: float = 0.70
+
+
+class RoIDetector:
+    """params: conv stack + 1x1 head; built for (H, W, 3) frames."""
+
+    def __init__(self, cfg: DetectorConfig, key: jax.Array):
+        self.cfg = cfg
+        chans = (3,) + cfg.channels
+        self.weights: List[jax.Array] = []
+        for i, (ci, co) in enumerate(zip(chans[:-1], chans[1:])):
+            k = jax.random.fold_in(key, i)
+            w = jax.random.normal(k, (3, 3, ci, co), jnp.float32)
+            self.weights.append(w / np.sqrt(9 * ci))
+        kh = jax.random.fold_in(key, 99)
+        # head: objectness + 4 bbox regressors per anchor
+        self.head = jax.random.normal(
+            kh, (chans[-1], cfg.num_anchors * 5), jnp.float32) \
+            / np.sqrt(chans[-1])
+
+    # -- dense path ----------------------------------------------------------
+    def dense_forward(self, x: jax.Array) -> jax.Array:
+        for w in self.weights:
+            x = jax.nn.relu(jax.lax.conv_general_dilated(
+                x[None], w, (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))[0])
+        return x @ self.head
+
+    # -- RoI path -------------------------------------------------------------
+    def roi_forward(self, x: jax.Array, grid: np.ndarray) -> jax.Array:
+        """x: (H, W, 3); grid: bool tile mask at self.cfg.tile granularity.
+        Returns the full-frame head map with non-RoI regions zero."""
+        t = self.cfg.tile
+        idx = jnp.asarray(kops.mask_to_indices(grid))
+        for li, w in enumerate(self.weights):
+            packed = kops.roi_conv(x, w, idx, t, t)
+            packed = jax.nn.relu(packed)
+            base = jnp.zeros(x.shape[:2] + (w.shape[-1],), packed.dtype)
+            # scatter back so the next layer's halos see neighbor tiles
+            x = kops.sbnet_scatter(packed, idx, base)
+        return x @ self.head
+
+    def forward(self, x: jax.Array, grid: Optional[np.ndarray]) -> jax.Array:
+        if grid is None or grid.mean() >= self.cfg.switch_density:
+            return self.dense_forward(x)
+        return self.roi_forward(x, grid)
+
+    # -- cost model -------------------------------------------------------------
+    def flops(self, H: int, W: int, density: float = 1.0) -> float:
+        chans = (3,) + self.cfg.channels
+        per_px = sum(2 * 9 * ci * co for ci, co in zip(chans[:-1], chans[1:]))
+        per_px += 2 * chans[-1] * self.cfg.num_anchors * 5
+        return H * W * density * per_px
+
+    def speedup_estimate(self, density: float,
+                         gather_overhead: float = 0.30) -> float:
+        """Structural speedup (FLOP ratio with gather/scatter byte tax):
+        matches the ServerModel constant used by the system pipeline."""
+        if density >= self.cfg.switch_density:
+            return 1.0
+        return 1.0 / (gather_overhead + density)

@@ -1,0 +1,3 @@
+from repro.train.loop import TrainState, make_train_step, train
+
+__all__ = ["TrainState", "make_train_step", "train"]

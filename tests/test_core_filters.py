@@ -1,0 +1,89 @@
+"""Statistical filters: RANSAC regression + kernel SVM (own implementations)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.filters import (KernelSVM, RansacConfig, SVMConfig,
+                                poly_features, ransac_regression)
+
+
+def test_poly_features_shape():
+    X = np.random.default_rng(0).normal(size=(10, 4))
+    F = poly_features(X, 2)
+    assert F.shape == (10, 1 + 4 + 10)  # bias + linear + upper-tri quad
+    assert np.allclose(F[:, 0], 1.0)
+
+
+def test_ransac_recovers_linear_map_with_outliers():
+    rng = np.random.default_rng(1)
+    n = 400
+    src = rng.uniform(0, 1000, size=(n, 4))
+    A = rng.normal(size=(4, 4)) * 0.5 + np.eye(4)
+    dst = src @ A + rng.normal(scale=1.0, size=(n, 4))
+    out_idx = rng.choice(n, 60, replace=False)
+    dst[out_idx] += rng.uniform(300, 900, size=(60, 4))
+    res = ransac_regression(src, dst, RansacConfig(theta=0.2))
+    flagged = set(np.nonzero(~res.inlier)[0])
+    assert set(out_idx) <= flagged            # every gross outlier caught
+    assert len(flagged) <= 60 + int(0.1 * n)  # few true pairs sacrificed
+
+
+def test_ransac_small_sample_passthrough():
+    src = np.random.default_rng(0).normal(size=(5, 4))
+    dst = src.copy()
+    res = ransac_regression(src, dst, RansacConfig())
+    assert res.inlier.all()
+    assert res.coef is None
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.05, 0.5))
+def test_ransac_clean_data_keeps_most(seed, noise):
+    """Property: with no planted outliers, RANSAC keeps >=90% of samples."""
+    rng = np.random.default_rng(seed)
+    src = rng.uniform(0, 500, size=(200, 4))
+    dst = src * 1.5 + 20 + rng.normal(scale=noise, size=(200, 4))
+    res = ransac_regression(src, dst, RansacConfig(theta=0.2))
+    assert res.inlier.mean() >= 0.9
+
+
+def test_svm_separable_blobs():
+    rng = np.random.default_rng(2)
+    pos = rng.normal(loc=(300, 300, 120, 90), scale=25, size=(150, 4))
+    neg = rng.normal(loc=(1200, 800, 60, 45), scale=25, size=(400, 4))
+    X = np.concatenate([pos, neg])
+    y = np.concatenate([np.ones(150), np.zeros(400)])
+    svm = KernelSVM(SVMConfig(gamma=1e-4)).fit(X, y)
+    pred = svm.predict(X)
+    assert (pred[:150]).mean() > 0.97
+    assert (~pred[150:]).mean() > 0.97
+
+
+def test_svm_flags_fn_island_inside_positive_region():
+    """Negatives embedded in the positive cluster must be classified
+    positive (the FN-suspect mechanism the filter relies on)."""
+    rng = np.random.default_rng(3)
+    pos = rng.normal(loc=(300, 300, 120, 90), scale=30, size=(200, 4))
+    fn = rng.normal(loc=(300, 300, 120, 90), scale=30, size=(60, 4))
+    tn = rng.normal(loc=(1400, 900, 50, 40), scale=40, size=(500, 4))
+    X = np.concatenate([pos, fn, tn])
+    y = np.concatenate([np.ones(200), np.zeros(60), np.zeros(500)])
+    svm = KernelSVM(SVMConfig(gamma=1e-4)).fit(X, y)
+    pred = svm.predict(X)
+    assert pred[200:260].mean() > 0.8     # FN island lands positive
+    assert (~pred[260:]).mean() > 0.95    # far TNs stay negative
+
+
+def test_svm_gamma_extremes():
+    """Tiny gamma: smooth boundary, FN island absorbed. The non-linearity
+    sweep (paper Fig 9) is exercised end-to-end in benchmarks."""
+    rng = np.random.default_rng(4)
+    pos = rng.normal(loc=(400, 400, 100, 80), scale=30, size=(150, 4))
+    tn = rng.normal(loc=(1200, 700, 60, 50), scale=40, size=(300, 4))
+    X = np.concatenate([pos, tn])
+    y = np.concatenate([np.ones(150), np.zeros(300)])
+    lo = KernelSVM(SVMConfig(gamma=1e-6)).fit(X, y)
+    hi = KernelSVM(SVMConfig(gamma=1e-2)).fit(X, y)
+    # both still separate the far blobs
+    assert lo.predict(X[:150]).mean() > 0.9
+    assert hi.predict(X[:150]).mean() > 0.9

@@ -1,0 +1,64 @@
+"""Tile grouping: largest-inscribed-rectangle DP + greedy merge (paper §4.3.2)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.grouping import TileGroup, _largest_rectangle, group_tiles, \
+    groups_cover
+
+
+def test_paper_figure5_structure():
+    """6x5 grid from Fig 5: an L/step-shaped RoI merges into 3 rectangles."""
+    grid = np.zeros((5, 6), bool)
+    grid[1:5, 0:3] = True      # 12-tile block (region 1 in the figure)
+    grid[1:3, 3] = True        # 2-tile column
+    grid[3:5, 4] = True        # 2-tile column elsewhere
+    groups = group_tiles(grid)
+    assert groups_cover(grid, groups)
+    assert len(groups) == 3
+    assert max(g.num_tiles for g in groups) == 12
+
+
+def test_full_grid_single_group():
+    grid = np.ones((7, 9), bool)
+    groups = group_tiles(grid)
+    assert len(groups) == 1
+    assert groups[0] == TileGroup(0, 0, 7, 9)
+
+
+def test_empty_grid():
+    assert group_tiles(np.zeros((4, 4), bool)) == []
+
+
+def test_largest_rectangle_histogram():
+    grid = np.array([
+        [1, 1, 0, 1],
+        [1, 1, 1, 1],
+        [1, 1, 1, 0],
+    ], dtype=bool)
+    area, g = _largest_rectangle(grid)
+    assert area == 6
+    assert (g.h, g.w) == (3, 2) and (g.y0, g.x0) == (0, 0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(hnp.arrays(bool, hnp.array_shapes(min_dims=2, max_dims=2,
+                                         min_side=1, max_side=14)))
+def test_grouping_invariants(grid):
+    """Property: groups exactly tile the mask, disjointly; count <= popcount;
+    greedy's first rectangle is the global largest."""
+    groups = group_tiles(grid)
+    assert groups_cover(grid, groups)
+    assert len(groups) <= int(grid.sum())
+    if groups:
+        area0, _ = _largest_rectangle(grid)
+        assert groups[0].num_tiles == area0
+
+
+@settings(max_examples=30, deadline=None)
+@given(hnp.arrays(bool, (8, 8)))
+def test_grouping_reduces_or_equals_tile_count(grid):
+    """Merging never produces more groups than raw tiles (compression
+    efficacy motivation, Table 3)."""
+    groups = group_tiles(grid)
+    assert sum(g.num_tiles for g in groups) == int(grid.sum())

@@ -1,0 +1,116 @@
+"""Set-cover RoI optimization: paper worked example + solver cross-checks."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.association import AssociationTable, Region, TileUniverse
+from repro.core.geometry import Camera
+from repro.core import setcover
+
+
+def _universe_2cam():
+    # two 6x4 = 24-tile cameras as in paper Figure 2 (tiles 1..24 -> 0..23)
+    P = np.eye(3, 4)
+    cams = [Camera(0, 6 * 64, 4 * 64, P), Camera(1, 6 * 64, 4 * 64, P)]
+    return TileUniverse.build(cams)
+
+
+def _tiles(cam, *one_based):
+    """Paper's 1-based tile ids -> global ids (cam offset + 0-based)."""
+    return frozenset((cam * 24) + (t - 1) for t in one_based)
+
+
+def paper_table1() -> AssociationTable:
+    """The exact association lookup-table of paper Table 1 / Figure 2."""
+    uni = _universe_2cam()
+    constraints = [
+        # O1 appears in both cameras
+        [Region(0, _tiles(0, 9, 10, 15, 16)), Region(1, _tiles(1, 7, 8, 13, 14))],
+        [Region(0, _tiles(0, 3, 4, 9, 10))],        # O2
+        [Region(0, _tiles(0, 4, 5, 10, 11))],       # O3
+        [Region(0, _tiles(0, 11))],                 # O4
+        [Region(1, _tiles(1, 2, 8))],               # O5
+        [Region(1, _tiles(1, 3))],                  # O6
+        [Region(1, _tiles(1, 3, 9))],               # O7
+    ]
+    keys = [(0, k) for k in range(1, 8)]
+    return AssociationTable(uni, constraints, keys)
+
+
+EXPECTED_MASK = (_tiles(0, 3, 4, 5, 9, 10, 11, 15, 16)
+                 | _tiles(1, 2, 3, 8, 9))  # §3.3: the 12-tile optimum
+
+
+@pytest.mark.parametrize("method", ["greedy", "exact", "milp"])
+def test_paper_worked_example(method):
+    table = paper_table1()
+    res = setcover.solve(table, method)
+    # the paper's optimum has 12 tiles; O1 covered via its C1 appearance
+    assert len(res.mask) == 12
+    assert res.mask == EXPECTED_MASK
+
+
+def test_exact_is_certified_optimal():
+    res = setcover.solve(paper_table1(), "exact")
+    assert res.optimal
+    assert len(res.mask) >= res.lower_bound - 1e-6
+
+
+def _satisfies(mask, constraints):
+    return all(any(r.tiles <= mask for r in regions) for regions in constraints)
+
+
+@st.composite
+def random_instance(draw):
+    n_tiles = draw(st.integers(6, 30))
+    n_cons = draw(st.integers(1, 12))
+    constraints = []
+    for _ in range(n_cons):
+        n_regions = draw(st.integers(1, 3))
+        regions = []
+        for _ in range(n_regions):
+            size = draw(st.integers(1, 5))
+            tiles = draw(st.sets(st.integers(0, n_tiles - 1),
+                                 min_size=size, max_size=size))
+            regions.append(Region(0, frozenset(tiles)))
+        constraints.append(regions)
+    return constraints
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_instance())
+def test_solvers_agree_and_satisfy(constraints):
+    uni = _universe_2cam()
+    table = AssociationTable(uni, constraints, [(0, i) for i in
+                                                range(len(constraints))])
+    g = setcover.solve(table, "greedy")
+    e = setcover.solve(table, "exact")
+    m = setcover.solve(table, "milp")
+    for res in (g, e, m):
+        assert _satisfies(res.mask, constraints), res.method
+    assert len(e.mask) <= len(g.mask)
+    assert len(e.mask) == len(m.mask)       # both exact
+    assert len(e.mask) >= e.lower_bound - 1e-6
+
+
+def test_preprocess_forces_singletons():
+    cons = [[Region(0, frozenset({1, 2}))],
+            [Region(0, frozenset({2, 3})), Region(0, frozenset({9}))]]
+    core = setcover.preprocess(cons)
+    assert core.forced == {1, 2}
+    # second constraint still open with residuals {3} vs {9}
+    assert len(core.constraints) == 1
+    assert sorted(map(len, core.constraints[0])) == [1, 1]
+
+
+def test_preprocess_dedups_and_drops_dominated():
+    r = Region(0, frozenset({1, 2}))
+    r_sup = Region(0, frozenset({1, 2, 3}))
+    other = Region(0, frozenset({7}))
+    cons = [[r, r_sup, other], [r, other], [other, r]]
+    core = setcover.preprocess(cons)
+    # all three dedup to one constraint; the superset region is dropped
+    total = len(core.constraints)
+    assert total == 1
+    assert frozenset({1, 2}) in core.constraints[0]
+    assert frozenset({1, 2, 3}) not in core.constraints[0]

@@ -1,0 +1,54 @@
+"""AdamW, schedule, clipping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.optim.adamw import (adamw_init, adamw_update, clip_by_global_norm,
+                               cosine_schedule)
+
+
+def test_adamw_minimizes_quadratic():
+    tcfg = TrainConfig(learning_rate=0.1, weight_decay=0.0,
+                       warmup_steps=5, total_steps=200)
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(4, 4)))
+    params = {"w": jnp.zeros((4, 4))}
+    state = adamw_init(params)
+
+    def loss_fn(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for _ in range(150):
+        grads = jax.grad(loss_fn)(params)
+        params, state, _ = adamw_update(params, grads, state, tcfg)
+    assert float(loss_fn(params)) < 1e-2
+
+
+def test_schedule_warmup_and_decay():
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(cosine_schedule(tcfg, jnp.asarray(s))) for s in
+           (0, 5, 10, 50, 100)]
+    assert lrs[0] == 0.0
+    assert lrs[1] < lrs[2]
+    assert abs(lrs[2] - 1e-3) < 1e-9          # peak at end of warmup
+    assert lrs[3] < lrs[2]
+    assert abs(lrs[4] - 1e-4) < 1e-9          # floor = 0.1 * peak
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0), "b": jnp.full((10,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, max_norm=1.0)
+    assert abs(float(gn) - np.sqrt(2000.0)) < 1e-3
+    total = sum(float(jnp.sum(x ** 2)) for x in jax.tree.leaves(clipped))
+    assert abs(total - 1.0) < 1e-4
+
+
+def test_weight_decay_mask_skips_1d():
+    tcfg = TrainConfig(learning_rate=0.0, weight_decay=1.0)
+    # lr=0: params must not move regardless of decay
+    params = {"w": jnp.ones((3, 3)), "norm": jnp.ones((3,))}
+    state = adamw_init(params)
+    grads = jax.tree.map(jnp.zeros_like, params)
+    new_p, _, _ = adamw_update(params, grads, state, tcfg)
+    assert jnp.allclose(new_p["w"], params["w"])
+    assert jnp.allclose(new_p["norm"], params["norm"])

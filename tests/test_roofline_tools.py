@@ -1,0 +1,107 @@
+"""Launch-layer units: HLO collective parsing, roofline fits, memory
+estimator, auto-microbatch policy, stream pipeline."""
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, ShapeCell
+from repro.configs.registry import get_config
+from repro.launch import roofline as R
+
+
+# ---------------------------------------------------------------------------
+# collective-bytes HLO parsing
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+  %all-reduce.1 = f32[128,1024]{1,0} all-reduce(%dot), channel_id=1
+  %ag = bf16[64,512]{1,0} all-gather(%p0), dimensions={0}
+  %rs.3 = bf16[32,512]{1,0} reduce-scatter(%x), dimensions={0}
+  %a2a = (f32[16,8]{1,0}, f32[16,8]{1,0}) all-to-all(%a, %b)
+  %cp = u32[4,4]{1,0} collective-permute(%y)
+  %dot.5 = f32[10,10]{1,0} dot(%a, %b)
+"""
+
+
+def test_collective_bytes_kinds():
+    out = R.collective_bytes(HLO_SAMPLE)
+    assert out["all-reduce"] == 128 * 1024 * 4 * 2       # ring: 2x
+    assert out["all-gather"] == 64 * 512 * 2
+    assert out["reduce-scatter"] == 32 * 512 * 2
+    assert out["all-to-all"] == 2 * 16 * 8 * 4
+    assert out["collective-permute"] == 4 * 4 * 4
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_collective_bytes_ignores_compute():
+    assert R.collective_bytes("%d = f32[8,8]{1,0} dot(%a, %b)")["total"] == 0
+
+
+# ---------------------------------------------------------------------------
+# calibration fits
+# ---------------------------------------------------------------------------
+
+def test_extrapolate_linear():
+    # cost(L) = 7L + 3
+    assert R.extrapolate(10, 17, 1, 2, 10) == pytest.approx(73)
+
+
+def test_calib_depth_structures():
+    g = get_config("gemma3-27b")
+    l1, l2 = R.calib_depths(g)
+    assert l1 == g.global_every and l2 == 2 * g.global_every
+    z = get_config("zamba2-2.7b")
+    l1, l2 = R.calib_depths(z)
+    assert l1 % z.attn_every == 0
+    m = get_config("deepseek-moe-16b")
+    l1, l2 = R.calib_depths(m)
+    assert l1 > m.first_dense_layers
+
+
+def test_with_depth_preserves_structure():
+    cfg = get_config("gemma3-27b")
+    small = R.with_depth(cfg, cfg.global_every)
+    assert small.num_layers == cfg.global_every
+    w = get_config("whisper-small")
+    ws = R.with_depth(w, 2)
+    assert ws.encoder_layers == 2 and ws.decoder_layers == 2
+
+
+def test_model_flops_modes():
+    cfg = get_config("deepseek-67b")
+    train = R.model_flops_for(cfg, SHAPES["train_4k"])
+    prefill = R.model_flops_for(cfg, SHAPES["prefill_32k"])
+    decode = R.model_flops_for(cfg, SHAPES["decode_32k"])
+    assert train == pytest.approx(6 * cfg.param_count() * 256 * 4096, rel=.01)
+    assert prefill == pytest.approx(2 * cfg.param_count() * 32 * 32768,
+                                    rel=.01)
+    assert decode == pytest.approx(2 * cfg.param_count() * 128, rel=.01)
+
+
+def test_moe_model_flops_use_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    assert cfg.active_param_count() < 0.2 * cfg.param_count()
+    f = R.model_flops_for(cfg, SHAPES["train_4k"])
+    assert f == pytest.approx(6 * cfg.active_param_count() * 256 * 4096,
+                              rel=.01)
+
+
+# ---------------------------------------------------------------------------
+# stream pipeline
+# ---------------------------------------------------------------------------
+
+def test_stream_pipeline_keep_matches_masks():
+    from repro.core import OfflineConfig, run_offline
+    from repro.core.scene import SceneConfig, generate_scene
+    from repro.data.streams import CameraStreamPipeline
+    scene = generate_scene(SceneConfig(duration_s=40, seed=1))
+    off = run_offline(scene, OfflineConfig(profile_frames=300,
+                                           solver="greedy"))
+    pipe = CameraStreamPipeline(scene, off, patch_dim=8)
+    seg = next(pipe.segments(300, 310))
+    assert 0.0 < seg.keep_fraction < 1.0
+    toks, keep = pipe.fleet_tokens(seg, 0)
+    assert toks.shape[0] == keep.shape[0]
+    n_tiles = sum(int(g.size) for g in off.cam_grids.values())
+    assert toks.shape[0] == n_tiles
+    n_mask = sum(int(g.sum()) for g in off.cam_grids.values())
+    assert int(keep.sum()) == n_mask

@@ -1,0 +1,105 @@
+"""Chunked SSD / WKV vs. step-by-step recurrent oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.ssm import ssd_chunked, ssd_step
+from repro.models.rwkv import wkv_chunked, wkv_step
+
+
+def ssd_naive(xh, dt, A_log, Bc, Cc):
+    B, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    state = jnp.zeros((B, H, N, P))
+    ys = []
+    for t in range(S):
+        y, state = ssd_step(state, xh[:, t:t+1], dt[:, t:t+1], A_log,
+                            Bc[:, t:t+1], Cc[:, t:t+1])
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), state
+
+
+@pytest.mark.parametrize("chunk", [1, 4, 8, 32])
+def test_ssd_chunked_matches_recurrence(chunk):
+    key = jax.random.PRNGKey(0)
+    B, S, H, P, N = 2, 32, 3, 4, 5
+    ks = jax.random.split(key, 5)
+    xh = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A_log = jax.random.normal(ks[2], (H,)) * 0.5
+    Bc = jax.random.normal(ks[3], (B, S, N))
+    Cc = jax.random.normal(ks[4], (B, S, N))
+    y, st = ssd_chunked(xh, dt, A_log, Bc, Cc, chunk)
+    y_ref, st_ref = ssd_naive(xh, dt, A_log, Bc, Cc)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_init_state_carries():
+    key = jax.random.PRNGKey(1)
+    B, S, H, P, N = 1, 16, 2, 4, 3
+    ks = jax.random.split(key, 5)
+    xh = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A_log = jax.random.normal(ks[2], (H,)) * 0.5
+    Bc = jax.random.normal(ks[3], (B, S, N))
+    Cc = jax.random.normal(ks[4], (B, S, N))
+    y_all, st_all = ssd_chunked(xh, dt, A_log, Bc, Cc, 4)
+    y1, st1 = ssd_chunked(xh[:, :8], dt[:, :8], A_log, Bc[:, :8], Cc[:, :8], 4)
+    y2, st2 = ssd_chunked(xh[:, 8:], dt[:, 8:], A_log, Bc[:, 8:], Cc[:, 8:], 4,
+                          init_state=st1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_all), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_all),
+                               atol=1e-4, rtol=1e-4)
+
+
+def wkv_naive(r, k, v, lw, u):
+    B, S, H, P = r.shape
+    state = jnp.zeros((B, H, P, P))
+    outs = []
+    for t in range(S):
+        o, state = wkv_step(state, r[:, t:t+1], k[:, t:t+1], v[:, t:t+1],
+                            lw[:, t:t+1], u)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1), state
+
+
+@pytest.mark.parametrize("S", [16, 31, 32, 48])
+def test_wkv_chunked_matches_recurrence(S):
+    key = jax.random.PRNGKey(2)
+    B, H, P = 2, 2, 4
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, S, H, P))
+    k = jax.random.normal(ks[1], (B, S, H, P))
+    v = jax.random.normal(ks[2], (B, S, H, P))
+    lw = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H, P)))  # <=0
+    u = jax.random.normal(ks[4], (H, P))
+    out, st = wkv_chunked(r, k, v, lw, u)
+    ref, st_ref = wkv_naive(r, k, v, lw, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_wkv_state_carries():
+    key = jax.random.PRNGKey(3)
+    B, S, H, P = 1, 32, 2, 4
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, S, H, P))
+    k = jax.random.normal(ks[1], (B, S, H, P))
+    v = jax.random.normal(ks[2], (B, S, H, P))
+    lw = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H, P)))
+    u = jax.random.normal(ks[4], (H, P))
+    out_all, st_all = wkv_chunked(r, k, v, lw, u)
+    o1, s1 = wkv_chunked(r[:, :16], k[:, :16], v[:, :16], lw[:, :16], u)
+    o2, s2 = wkv_chunked(r[:, 16:], k[:, 16:], v[:, 16:], lw[:, 16:], u,
+                         init_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
+                               np.asarray(out_all), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(st_all),
+                               atol=1e-4, rtol=1e-4)

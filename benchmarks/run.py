@@ -1,21 +1,76 @@
 """Benchmark driver: one benchmark per paper table/figure + roofline.
 
   PYTHONPATH=src python -m benchmarks.run [--only reid,ablations,...]
+  PYTHONPATH=src python -m benchmarks.run --quick
+
+``--quick`` is the CI smoke mode: it runs bench_kernels on reduced shapes,
+asserts the structural invariants of the stay-packed hot path (FLOP ratio,
+one-gather/one-scatter dispatch structure, exact block-skip attention),
+and writes ``BENCH_kernels.json`` at the repo root so the perf trajectory
+accumulates across commits.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 BENCHES = ["reid", "compression", "ablations", "sensitivity", "reducto",
            "kernels", "roofline"]
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def quick():
+    from benchmarks import bench_kernels
+    t0 = time.time()
+    payload = bench_kernels.run(verbose=True, quick=True)
+
+    # structural invariants of the stay-packed execution model
+    density = payload["mask_density_540p"]
+    assert abs(payload["flop_ratio"] - density) < 1e-9, \
+        "RoI FLOP ratio must equal mask density"
+    assert payload["flop_ratio"] < 0.7, \
+        f"RoI mask should cut conv FLOPs (got ratio {payload['flop_ratio']})"
+    n_layers = payload["num_conv_layers"]
+    counts = payload["kernel_dispatches"]
+    # amortization check derived from the OBSERVED dispatch structure: a
+    # regression to per-layer scatter/gather shows up as extra round-trips
+    round_trips = (counts.get("roi_conv", 0) + counts.get("sbnet_gather", 0)
+                   + counts.get("sbnet_scatter", 0)) / 2
+    observed = payload["io_round_trip_overhead"] * round_trips / n_layers
+    assert observed <= 0.30 / n_layers + 1e-9, \
+        f"gather/scatter tax must amortize to <= 0.30/N per layer " \
+        f"(observed {round_trips} round-trips over {n_layers} layers)"
+    assert counts.get("roi_conv", 0) == 1, counts
+    assert counts.get("sbnet_scatter", 0) == 1, counts
+    assert counts.get("sbnet_gather", 0) == 0, counts
+    assert counts.get("roi_conv_packed", 0) == n_layers - 1, counts
+    assert payload["roi_conv_interior_err"] <= 1e-4, payload
+    assert payload["attn_skip_err"] == 0.0, \
+        "block-skip attention must be bitwise-equal on real rows"
+    assert payload["attn_visited_block_frac"] <= \
+        payload["attn_keep_frac"] ** 2 + 0.05, \
+        "visited k-blocks should track the causal lower-tri fraction"
+
+    out = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"\nquick smoke OK in {time.time() - t0:.1f}s -> {out}")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help=f"comma list of: {','.join(BENCHES)}")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: bench_kernels invariants + "
+                         "BENCH_kernels.json")
     args = ap.parse_args()
+    if args.quick:
+        quick()
+        return
     selected = args.only.split(",") if args.only else BENCHES
 
     import importlib

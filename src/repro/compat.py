@@ -1,0 +1,31 @@
+"""Version-tolerant wrappers over jax APIs that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace, and its replication-check kwarg was renamed
+(``check_rep`` -> ``check_vma``) in the same move.  Every in-repo caller
+goes through :func:`shard_map` below so the rest of the codebase is
+agnostic to which jax is installed.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+if hasattr(jax, "shard_map"):                      # jax >= 0.6 style
+
+    def shard_map(f, *, mesh, in_specs, out_specs,
+                  check_vma: bool = False) -> Any:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+
+else:                                              # jax 0.4.x style
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs,
+                  check_vma: bool = False) -> Any:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+__all__ = ["shard_map"]

@@ -112,10 +112,12 @@ class Camera:
 
     # --- tiles -------------------------------------------------------------
     def bbox_tiles(self, b: BBox) -> frozenset:
-        """Least set of tile indices covering the bbox (paper §3.2)."""
-        x0 = int(b.left) // self.tile
+        """Least set of tile indices covering the (in-frame part of the)
+        bbox (paper §3.2).  Clamped to the frame: a bbox hanging past the
+        left/top edge must not wrap to the previous row's tiles."""
+        x0 = max(int(b.left) // self.tile, 0)
         x1 = int(np.ceil(b.right / self.tile) - 1)
-        y0 = int(b.top) // self.tile
+        y0 = max(int(b.top) // self.tile, 0)
         y1 = int(np.ceil(b.bottom / self.tile) - 1)
         x1 = min(x1, self.tiles_x - 1)
         y1 = min(y1, self.tiles_y - 1)

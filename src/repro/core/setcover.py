@@ -106,25 +106,61 @@ def preprocess(constraints: Sequence[Sequence[Region]]) -> CoreInstance:
 # ---------------------------------------------------------------------------
 
 def _greedy_core(core: CoreInstance) -> Set[int]:
-    chosen: Set[int] = set()
-    unsat = list(range(len(core.constraints)))
-    while unsat:
-        best = None  # (cost_per_sat, tiles)
-        for ci in unsat:
-            for ts in core.constraints[ci]:
-                new = ts - chosen
-                # how many unsatisfied constraints does adding `new` finish?
-                nsat = 0
-                for cj in unsat:
-                    if any(t2 <= (chosen | new) for t2 in core.constraints[cj]):
-                        nsat += 1
-                score = (len(new) / max(nsat, 1), len(new))
-                if best is None or score < best[0]:
-                    best = (score, new)
-        chosen |= best[1]
-        unsat = [ci for ci in unsat
-                 if not any(ts <= chosen for ts in core.constraints[ci])]
-    return chosen
+    """Cost-effectiveness greedy on a bitset representation.
+
+    The set-based formulation recomputed constraint satisfaction for every
+    (constraint, region) pair per iteration — O(n^3) Python set ops.  Here
+    every region is one row of a bool matrix over the core's tile universe;
+    per-constraint satisfaction of a candidate collapses to a vectorized
+    "any region's residual ⊆ candidate" matrix reduction, and residuals are
+    updated incrementally after each pick instead of rebuilt.  Candidate
+    enumeration order (constraint order, then region order) matches the old
+    code, so tie-breaking — and therefore the chosen mask — is identical.
+    """
+    ncons = len(core.constraints)
+    if ncons == 0:
+        return set()
+    tiles = sorted({t for regions in core.constraints
+                    for ts in regions for t in ts})
+    tidx = {t: i for i, t in enumerate(tiles)}
+    nt = len(tiles)
+    region_cons: List[int] = []            # region row -> owning constraint
+    rows: List[np.ndarray] = []
+    for ci, regions in enumerate(core.constraints):
+        for ts in regions:
+            row = np.zeros(nt, bool)
+            row[[tidx[t] for t in ts]] = True
+            rows.append(row)
+            region_cons.append(ci)
+    R = np.stack(rows)                     # (nreg, nt) region membership
+    rcons = np.asarray(region_cons)
+
+    resid = R.copy()                       # region tiles still uncovered
+    chosen = np.zeros(nt, bool)
+    unsat = np.ones(ncons, bool)
+
+    while unsat.any():
+        best = None                        # (score, region_row_index)
+        # candidates: every region of every unsatisfied constraint, in the
+        # original (constraint, region) order
+        cand = np.nonzero(unsat[rcons])[0]
+        resid_counts = resid.sum(axis=1)
+        for ri in cand:
+            new = resid[ri]
+            n_new = int(resid_counts[ri])
+            # regions fully covered once `new` joins chosen: residual ⊆ new
+            sat_region = ~np.any(resid & ~new, axis=1)
+            nsat = int(np.count_nonzero(
+                np.bincount(rcons[sat_region], minlength=ncons)
+                .astype(bool) & unsat))
+            score = (n_new / max(nsat, 1), n_new)
+            if best is None or score < best[0]:
+                best = (score, ri)
+        new = resid[best[1]].copy()
+        chosen |= new
+        resid &= ~new                      # incremental residual update
+        unsat[rcons[~resid.any(axis=1)]] = False
+    return {tiles[i] for i in np.nonzero(chosen)[0]}
 
 
 def solve_greedy(table: AssociationTable) -> SolveResult:

@@ -17,7 +17,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 
 def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:

@@ -1,12 +1,18 @@
 """Public jit'd wrappers around the Pallas kernels.
 
 Handles the framework-facing conveniences: mask -> index-list conversion,
-padding to hardware-aligned block counts, batching (vmap), and the
-interpret switch (True on CPU; on a real TPU deployment set
-REPRO_PALLAS_INTERPRET=0).
+neighbor-table construction for the packed-resident conv chain, padding to
+hardware-aligned block counts, batching (vmap), and the interpret switch
+(True on CPU; on a real TPU deployment set REPRO_PALLAS_INTERPRET=0).
+
+Every public wrapper bumps ``KERNEL_COUNTS[name]`` *outside* the jit
+boundary, so tests and benchmarks can assert structural properties of the
+hot path — e.g. that an N-layer RoI conv stack performs exactly one gather
+and one scatter (see serving/detector.RoIDetector.roi_forward).
 """
 from __future__ import annotations
 
+import collections
 import functools
 import os
 
@@ -15,12 +21,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.roi_attention import PAD_POS, roi_attention as _roi_attn
-from repro.kernels.roi_conv import roi_conv as _roi_conv
+from repro.kernels.roi_attention import (PAD_POS, block_min_positions,
+                                         roi_attention as _roi_attn)
+from repro.kernels.roi_conv import (NEIGHBOR_OFFSETS, roi_conv as _roi_conv,
+                                    roi_conv_packed as _roi_conv_packed)
 from repro.kernels.sbnet import sbnet_gather as _gather, \
     sbnet_scatter as _scatter
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+# kernel-dispatch counter: wrapper name -> number of pallas_call launches
+# issued from Python.  Reset with KERNEL_COUNTS.clear() around a region of
+# interest; each launch is counted once regardless of jit caching.
+KERNEL_COUNTS: collections.Counter = collections.Counter()
 
 
 def mask_to_indices(grid: np.ndarray) -> np.ndarray:
@@ -30,31 +43,86 @@ def mask_to_indices(grid: np.ndarray) -> np.ndarray:
     return np.stack([ys, xs], axis=1).astype(np.int32)
 
 
+def neighbor_table(idx: np.ndarray, grid_shape) -> np.ndarray:
+    """(n, 2) active-tile coords -> (n, 8) int32 packed-slot neighbor table.
+
+    Column j is the packed slot of the neighbor at NEIGHBOR_OFFSETS[j]
+    (NW, N, NE, W, E, SW, S, SE), or -1 when that neighbor is inactive or
+    off-frame — the packed conv kernel substitutes a zero halo there,
+    matching what the scatter-into-zeros path would have produced.  Static:
+    computed offline from the RoI mask, once per mask lifetime.
+    """
+    idx = np.asarray(idx)
+    ty_max, tx_max = grid_shape
+    slot = {(int(y), int(x)): i for i, (y, x) in enumerate(idx)}
+    nbr = np.full((idx.shape[0], 8), -1, np.int32)
+    for i, (y, x) in enumerate(idx):
+        for j, (dy, dx) in enumerate(NEIGHBOR_OFFSETS):
+            ny, nx = int(y) + dy, int(x) + dx
+            if 0 <= ny < ty_max and 0 <= nx < tx_max:
+                nbr[i, j] = slot.get((ny, nx), -1)
+    return nbr
+
+
+# ---------------------------------------------------------------------------
+# jit'd kernel entry points (private) + counting public wrappers
+# ---------------------------------------------------------------------------
+
 @functools.partial(jax.jit, static_argnames=("th", "tw", "interpret"))
-def sbnet_gather(x: jax.Array, idx: jax.Array, th: int, tw: int,
-                 interpret: bool = INTERPRET) -> jax.Array:
-    """(H, W, C) + (n, 2) tile coords -> packed (n, th, tw, C)."""
+def _sbnet_gather_jit(x, idx, th, tw, interpret=INTERPRET):
     return _gather(x, idx, th, tw, interpret=interpret)
 
 
+def sbnet_gather(x: jax.Array, idx: jax.Array, th: int, tw: int,
+                 interpret: bool = INTERPRET) -> jax.Array:
+    """(H, W, C) + (n, 2) tile coords -> packed (n, th, tw, C)."""
+    KERNEL_COUNTS["sbnet_gather"] += 1
+    return _sbnet_gather_jit(x, idx, th, tw, interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def sbnet_scatter(packed: jax.Array, idx: jax.Array, base: jax.Array,
-                  interpret: bool = INTERPRET) -> jax.Array:
-    """Packed tiles -> full map, untouched regions keep ``base`` values."""
+def _sbnet_scatter_jit(packed, idx, base, interpret=INTERPRET):
     return _scatter(packed, idx, base, interpret=interpret)
 
 
+def sbnet_scatter(packed: jax.Array, idx: jax.Array, base: jax.Array,
+                  interpret: bool = INTERPRET) -> jax.Array:
+    """Packed tiles -> full map, untouched regions keep ``base`` values."""
+    KERNEL_COUNTS["sbnet_scatter"] += 1
+    return _sbnet_scatter_jit(packed, idx, base, interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("th", "tw", "interpret"))
+def _roi_conv_jit(x, w, idx, th, tw, interpret=INTERPRET):
+    return _roi_conv(x, w, idx, th, tw, interpret=interpret)
+
+
 def roi_conv(x: jax.Array, w: jax.Array, idx: jax.Array, th: int, tw: int,
              interpret: bool = INTERPRET) -> jax.Array:
     """Fused gather+3x3 conv on active tiles -> packed (n, th, tw, Cout)."""
-    return _roi_conv(x, w, idx, th, tw, interpret=interpret)
+    KERNEL_COUNTS["roi_conv"] += 1
+    return _roi_conv_jit(x, w, idx, th, tw, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _roi_conv_packed_jit(packed, w, nbr, interpret=INTERPRET):
+    return _roi_conv_packed(packed, w, nbr, interpret=interpret)
+
+
+def roi_conv_packed(packed: jax.Array, w: jax.Array, nbr: jax.Array,
+                    interpret: bool = INTERPRET) -> jax.Array:
+    """Packed-resident conv layer: (n, th, tw, Cin) -> (n, th, tw, Cout)
+    with halos pulled from neighbor tiles (``neighbor_table``); no
+    full-frame materialization between layers."""
+    KERNEL_COUNTS["roi_conv_packed"] += 1
+    return _roi_conv_packed_jit(packed, w, nbr, interpret)
 
 
 def roi_conv_batched(x: jax.Array, w: jax.Array, idx: jax.Array,
                      th: int, tw: int) -> jax.Array:
     """(B, H, W, Cin) -> (B, n, th, tw, Cout), shared active set."""
-    return jax.vmap(lambda xi: roi_conv(xi, w, idx, th, tw))(x)
+    KERNEL_COUNTS["roi_conv"] += 1
+    return jax.vmap(lambda xi: _roi_conv_jit(xi, w, idx, th, tw))(x)
 
 
 def pack_tokens(x: jax.Array, keep: jax.Array, block: int = 128):
@@ -63,6 +131,8 @@ def pack_tokens(x: jax.Array, keep: jax.Array, block: int = 128):
     keep: (S,) bool.  Returns (packed, positions, n_kept) where positions
     holds original indices (padding rows = PAD_POS).  Padded length is the
     smallest multiple of ``block`` >= S (static shape, jit-friendly).
+    Kept rows stay in original order, so positions are monotone over real
+    rows — the invariant the attention kernel's causal block skip uses.
     """
     S = x.shape[0]
     Sp = -(-S // block) * block
@@ -87,17 +157,52 @@ def unpack_tokens(packed: jax.Array, positions: jax.Array, S: int,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_q", "block_k", "interpret"))
-def roi_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                  positions: jax.Array, block_q: int = 128,
-                  block_k: int = 128,
-                  interpret: bool = INTERPRET) -> jax.Array:
-    """Packed-prefill attention over (S, H, D) with original-position
-    causality.  S must already be block-padded (pack_tokens does this)."""
+                   static_argnames=("block_q", "block_k", "causal_skip",
+                                    "return_stats", "interpret"))
+def _roi_attention_jit(q, k, v, positions, block_q=128, block_k=128,
+                       causal_skip=True, return_stats=False,
+                       interpret=INTERPRET):
     return _roi_attn(q, k, v, positions, block_q=block_q, block_k=block_k,
+                     causal_skip=causal_skip, return_stats=return_stats,
                      interpret=interpret)
 
 
-__all__ = ["mask_to_indices", "sbnet_gather", "sbnet_scatter", "roi_conv",
+def roi_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  positions: jax.Array, block_q: int = 128,
+                  block_k: int = 128, causal_skip: bool = True,
+                  return_stats: bool = False,
+                  interpret: bool = INTERPRET):
+    """Packed-prefill attention over (S, H, D) with original-position
+    causality.  S must already be block-padded (pack_tokens does this).
+    ``causal_skip`` bounds the k-block walk at the causal frontier (exact:
+    outputs on real rows are unchanged); ``return_stats`` additionally
+    returns the (H, S // block_q) visited-k-block counts."""
+    KERNEL_COUNTS["roi_attention"] += 1
+    return _roi_attention_jit(q, k, v, positions, block_q, block_k,
+                              causal_skip, return_stats, interpret)
+
+
+def attention_visit_bound(positions: np.ndarray, block_q: int = 128,
+                          block_k: int = 128) -> np.ndarray:
+    """Host-side mirror of the kernel's causal bound: visited k-blocks per
+    q-block, (S // block_q,) int.  Useful for structural FLOP accounting
+    without launching the kernel."""
+    positions = np.asarray(positions)
+    S = positions.shape[0]
+    kmin = np.asarray(block_min_positions(positions, block_k))
+    out = np.zeros(S // block_q, np.int64)
+    for qi in range(S // block_q):
+        pq = positions[qi * block_q:(qi + 1) * block_q]
+        real = pq[pq != int(PAD_POS)]
+        if real.size == 0:
+            continue
+        hits = np.nonzero(kmin <= real.max())[0]
+        out[qi] = 0 if hits.size == 0 else int(hits[-1]) + 1
+    return out
+
+
+__all__ = ["mask_to_indices", "neighbor_table", "sbnet_gather",
+           "sbnet_scatter", "roi_conv", "roi_conv_packed",
            "roi_conv_batched", "pack_tokens", "unpack_tokens",
-           "roi_attention", "PAD_POS", "ref"]
+           "roi_attention", "attention_visit_bound", "block_min_positions",
+           "KERNEL_COUNTS", "PAD_POS", "ref"]

@@ -51,6 +51,18 @@ def roi_conv(x: jax.Array, w: jax.Array, idx: jax.Array,
     return sbnet_gather(full.astype(x.dtype), idx, th, tw)
 
 
+def roi_conv_packed(packed: jax.Array, idx: jax.Array, grid_shape,
+                    w: jax.Array) -> jax.Array:
+    """Oracle for the packed-resident conv: scatter the packed tiles onto a
+    zeroed full frame (inactive tiles = 0, exactly the zero-halo contract),
+    run a SAME conv, gather the active tiles back."""
+    n, th, tw, C = packed.shape
+    H, W = grid_shape[0] * th, grid_shape[1] * tw
+    base = jnp.zeros((H, W, C), packed.dtype)
+    full = sbnet_scatter(packed, idx, base, th, tw)
+    return roi_conv(full, w, idx, th, tw)
+
+
 # ---------------------------------------------------------------------------
 # roi attention (packed prefill with original-position causal mask)
 # ---------------------------------------------------------------------------

@@ -10,6 +10,18 @@ Flash-attention structure: grid = (heads, q_blocks); the q block lives in
 VMEM via BlockSpec; K/V stay in ANY/HBM and the kernel walks k-blocks with
 dynamic-slice loads, maintaining the online-softmax running max/denominator.
 Padding rows carry position INT32_MAX (never attended, never attending).
+
+Causal block skipping: ``pack_tokens`` keeps kept rows in original order,
+so positions are monotone over real rows with PAD_POS padding at the tail.
+A scalar-prefetched per-k-block minimum-position vector bounds the k-loop
+at the *last* k-block whose min position can be <= the q-block's max real
+position — the standard flash-attention causal bound, which also skips
+all-padding tail blocks (their min is PAD_POS).  Skipped blocks are ones
+the exhaustive kernel fully masks, and a fully-masked block is an exact
+no-op in the online softmax once any real block has been folded in
+(alpha = 1, p = exp(-inf) = 0), so outputs on real rows are bitwise equal
+to the exhaustive kernel.  The kernel also emits a per-(head, q-block)
+visited-block count so the skip ratio is observable in tests/benchmarks.
 """
 from __future__ import annotations
 
@@ -24,8 +36,8 @@ _NEG = -1e30
 PAD_POS = jnp.iinfo(jnp.int32).max
 
 
-def _roi_attn_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *,
-                     block_k: int, scale: float):
+def _roi_attn_kernel(pos_ref, kmin_ref, q_ref, k_ref, v_ref, o_ref, cnt_ref,
+                     *, block_k: int, scale: float, causal_skip: bool):
     qi = pl.program_id(1)
     bq, D = q_ref.shape[1], q_ref.shape[2]
     S = k_ref.shape[1]
@@ -34,12 +46,26 @@ def _roi_attn_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *,
 
     nk = S // block_k
 
+    if causal_skip:
+        # visit k-blocks [0, hi): hi = 1 + last j with min(pos_k_j) <=
+        # max(real pos_q).  Correct for any positions vector; for the
+        # monotone packed layout it is exactly the causal prefix.  A
+        # q-block of pure padding has no real rows -> hi = 0.
+        real_q = pos_q != PAD_POS
+        pos_q_max = jnp.max(jnp.where(real_q, pos_q, -1))
+
+        def scan_last(j, h):
+            return jnp.where(kmin_ref[j] <= pos_q_max, j + 1, h)
+        hi = jax.lax.fori_loop(0, nk, scan_last, 0)
+    else:
+        hi = nk
+
     def body(j, carry):
         acc, m, l = carry
-        k = pl.load(k_ref, (0, pl.ds(j * block_k, block_k), slice(None))
-                    ).astype(jnp.float32)             # (bk, D)
-        v = pl.load(v_ref, (0, pl.ds(j * block_k, block_k), slice(None))
-                    ).astype(jnp.float32)
+        k = pl.load(k_ref, (pl.ds(0, 1), pl.ds(j * block_k, block_k),
+                            slice(None)))[0].astype(jnp.float32)  # (bk, D)
+        v = pl.load(v_ref, (pl.ds(0, 1), pl.ds(j * block_k, block_k),
+                            slice(None)))[0].astype(jnp.float32)
         pos_k = pos_ref[pl.ds(j * block_k, block_k)]
         s = q @ k.T                                   # (bq, bk)
         mask = pos_q[:, None] >= pos_k[None, :]
@@ -54,41 +80,64 @@ def _roi_attn_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *,
     acc0 = jnp.zeros((bq, D), jnp.float32)
     m0 = jnp.full((bq,), _NEG, jnp.float32)
     l0 = jnp.zeros((bq,), jnp.float32)
-    acc, m, l = jax.lax.fori_loop(0, nk, body, (acc0, m0, l0))
+    acc, m, l = jax.lax.fori_loop(0, hi, body, (acc0, m0, l0))
     out = acc / jnp.maximum(l, 1e-30)[:, None]
     o_ref[0] = out.astype(o_ref.dtype)
+    cnt_ref[0, 0] = jnp.asarray(hi, jnp.int32)
+
+
+def block_min_positions(positions: jax.Array, block_k: int) -> jax.Array:
+    """Per-k-block minimum original position, (S // block_k,) int32.
+
+    Computed once per prefill on the host side of the kernel (the packed
+    layout makes it positions[::block_k], but the segment-min form stays
+    correct for arbitrary position vectors)."""
+    S = positions.shape[0]
+    return positions.reshape(S // block_k, block_k).min(axis=1)
 
 
 def roi_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                   positions: jax.Array, *, block_q: int = 128,
                   block_k: int = 128, scale: float | None = None,
-                  interpret: bool = True) -> jax.Array:
+                  causal_skip: bool = True, interpret: bool = True,
+                  return_stats: bool = False):
     """q,k,v: (S, H, D) packed tokens; positions: (S,) int32 original
     positions (padding = PAD_POS).  S must divide by block_q and block_k
-    (ops.roi_attention pads).  Returns (S, H, D)."""
+    (ops.roi_attention pads).  Returns (S, H, D), or
+    ((S, H, D), visited (H, S // block_q) int32) with ``return_stats``."""
     S, H, D = q.shape
     assert S % block_q == 0 and S % block_k == 0
     scale = scale if scale is not None else 1.0 / (D ** 0.5)
-    kernel = functools.partial(_roi_attn_kernel, block_k=block_k, scale=scale)
+    kmin = block_min_positions(positions, block_k)
+    kernel = functools.partial(_roi_attn_kernel, block_k=block_k, scale=scale,
+                               causal_skip=causal_skip)
     # layout: (H, S, D) so heads are the leading grid axis
     qh = jnp.swapaxes(q, 0, 1)
     kh = jnp.swapaxes(k, 0, 1)
     vh = jnp.swapaxes(v, 0, 1)
+    nq = S // block_q
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(H, S // block_q),
+        num_scalar_prefetch=2,
+        grid=(H, nq),
         in_specs=[
-            pl.BlockSpec((1, block_q, D), lambda h, i, pos: (h, i, 0)),
-            pl.BlockSpec((1, S, D), lambda h, i, pos: (h, 0, 0)),
-            pl.BlockSpec((1, S, D), lambda h, i, pos: (h, 0, 0)),
+            pl.BlockSpec((1, block_q, D), lambda h, i, pos, kmin: (h, i, 0)),
+            pl.BlockSpec((1, S, D), lambda h, i, pos, kmin: (h, 0, 0)),
+            pl.BlockSpec((1, S, D), lambda h, i, pos, kmin: (h, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_q, D), lambda h, i, pos: (h, i, 0)),
+        out_specs=(
+            pl.BlockSpec((1, block_q, D), lambda h, i, pos, kmin: (h, i, 0)),
+            pl.BlockSpec((1, 1), lambda h, i, pos, kmin: (h, i)),
+        ),
     )
 
-    out = pl.pallas_call(
+    out, visited = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((H, S, D), q.dtype),
+        out_shape=(jax.ShapeDtypeStruct((H, S, D), q.dtype),
+                   jax.ShapeDtypeStruct((H, nq), jnp.int32)),
         interpret=interpret,
-    )(positions, qh, kh, vh)
-    return jnp.swapaxes(out, 0, 1)
+    )(positions, kmin, qh, kh, vh)
+    out = jnp.swapaxes(out, 0, 1)
+    if return_stats:
+        return out, visited
+    return out

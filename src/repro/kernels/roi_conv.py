@@ -1,38 +1,66 @@
-"""RoI-sparse 3x3 convolution as a Pallas TPU kernel.
+"""RoI-sparse 3x3 convolution as Pallas TPU kernels.
 
-The RoI-YOLO layer (paper §4.4): convolution evaluated only on active tiles.
-TPU formulation: grid=(n_active,); per step the kernel DMAs one *haloed*
-(th+2, tw+2, Cin) window from the padded feature map in HBM (dynamic-start,
-static-size slice — a block DMA on Mosaic), then computes the 3x3 conv as 9
-shifted (th*tw, Cin) @ (Cin, Cout) matmuls on the MXU.  This replaces
-SBNet's gather -> cuDNN conv -> scatter trio with one fused kernel and
-keeps matmul operands MXU-aligned (pick th*tw and channel dims as multiples
-of 128 for full utilization; functional for any size).
+Two kernels implement the RoI-YOLO layer (paper §4.4):
+
+``roi_conv`` — the *entry* layer: convolution evaluated only on active
+tiles, reading straight from the full frame.  grid=(n_active,); per step
+the kernel DMAs one *haloed* (th+2, tw+2, Cin) window from the padded
+feature map in HBM (dynamic-start, static-size slice — a block DMA on
+Mosaic), then computes the 3x3 conv as 9 shifted (th*tw, Cin) @ (Cin, Cout)
+matmuls on the MXU.  This fuses SBNet's gather into the first conv.
+
+``roi_conv_packed`` — every *subsequent* layer: consumes the previous
+layer's packed (n, th, tw, C) output directly, so the sparse representation
+never round-trips through a full-frame scatter between layers.  Halo rows/
+columns come from neighbor tiles via an offline-computed (n, 8) neighbor
+table (scalar-prefetched into SMEM): entry j holds the packed slot of the
+j-th neighbor (NW, N, NE, W, E, SW, S, SE order) or -1 when that neighbor
+is inactive/off-frame, in which case the halo strip is zero — exactly the
+value the old scatter-into-zeros path produced, so the packed chain is
+bit-compatible with the scatter/gather chain on every tile.
+
+Keep th*tw and channel dims multiples of 128 for full MXU utilization;
+both kernels are functional for any size.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# pltpu.TPUMemorySpace was renamed MemorySpace across jax versions
+_MEMSPACE = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
 
-def _roi_conv_kernel(idx_ref, x_ref, w_ref, o_ref, *, th: int, tw: int):
-    i = pl.program_id(0)
-    ty = idx_ref[i, 0]
-    tx = idx_ref[i, 1]
-    cin = x_ref.shape[-1]
-    cout = o_ref.shape[-1]
-    # haloed window from the (H+2, W+2, Cin) padded map
-    win = pl.load(x_ref, (pl.ds(ty * th, th + 2), pl.ds(tx * tw, tw + 2),
-                          slice(None)))
+# neighbor-table column order: (dy, dx) offsets of the 8 surrounding tiles
+NEIGHBOR_OFFSETS = ((-1, -1), (-1, 0), (-1, 1), (0, -1),
+                    (0, 1), (1, -1), (1, 0), (1, 1))
+
+
+def _conv3x3_tile(win: jax.Array, w_ref, th: int, tw: int,
+                  cout: int) -> jax.Array:
+    """(th+2, tw+2, Cin) haloed window -> (th, tw, Cout) via 9 MXU matmuls."""
+    cin = win.shape[-1]
     acc = jnp.zeros((th * tw, cout), jnp.float32)
     for dy in range(3):
         for dx in range(3):
             patch = win[dy:dy + th, dx:dx + tw, :].reshape(th * tw, cin)
             acc += patch.astype(jnp.float32) @ w_ref[dy, dx].astype(
                 jnp.float32)
-    o_ref[0] = acc.reshape(th, tw, cout).astype(o_ref.dtype)
+    return acc.reshape(th, tw, cout)
+
+
+def _roi_conv_kernel(idx_ref, x_ref, w_ref, o_ref, *, th: int, tw: int):
+    i = pl.program_id(0)
+    ty = idx_ref[i, 0]
+    tx = idx_ref[i, 1]
+    cout = o_ref.shape[-1]
+    # haloed window from the (H+2, W+2, Cin) padded map
+    win = pl.load(x_ref, (pl.ds(ty * th, th + 2), pl.ds(tx * tw, tw + 2),
+                          slice(None)))
+    o_ref[0] = _conv3x3_tile(win, w_ref, th, tw, cout).astype(o_ref.dtype)
 
 
 def roi_conv(x: jax.Array, w: jax.Array, idx: jax.Array, th: int, tw: int,
@@ -43,14 +71,13 @@ def roi_conv(x: jax.Array, w: jax.Array, idx: jax.Array, th: int, tw: int,
     Cout = w.shape[-1]
     n = idx.shape[0]
     xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
-    import functools
     kernel = functools.partial(_roi_conv_kernel, th=th, tw=tw)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(n,),
         in_specs=[
             # whole padded map stays in ANY/HBM; the kernel slices windows
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(memory_space=_MEMSPACE.ANY),
             pl.BlockSpec((3, 3, Cin, Cout), lambda i, idx_ref: (0, 0, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, th, tw, Cout),
@@ -62,3 +89,80 @@ def roi_conv(x: jax.Array, w: jax.Array, idx: jax.Array, th: int, tw: int,
         out_shape=jax.ShapeDtypeStruct((n, th, tw, Cout), x.dtype),
         interpret=interpret,
     )(idx, xp, w)
+
+
+# ---------------------------------------------------------------------------
+# packed-resident conv: halo strips fetched from neighbor tiles
+# ---------------------------------------------------------------------------
+
+def _halo_strip(p_ref, slot, ys, ny, xs, nx):
+    """Load packed[slot, ys:ys+ny, xs:xs+nx, :]; zero when slot == -1.
+
+    The load is issued at the clamped slot (so it is always in-bounds) and
+    masked afterwards — data-dependent *suppression*, not data-dependent
+    control flow, which keeps the DMA schedule static.
+    """
+    safe = jnp.maximum(slot, 0)
+    strip = pl.load(p_ref, (pl.ds(safe, 1), pl.ds(ys, ny), pl.ds(xs, nx),
+                            slice(None)))[0]
+    return jnp.where(slot >= 0, strip, jnp.zeros_like(strip))
+
+
+def _roi_conv_packed_kernel(nbr_ref, p_ref, w_ref, o_ref, *,
+                            th: int, tw: int):
+    i = pl.program_id(0)
+    cout = o_ref.shape[-1]
+    z = jnp.asarray(0, jnp.int32)
+
+    center = pl.load(p_ref, (pl.ds(i, 1), pl.ds(z, th), pl.ds(z, tw),
+                             slice(None)))[0]                 # (th, tw, C)
+
+    # 8 halo strips, indexed by the prefetched neighbor table.  Each strip
+    # is the 1-deep edge of the neighbor facing us: the N neighbor donates
+    # its bottom row, the W neighbor its rightmost column, corners one px.
+    nw = _halo_strip(p_ref, nbr_ref[i, 0], th - 1, 1, tw - 1, 1)  # (1,1,C)
+    n_ = _halo_strip(p_ref, nbr_ref[i, 1], th - 1, 1, 0, tw)      # (1,tw,C)
+    ne = _halo_strip(p_ref, nbr_ref[i, 2], th - 1, 1, 0, 1)       # (1,1,C)
+    w_ = _halo_strip(p_ref, nbr_ref[i, 3], 0, th, tw - 1, 1)      # (th,1,C)
+    e_ = _halo_strip(p_ref, nbr_ref[i, 4], 0, th, 0, 1)           # (th,1,C)
+    sw = _halo_strip(p_ref, nbr_ref[i, 5], 0, 1, tw - 1, 1)       # (1,1,C)
+    s_ = _halo_strip(p_ref, nbr_ref[i, 6], 0, 1, 0, tw)           # (1,tw,C)
+    se = _halo_strip(p_ref, nbr_ref[i, 7], 0, 1, 0, 1)            # (1,1,C)
+
+    top = jnp.concatenate([nw, n_, ne], axis=1)          # (1, tw+2, C)
+    mid = jnp.concatenate([w_, center, e_], axis=1)      # (th, tw+2, C)
+    bot = jnp.concatenate([sw, s_, se], axis=1)          # (1, tw+2, C)
+    win = jnp.concatenate([top, mid, bot], axis=0)       # (th+2, tw+2, C)
+
+    o_ref[0] = _conv3x3_tile(win, w_ref, th, tw, cout).astype(o_ref.dtype)
+
+
+def roi_conv_packed(packed: jax.Array, w: jax.Array, nbr: jax.Array,
+                    *, interpret: bool = True) -> jax.Array:
+    """packed: (n, th, tw, Cin) previous layer's packed output;
+    w: (3, 3, Cin, Cout); nbr: (n, 8) int32 neighbor slots (-1 = zero halo,
+    NEIGHBOR_OFFSETS order).  Returns packed (n, th, tw, Cout) — the SAME
+    conv each active tile would see on the scattered full frame where
+    inactive tiles are zero."""
+    n, th, tw, Cin = packed.shape
+    Cout = w.shape[-1]
+    kernel = functools.partial(_roi_conv_packed_kernel, th=th, tw=tw)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            # packed tensor stays in ANY/HBM; the kernel pulls its own tile
+            # plus 1-deep neighbor edge strips (the halo DMAs are tiny
+            # compared to re-slicing a full frame per layer)
+            pl.BlockSpec(memory_space=_MEMSPACE.ANY),
+            pl.BlockSpec((3, 3, Cin, Cout), lambda i, nbr_ref: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, th, tw, Cout),
+                               lambda i, nbr_ref: (i, 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, th, tw, Cout), packed.dtype),
+        interpret=interpret,
+    )(nbr, packed, w)

@@ -1,4 +1,4 @@
-"""Batched serving engine with RoI-sparsified prefill.
+"""Batched serving engine with RoI-sparsified prefill and batched decode.
 
 The CrossRoI insight applied to transformer serving: when a request's
 prompt is a multi-camera patch stream (VLM) or any multi-stream ingestion
@@ -8,6 +8,14 @@ prefills ONLY the packed tokens (compute drops ~proportionally to the
 mask), and decodes against the packed KV cache — attention stays correct
 because positions travel with the tokens (RoPE is applied at original
 positions; causality follows original order).
+
+Decode is batched across the request group: prefills stay per-request
+(keep-lists are ragged), but every request's caches are allocated at the
+group-common ``max_seq``, stacked into one pytree, and each greedy step is
+ONE jit'd vmapped dispatch for the whole group instead of a Python loop of
+per-request dispatches.  Per-request start positions ride along as a
+vmapped scalar, so RoI-packed (start = n_kept) and dense (start = S)
+requests share the same batch.
 
 Plain text serving works through the same engine with roi_sparsity=False.
 """
@@ -48,6 +56,10 @@ class RoIPrefillResult:
         return self.n_kept / max(self.n_total, 1)
 
 
+def _round_up(x: int, block: int) -> int:
+    return -(-x // block) * block
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params: Dict,
                  dist: Optional[DistContext] = None):
@@ -60,6 +72,13 @@ class ServingEngine:
         self._prefill = jax.jit(
             lambda p, b, c, pos, last=None: M.prefill(
                 p, cfg, b, c, dist=dist, positions=pos, last_index=last))
+        # group decode: vmap over stacked (per-request B=1) caches, tokens,
+        # and scalar positions -> one dispatch per step for the whole group
+        self._decode_group = jax.jit(
+            lambda p, t, c, pos: jax.vmap(
+                lambda tb, cb, pb: M.decode_step(p, cfg, tb, cb, pb,
+                                                 dist=dist),
+                in_axes=(0, 0, 0))(t, c, pos))
 
     # -- plain prefill -----------------------------------------------------
     def prefill(self, batch: Dict, max_seq: Optional[int] = None):
@@ -70,9 +89,14 @@ class ServingEngine:
 
     # -- RoI-sparsified prefill ---------------------------------------------
     def roi_prefill(self, tokens: jax.Array, keep: jax.Array,
-                    block: int = 128) -> RoIPrefillResult:
+                    block: int = 128,
+                    max_seq: Optional[int] = None) -> RoIPrefillResult:
         """tokens: (S,) or (S, D) stream; keep: (S,) bool.  Packs kept
-        tokens, prefills the packed prefix with original positions."""
+        tokens, prefills the packed prefix with original positions.
+        ``max_seq`` sizes the KV cache (>= packed length; decode masks
+        slots past the current position, so oversized caches are safe —
+        the group driver uses this to give every request the same cache
+        shape)."""
         S = tokens.shape[0]
         packed, positions, n_kept = kops.pack_tokens(tokens, keep, block)
         Sp = packed.shape[0]
@@ -85,7 +109,7 @@ class ServingEngine:
             # patch stream: embed via the VLM frontend path
             batch = {"tokens": jnp.zeros((1, 0), jnp.int32),
                      "patches": packed[None]}
-        caches = M.init_cache(self.cfg, 1, max(Sp, 1))
+        caches = M.init_cache(self.cfg, 1, max(max_seq or Sp, Sp, 1))
         logits, caches = self._prefill(self.params, batch, caches,
                                        positions[None], n_kept - 1)
         return RoIPrefillResult(logits, caches, int(n_kept), S)
@@ -103,35 +127,76 @@ class ServingEngine:
             out.append(np.asarray(tok))
         return np.concatenate(out, axis=1), caches
 
+    def decode_tokens_group(self, caches_list: List[Any],
+                            first_tokens: List[jax.Array],
+                            start_pos: List[int],
+                            n_steps: int) -> Tuple[np.ndarray, Any]:
+        """Greedy-decode G same-cache-shape requests together.
+
+        caches_list: per-request cache pytrees (B=1, identical shapes —
+        allocate prefills at a group-common max_seq).  Returns (G, n_steps)
+        tokens; one jit'd dispatch per step serves the whole group."""
+        G = len(caches_list)
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches_list)
+        tok = jnp.stack([jnp.asarray(t).reshape(1, 1)
+                         for t in first_tokens])            # (G, 1, 1)
+        pos0 = jnp.asarray(start_pos, jnp.int32)            # (G,)
+        out = []
+        for i in range(n_steps):
+            logits, caches = self._decode_group(self.params, tok, caches,
+                                                pos0 + i)
+            tok = jnp.argmax(logits[:, :, -1], axis=-1)[..., None]  # (G,1,1)
+            out.append(np.asarray(tok[:, :, 0]))
+        return np.concatenate(out, axis=1), caches
+
     # -- batched request driver ----------------------------------------------
     def serve(self, requests: List[Request], greedy_steps: int = 8
               ) -> Dict[int, np.ndarray]:
-        """Simple batched serving: group requests to max_batch, prefill
-        each group (RoI-packed when a keep-list is present), then decode
-        greedily.  Returns {rid: generated tokens}."""
+        """Batched serving: group requests to max_batch, prefill each
+        request (RoI-packed when a keep-list is present — keep-lists are
+        ragged, so packing stays per-request), then greedy-decode the whole
+        group in lockstep with one vmapped dispatch per step.  Returns
+        {rid: generated tokens}."""
         results: Dict[int, np.ndarray] = {}
         group: List[Request] = []
+        pack_block = 128
 
         def flush():
             if not group:
                 return
+            steps = [min(r.max_new_tokens, greedy_steps) for r in group]
+            gsteps = max(steps)
+            # group-common cache length: every request's packed/dense
+            # prompt plus the GROUP's decode step count fits (lockstep
+            # decode runs gsteps for everyone; a shorter per-request
+            # budget must not let KV writes clamp onto the cache end)
+            need = []
+            for r in group:
+                if r.keep is not None and self.scfg.roi_sparsity:
+                    need.append(_round_up(len(r.tokens), pack_block) + gsteps)
+                else:
+                    need.append(len(r.tokens) + gsteps)
+            max_seq = max(need)
+
+            caches_list, firsts, starts = [], [], []
             for r in group:   # per-request packing (ragged keep-lists)
                 if r.keep is not None and self.scfg.roi_sparsity:
                     res = self.roi_prefill(jnp.asarray(r.tokens),
-                                           jnp.asarray(r.keep))
-                    first = jnp.argmax(res.logits[:, -1], -1)
-                    toks, _ = self.decode_tokens(
-                        res.caches, first, res.n_kept,
-                        min(r.max_new_tokens, greedy_steps))
+                                           jnp.asarray(r.keep),
+                                           block=pack_block, max_seq=max_seq)
+                    caches_list.append(res.caches)
+                    firsts.append(jnp.argmax(res.logits[:, -1], -1))
+                    starts.append(res.n_kept)
                 else:
                     batch = {"tokens": jnp.asarray(r.tokens)[None]}
-                    logits, caches = self.prefill(
-                        batch, max_seq=len(r.tokens) + r.max_new_tokens)
-                    first = jnp.argmax(logits[:, -1], -1)
-                    toks, _ = self.decode_tokens(
-                        caches, first, len(r.tokens),
-                        min(r.max_new_tokens, greedy_steps))
-                results[r.rid] = toks[0]
+                    logits, caches = self.prefill(batch, max_seq=max_seq)
+                    caches_list.append(caches)
+                    firsts.append(jnp.argmax(logits[:, -1], -1))
+                    starts.append(len(r.tokens))
+            toks, _ = self.decode_tokens_group(caches_list, firsts, starts,
+                                               gsteps)
+            for gi, (r, ns) in enumerate(zip(group, steps)):
+                results[r.rid] = toks[gi, :ns]
             group.clear()
 
         for r in requests:

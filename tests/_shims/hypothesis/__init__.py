@@ -1,0 +1,119 @@
+"""Minimal, deterministic stand-in for the ``hypothesis`` library.
+
+The container image does not ship ``hypothesis`` and installing packages is
+off-limits, so ``conftest.py`` puts this shim on ``sys.path`` *only when the
+real library is absent*.  It implements the tiny slice of the API the test
+suite uses — ``given``/``settings`` plus the ``integers``/``floats``/
+``sets``/``composite`` strategies and ``hypothesis.extra.numpy`` arrays —
+as a seeded-RNG example sampler.  Properties are exercised on
+``max_examples`` deterministic samples (seed = example index), so failures
+reproduce exactly across runs; there is no shrinking.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import numpy as _np
+
+__version__ = "0.0-repro-shim"
+
+
+class Strategy:
+    """A sampleable value source: ``example(rng)`` -> concrete value."""
+
+    def __init__(self, sample: Callable[[_np.random.Generator], Any],
+                 label: str = "strategy"):
+        self._sample = sample
+        self._label = label
+
+    def example(self, rng: _np.random.Generator) -> Any:
+        return self._sample(rng)
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return f"<shim {self._label}>"
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> Strategy:
+        return Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)),
+            f"floats({min_value}, {max_value})")
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans()")
+
+    @staticmethod
+    def sets(elements: Strategy, min_size: int = 0,
+             max_size: int | None = None) -> Strategy:
+        def sample(rng):
+            size = min_size if max_size is None or max_size == min_size \
+                else int(rng.integers(min_size, max_size + 1))
+            out: set = set()
+            # rejection-sample until the set reaches the requested size;
+            # bounded attempts keep pathological element spaces from hanging
+            for _ in range(200 * max(size, 1)):
+                if len(out) >= size:
+                    break
+                out.add(elements.example(rng))
+            return out
+        return Strategy(sample, f"sets(min={min_size}, max={max_size})")
+
+    @staticmethod
+    def composite(fn: Callable) -> Callable[..., Strategy]:
+        @functools.wraps(fn)
+        def factory(*args, **kwargs) -> Strategy:
+            def sample(rng):
+                return fn(lambda strat: strat.example(rng), *args, **kwargs)
+            return Strategy(sample, f"composite({fn.__name__})")
+        return factory
+
+
+# module-style alias so ``from hypothesis import strategies as st`` works
+st = strategies
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    """Record run parameters on the (possibly already-wrapped) test fn."""
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: Strategy, **kw_strats: Strategy):
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest must see a zero-arg signature,
+        # otherwise it treats the property arguments as fixtures.
+        def wrapper():
+            n = getattr(wrapper, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples", 20))
+            for i in range(n):
+                rng = _np.random.default_rng(0xC0FFEE + i)
+                vals = [s.example(rng) for s in strats]
+                kwvals = {k: s.example(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*vals, **kwvals)
+                except Exception as e:  # noqa: BLE001 - annotate and re-raise
+                    raise AssertionError(
+                        f"property failed on shim example {i}: "
+                        f"args={vals!r} kwargs={kwvals!r}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+__all__ = ["given", "settings", "strategies", "st", "Strategy"]

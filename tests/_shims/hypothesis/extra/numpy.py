@@ -1,0 +1,30 @@
+"""Shim for ``hypothesis.extra.numpy``: ``arrays`` + ``array_shapes``."""
+from __future__ import annotations
+
+import numpy as _np
+
+from hypothesis import Strategy
+
+
+def array_shapes(min_dims: int = 1, max_dims: int = 3, min_side: int = 1,
+                 max_side: int = 10) -> Strategy:
+    def sample(rng):
+        nd = int(rng.integers(min_dims, max_dims + 1))
+        return tuple(int(rng.integers(min_side, max_side + 1))
+                     for _ in range(nd))
+    return Strategy(sample, "array_shapes")
+
+
+def arrays(dtype, shape) -> Strategy:
+    dt = _np.dtype(dtype)
+
+    def sample(rng):
+        shp = shape.example(rng) if isinstance(shape, Strategy) else shape
+        if dt == _np.bool_:
+            return rng.random(shp) < rng.uniform(0.1, 0.9)
+        if _np.issubdtype(dt, _np.integer):
+            info = _np.iinfo(dt)
+            lo, hi = max(info.min, -1000), min(info.max, 1000)
+            return rng.integers(lo, hi + 1, size=shp).astype(dt)
+        return rng.normal(size=shp).astype(dt)
+    return Strategy(sample, f"arrays({dt}, ...)")

@@ -8,6 +8,7 @@ import pytest
 
 from repro.configs.base import TrainConfig
 from repro.configs.registry import get_config
+from repro.data.lm import SyntheticLM
 from repro.distributed.fault import FaultInjector, StragglerMonitor
 from repro.train.loop import train
 
@@ -17,8 +18,23 @@ TCFG = TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=12,
                    seed=0)
 
 
+class _CycledLM(SyntheticLM):
+    """Replays a small fixed batch set: 12 smoke steps on ever-fresh markov
+    data sit at the noise floor (the band structure needs thousands of
+    steps to generalize), so loss-decrease contracts use a revisited
+    stream where optimization progress is actually observable."""
+
+    def batch(self, step, **kw):
+        return super().batch(step % 4, **kw)
+
+
+def _cycled():
+    return _CycledLM(CFG.vocab_size, 64, 4, seed=0)
+
+
 def test_loss_decreases():
-    rep = train(CFG, TCFG, steps=12, batch_shape=(4, 64), verbose=False)
+    rep = train(CFG, TCFG, steps=12, batch_shape=(4, 64), data=_cycled(),
+                verbose=False)
     assert rep.steps_run == 12
     assert rep.losses[-1] < rep.losses[0]
 
@@ -54,8 +70,10 @@ def test_int8_grad_compression_tracks_fp32():
     """int8-quantized grads must track the uncompressed trajectory: final
     loss within 5% after 12 steps (per-row scaling keeps error ~0.4%)."""
     tcfg = dataclasses.replace(TCFG, grad_compression="int8")
-    comp = train(CFG, tcfg, steps=12, batch_shape=(4, 64), verbose=False)
-    clean = train(CFG, TCFG, steps=12, batch_shape=(4, 64), verbose=False)
+    comp = train(CFG, tcfg, steps=12, batch_shape=(4, 64), data=_cycled(),
+                 verbose=False)
+    clean = train(CFG, TCFG, steps=12, batch_shape=(4, 64), data=_cycled(),
+                  verbose=False)
     assert comp.losses[-1] < comp.losses[0]          # it does train
     assert comp.losses[-1] < clean.losses[-1] * 1.05
 

@@ -1,0 +1,135 @@
+"""Fleet benchmark: multi-intersection scaling, packed group launches,
+and online mask-drift adaptation.
+
+Three panels:
+
+  1. fleet online throughput — K groups x 5 cameras through the vectorized
+     runtime: per-group accuracy/network vs the single-group baseline
+     (identical by construction), plus the fleet-multiplexed server rate.
+  2. packed group dispatch — per step, each group's cameras run as ONE
+     fused gather+conv + one packed conv per remaining layer + ONE
+     scatter; dispatch counts come from ops.count_kernels.
+  3. drift adaptation — a scripted traffic shift (N/S profiling -> E/W
+     online); reports re-solve count, coverage before/after, mask growth.
+
+``quick=True`` is the CI smoke shape (2 groups, ~10 s).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_json, table
+from repro.core.pipeline import (OfflineConfig, OnlineConfig, run_offline,
+                                 run_online)
+from repro.core.scene import SceneConfig, generate_scene
+from repro.fleet import (DriftConfig, FleetConfig, GroupSpec, build_fleet,
+                         cross_group_leakage, fleet_inference_step,
+                         run_adaptive_online, run_fleet_offline,
+                         run_fleet_online)
+from repro.serving.detector import DetectorConfig, RoIDetector
+
+
+def run(verbose: bool = True, quick: bool = False):
+    t00 = time.time()
+    n_groups = 2 if quick else 4
+    duration = 36 if quick else 60
+    profile = 280 if quick else 400
+    profiles = ["uniform", "rush_hour", "sparse", "bursty"][:n_groups]
+    fleet = build_fleet(FleetConfig(
+        groups=[GroupSpec(p, seed=3 + 7 * i)
+                for i, p in enumerate(profiles)],
+        duration_s=duration))
+    offs = run_fleet_offline(
+        fleet, OfflineConfig(profile_frames=profile, solver="greedy"))
+    t_eval0, t_eval1 = profile, duration * 10
+    fm = run_fleet_online(fleet, offs.per_group, OnlineConfig(),
+                          t_eval0, t_eval1)
+    base_acc = [run_online(g.scene, offs.per_group[g.gid], OnlineConfig(),
+                           t_eval0, t_eval1).accuracy
+                for g in fleet.groups]
+
+    # --- panel 2: packed dispatch structure per group step ------------------
+    det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    t = det.cfg.tile
+    grids = {g.gid: [rng.random((3, 4)) < 0.5 for _ in range(5)]
+             for g in fleet.groups}
+    for gs in grids.values():
+        for gg in gs:
+            gg[1, 1] = True
+    frames = {g.gid: [jnp.asarray(rng.normal(size=(3 * t, 4 * t, 3)),
+                                  jnp.float32) for _ in range(5)]
+              for g in fleet.groups}
+    step_t0 = time.time()
+    _, counts = fleet_inference_step(det, frames, grids)
+    step_wall = time.time() - step_t0
+    launches_per_group = {k: v / fleet.num_groups
+                          for k, v in dict(counts).items()}
+
+    # --- panel 3: drift adaptation under a scripted traffic shift ----------
+    d_dur, d_prof, d_shift = (60, 250, 30.0) if quick else (80, 300, 40.0)
+    drift_scene = generate_scene(SceneConfig(
+        duration_s=d_dur, seed=2, entry_weights=(0.5, 0.5, 0.0, 0.0),
+        shift_at_s=d_shift, shift_entry_weights=(0.0, 0.0, 0.5, 0.5)))
+    drift_off = run_offline(drift_scene, OfflineConfig(
+        profile_frames=d_prof, solver="greedy"))
+    res = run_adaptive_online(
+        drift_scene, drift_off, d_prof, d_dur * 10,
+        DriftConfig(confirm_frames=120) if quick else DriftConfig())
+    ev = res.adapter.events[0] if res.adapter.events else None
+    cov_after = (res.coverage_between(ev.t + 1, d_dur * 10) if ev
+                 else res.coverage_between(d_prof, d_dur * 10))
+
+    payload = {
+        "fleet_groups": fleet.num_groups,
+        "fleet_cameras": fleet.num_cameras,
+        "traffic_profiles": profiles,
+        "cross_group_leakage": cross_group_leakage(fleet, frame_step=100),
+        "per_group_accuracy": [m.accuracy for m in fm.per_group],
+        "per_group_baseline_accuracy": base_acc,
+        "accuracy_min": fm.accuracy_min,
+        "network_mbps_total": fm.network_mbps_total,
+        "per_group_server_hz": [m.server_hz for m in fm.per_group],
+        "fleet_server_hz": fm.fleet_server_hz,
+        "camera_fps_min": fm.camera_fps_min,
+        "latency_max_s": fm.latency_max_s,
+        "online_eval_wall_s": fm.wall_s,
+        "offline_wall_s": offs.wall_s,
+        "launches_per_group_step": launches_per_group,
+        "fleet_step_wall_s": step_wall,
+        "num_conv_layers": det.num_conv_layers,
+        "drift_resolves": res.resolves,
+        "drift_coverage_before": ev.coverage_before if ev else 1.0,
+        "drift_coverage_after": cov_after,
+        "drift_tiles_added": ev.tiles_added if ev else 0,
+        "drift_resolve_wall_s": ev.wall_s if ev else 0.0,
+        "wall_s": time.time() - t00,
+    }
+    if verbose:
+        rows = [[str(g.gid), g.spec.profile, f"{m.accuracy:.4f}",
+                 f"{b:.4f}", f"{m.network_mbps:.2f}",
+                 f"{m.server_hz:.1f}"]
+                for g, m, b in zip(fleet.groups, fm.per_group, base_acc)]
+        print(f"== fleet online: {fleet.num_groups} groups x "
+              f"{fleet.cams_per_group} cams ==")
+        print(table(rows, ["group", "profile", "accuracy", "baseline",
+                           "Mbps", "server Hz"]))
+        print(f"fleet-multiplexed server rate {fm.fleet_server_hz:.1f} Hz; "
+              f"total network {fm.network_mbps_total:.1f} Mbps; online "
+              f"eval {fm.wall_s:.2f}s")
+        print(f"packed dispatch per group step: {launches_per_group} "
+              f"({det.num_conv_layers} conv layers)")
+        print(f"drift: {res.resolves} re-solve(s); coverage "
+              f"{payload['drift_coverage_before']:.3f} -> "
+              f"{cov_after:.3f}; +{payload['drift_tiles_added']} tiles in "
+              f"{payload['drift_resolve_wall_s']*1e3:.0f} ms")
+    save_json("bench_fleet.json", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

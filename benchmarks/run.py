@@ -17,7 +17,7 @@ import os
 import time
 
 BENCHES = ["reid", "compression", "ablations", "sensitivity", "reducto",
-           "kernels", "roofline"]
+           "kernels", "fleet", "roofline"]
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -55,9 +55,59 @@ def quick():
         "visited k-blocks should track the causal lower-tri fraction"
 
     out = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+    payload = _merge_bench_json(out, payload)
     with open(out, "w") as f:
         json.dump(payload, f, indent=1, default=float)
     print(f"\nquick smoke OK in {time.time() - t0:.1f}s -> {out}")
+
+
+def _merge_bench_json(path: str, update: dict) -> dict:
+    """BENCH_kernels.json accumulates panels (--quick writes the kernel
+    keys, --fleet the "fleet" key); merge so neither run clobbers the
+    other's section."""
+    merged = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    merged.update(update)
+    return merged
+
+
+def fleet_quick():
+    """CI smoke for the fleet subsystem: 2 groups x 5 cams (~10 s).
+
+    Asserts the fleet structural invariants — one packed conv launch per
+    group per step (not per camera), zero cross-group leakage, per-group
+    accuracy no worse than the single-group baseline, and the drift
+    adapter recovering >= 95% coverage with one warm re-solve — then
+    writes throughput + drift-resolve counts into BENCH_kernels.json
+    under the "fleet" key."""
+    from benchmarks import bench_fleet
+    t0 = time.time()
+    payload = bench_fleet.run(verbose=True, quick=True)
+
+    assert payload["cross_group_leakage"] == 0
+    launches = payload["launches_per_group_step"]
+    n_layers = payload["num_conv_layers"]
+    assert launches.get("roi_conv_fleet", 0) == 1, launches
+    assert launches.get("sbnet_scatter_fleet", 0) == 1, launches
+    assert launches.get("roi_conv_packed", 0) == n_layers - 1, launches
+    for acc, base in zip(payload["per_group_accuracy"],
+                         payload["per_group_baseline_accuracy"]):
+        assert acc >= base, "fleet runtime must not lose accuracy"
+    assert payload["drift_resolves"] == 1, payload["drift_resolves"]
+    assert payload["drift_coverage_after"] >= 0.95, \
+        payload["drift_coverage_after"]
+    assert payload["fleet_server_hz"] > 0
+
+    out = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+    merged = _merge_bench_json(out, {"fleet": payload})
+    with open(out, "w") as f:
+        json.dump(merged, f, indent=1, default=float)
+    print(f"\nfleet smoke OK in {time.time() - t0:.1f}s -> {out}")
 
 
 def main():
@@ -67,9 +117,15 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: bench_kernels invariants + "
                          "BENCH_kernels.json")
+    ap.add_argument("--fleet", action="store_true",
+                    help="CI smoke: fleet invariants (2 groups x 5 cams) "
+                         "merged into BENCH_kernels.json")
     args = ap.parse_args()
     if args.quick:
         quick()
+    if args.fleet:
+        fleet_quick()
+    if args.quick or args.fleet:
         return
     selected = args.only.split(",") if args.only else BENCHES
 

@@ -12,8 +12,10 @@ from repro.core.filters import (FilterConfig, KernelSVM, RansacConfig,
                                 SVMConfig, apply_filters, ransac_regression)
 from repro.core.grouping import TileGroup, group_tiles, groups_cover
 from repro.core.pipeline import (OfflineConfig, OfflineResult, OnlineConfig,
-                                 OnlineMetrics, ServerModel,
-                                 full_frame_offline, run_offline, run_online)
+                                 OnlineMetrics, ServerModel, bbox_arrays,
+                                 coverage_flags_batched, full_frame_offline,
+                                 run_offline, run_online,
+                                 segment_network_bytes)
 from repro.core.reducto import ReductoResult, tune_and_run
 from repro.core.reid import (ReIDNoiseConfig, ReIDRecord,
                              characterize_pairwise, run_noisy_reid)
@@ -27,7 +29,8 @@ __all__ = [
     "SVMConfig", "apply_filters", "ransac_regression", "TileGroup",
     "group_tiles", "groups_cover", "OfflineConfig", "OfflineResult",
     "OnlineConfig", "OnlineMetrics", "ServerModel", "full_frame_offline",
-    "run_offline", "run_online", "ReductoResult", "tune_and_run",
+    "run_offline", "run_online", "bbox_arrays", "coverage_flags_batched",
+    "segment_network_bytes", "ReductoResult", "tune_and_run",
     "ReIDNoiseConfig", "ReIDRecord", "characterize_pairwise",
     "run_noisy_reid", "Scene", "SceneConfig", "default_cameras",
     "generate_scene", "setcover",

@@ -236,41 +236,167 @@ def bbox_mask_area(cam, grid: np.ndarray, b) -> float:
     return float(iy @ grid[y0:y1, x0:x1].astype(np.float64) @ ix)
 
 
-def _detects_batch(cam, offline: OfflineResult, bboxes, thresh: float
-                   ) -> np.ndarray:
-    """Vectorized ``_detects`` over all of one camera's detections."""
-    grid = offline.cam_grids[cam.cam_id]
+def bbox_arrays(bboxes) -> Tuple[np.ndarray, ...]:
+    """(left, top, right, bottom, area) float64 arrays for a bbox batch."""
     n = len(bboxes)
     l = np.fromiter((b.left for b in bboxes), np.float64, n)
     t = np.fromiter((b.top for b in bboxes), np.float64, n)
     r = np.fromiter((b.right for b in bboxes), np.float64, n)
     btm = np.fromiter((b.bottom for b in bboxes), np.float64, n)
+    area = np.fromiter((b.area for b in bboxes), np.float64, n)
+    return l, t, r, btm, area
+
+
+def coverage_flags_batched(cameras: Sequence, grids: Sequence[np.ndarray],
+                           det_cam: np.ndarray, l: np.ndarray, t: np.ndarray,
+                           r: np.ndarray, btm: np.ndarray, area: np.ndarray,
+                           thresh: float, chunk: int = 8192) -> np.ndarray:
+    """Detector coverage flags for a flat detection batch spanning ANY set
+    of cameras — one scene's five or a whole fleet's K groups — with no
+    per-camera Python loop.  ``det_cam`` indexes positionally into
+    ``cameras``/``grids``.  Per-camera grids are laid out on a padded
+    (C, TY, TX) canvas; the padding is all-False and every bbox is clipped
+    to its own frame, so results are exactly the per-camera evaluation.
+
+    thresh >= 1.0 is the strict every-tile-covered criterion (stacked
+    integral images, 4 gathers per bbox); below it, a detection counts if
+    >= thresh of its pixel area survives the RoI crop (separable
+    bbox/tile-rect overlap, contracted in camera-indexed chunks)."""
+    n = det_cam.shape[0]
+    if n == 0:
+        return np.zeros(0, bool)
+    T = cameras[0].tile
+    assert all(c.tile == T for c in cameras), "fleet cameras share tile size"
+    tiles_x = np.asarray([c.tiles_x for c in cameras], np.int64)
+    tiles_y = np.asarray([c.tiles_y for c in cameras], np.int64)
+    TY, TX = int(tiles_y.max()), int(tiles_x.max())
     if thresh >= 1.0:
-        # strict criterion: every tile of the bbox rect inside the mask —
-        # an integral image turns the per-bbox all() into 4 lookups
-        # frame-clamped tile rect, mirroring Camera.bbox_tiles; an empty
-        # rect (bbox fully off-frame) is vacuously covered, matching the
-        # frozenset-subset formulation
-        T = cam.tile
-        x0 = np.clip(l.astype(np.int64) // T, 0, cam.tiles_x)
-        y0 = np.clip(t.astype(np.int64) // T, 0, cam.tiles_y)
-        x1 = np.minimum(np.ceil(r / T).astype(np.int64) - 1, cam.tiles_x - 1)
-        y1 = np.minimum(np.ceil(btm / T).astype(np.int64) - 1,
-                        cam.tiles_y - 1)
+        I = np.zeros((len(cameras), TY + 1, TX + 1), np.int64)
+        for ci, g in enumerate(grids):
+            I[ci, :g.shape[0] + 1, :g.shape[1] + 1] = integral_image(g)
+        cx, cy = tiles_x[det_cam], tiles_y[det_cam]
+        x0 = np.clip(l.astype(np.int64) // T, 0, cx)
+        y0 = np.clip(t.astype(np.int64) // T, 0, cy)
+        x1 = np.minimum(np.ceil(r / T).astype(np.int64) - 1, cx - 1)
+        y1 = np.minimum(np.ceil(btm / T).astype(np.int64) - 1, cy - 1)
         empty = (x1 < x0) | (y1 < y0)
         # clamp lookup corners so empty rects stay in-bounds (their cnt is
         # discarded — `empty` short-circuits to covered)
         x1c = np.maximum(x1, x0 - 1)
         y1c = np.maximum(y1, y0 - 1)
-        I = integral_image(grid)
-        cnt = (I[y1c + 1, x1c + 1] - I[y0, x1c + 1]
-               - I[y1c + 1, x0] + I[y0, x0])
+        cnt = (I[det_cam, y1c + 1, x1c + 1] - I[det_cam, y0, x1c + 1]
+               - I[det_cam, y1c + 1, x0] + I[det_cam, y0, x0])
         full = cnt == (y1c - y0 + 1) * (x1c - x0 + 1)
         return empty | full
-    iy, ix = _bbox_tile_overlaps(cam, l, t, r, btm)
-    cov = np.einsum("ny,nx,yx->n", iy, ix, grid.astype(np.float64))
-    area = np.fromiter((b.area for b in bboxes), np.float64, n)
+    G = np.zeros((len(cameras), TY, TX), np.float64)
+    for ci, g in enumerate(grids):
+        G[ci, :g.shape[0], :g.shape[1]] = g
+    txs = np.arange(TX) * T
+    tys = np.arange(TY) * T
+    cov = np.empty(n, np.float64)
+    for s in range(0, n, chunk):
+        e = min(s + chunk, n)
+        ix = np.clip(np.minimum(r[s:e, None], txs[None, :] + T)
+                     - np.maximum(l[s:e, None], txs[None, :]), 0.0, None)
+        iy = np.clip(np.minimum(btm[s:e, None], tys[None, :] + T)
+                     - np.maximum(t[s:e, None], tys[None, :]), 0.0, None)
+        cov[s:e] = np.einsum("ny,nx,nyx->n", iy, ix, G[det_cam[s:e]])
     return cov >= thresh * np.maximum(area, 1.0)
+
+
+def _detects_batch(cam, offline: OfflineResult, bboxes, thresh: float
+                   ) -> np.ndarray:
+    """Vectorized ``_detects`` over all of one camera's detections."""
+    grid = offline.cam_grids[cam.cam_id]
+    l, t, r, btm, area = bbox_arrays(bboxes)
+    det_cam = np.zeros(len(bboxes), np.int64)
+    return coverage_flags_batched([cam], [grid], det_cam, l, t, r, btm,
+                                  area, thresh)
+
+
+def segment_network_bytes(cameras: Sequence, cam_groups, codec: CodecModel,
+                          keep, n_segs: int, frames_per_seg: int
+                          ) -> Tuple[float, np.ndarray]:
+    """Vectorized (cameras x segments) streaming model.
+
+    Replaces the per-(camera, segment) Python loop: per-segment sent-frame
+    counts come from one reshape-sum over the keep masks, and the codec's
+    group pricing — linear in activity — collapses to one per-camera
+    coefficient (sum over merged rectangles of area * rho * boundary
+    amplification) times the segment activity series, plus per-stream
+    headers on segments that ship at least one frame.  Returns
+    (total_bytes, frames_sent (C,) int64 positional per camera)."""
+    C = len(cameras)
+    win = n_segs * frames_per_seg
+    sent = np.full((C, n_segs), frames_per_seg, np.int64)
+    if keep is not None:
+        for ci, c in enumerate(cameras):
+            km = np.zeros(win, bool)
+            src = np.asarray(keep[c.cam_id], bool)[:win]
+            km[:src.shape[0]] = src
+            sent[ci] = km.reshape(n_segs, frames_per_seg).sum(axis=1)
+    act = 1.0 / np.sqrt(np.maximum(sent, 1) / 10.0) * 0.9 + 0.1
+    active = sent > 0
+    total = 0.0
+    for ci, c in enumerate(cameras):
+        cid = c.cam_id
+        groups = cam_groups[cid]
+        areas = []
+        for g in groups:
+            x0, y0 = g.x0 * c.tile, g.y0 * c.tile
+            areas.append(min(g.w * c.tile, c.width - x0)
+                         * min(g.h * c.tile, c.height - y0))
+        areas = np.asarray(areas, np.float64)
+        pos = areas > 0
+        k, rho = codec.boundary_k[cid], codec.rho[cid]
+        per_frame = float(np.sum(areas[pos] * rho
+                                 * (1.0 + k / np.sqrt(areas[pos]))))
+        headers = codec.header_bytes * int(np.count_nonzero(pos))
+        total += (per_frame * float(np.sum(act[ci][active[ci]]
+                                           * sent[ci][active[ci]]))
+                  + headers * int(np.count_nonzero(active[ci])))
+    return total, sent.sum(axis=1)
+
+
+def online_system_metrics(cameras: Sequence, offline: OfflineResult,
+                          cfg: "OnlineConfig", fps: float, n_frames: int,
+                          keep=None):
+    """Network / throughput / latency block of the online phase, shared by
+    ``run_online`` (one scene) and the fleet runtime (per group) so the
+    two stay numerically identical by construction.  Returns
+    (network_mbps, server_hz, camera_fps, latency_s, latency_parts,
+    total_bytes, frames_sent (C,))."""
+    codec = CodecModel.calibrated(cameras, fps)
+    encoder = EncoderModel()
+    server = ServerModel()
+    frames_per_seg = max(int(round(cfg.segment_s * fps)), 1)
+    n_segs = max(n_frames // frames_per_seg, 1)
+    total_bytes, frames_sent = segment_network_bytes(
+        cameras, offline.cam_groups, codec, keep, n_segs, frames_per_seg)
+    duration_s = n_frames / fps
+    network_mbps = total_bytes * 8.0 / duration_s / 1e6
+
+    roi_density = offline.fleet_density
+    server_hz = server.throughput_hz(roi_density, cfg.roi_inference)
+    # camera fps: bounded by encode speed over the cropped area (worst cam)
+    worst_area = max(offline.mask_area_px(c.cam_id) for c in cameras)
+    camera_fps = min(encoder.throughput_fps(worst_area), 160.0)
+
+    seg = cfg.segment_s
+    wait = seg / 2.0                                 # frame->segment close
+    enc = max(offline.mask_area_px(c.cam_id) * frames_per_seg
+              for c in cameras) / encoder.pixels_per_s
+    seg_bytes = total_bytes / n_segs
+    tx = seg_bytes * 8.0 / (cfg.bandwidth_mbps * 1e6) + cfg.rtt_ms / 2e3
+    # the server runs the segment's fleet-frames through the detector in
+    # arrival order: the average frame sits behind half the segment, plus
+    # one in-flight frame per camera stream.
+    avg_sent_per_seg = float(frames_sent.sum()) / n_segs
+    infer = (avg_sent_per_seg / 2.0 + len(cameras)) / server_hz
+    latency = wait + enc + tx + infer
+    parts = {"wait": wait, "encode": enc, "network": tx, "inference": infer}
+    return (network_mbps, server_hz, camera_fps, latency, parts,
+            total_bytes, frames_sent)
 
 
 def _detects(scene: Scene, offline: OfflineResult, d, thresh: float) -> bool:
@@ -293,9 +419,6 @@ def run_online(scene: Scene, offline: OfflineResult,
     n_frames = t1 - t0
     fps = scene.cfg.fps
     universe = offline.universe
-    codec = CodecModel.calibrated(scene.cameras, fps)
-    encoder = EncoderModel()
-    server = ServerModel()
 
     # ---- accuracy: unique-vehicle detection per timestamp ----------------
     # Vectorized: (1) per-camera batched coverage flags for every detection
@@ -315,13 +438,11 @@ def run_online(scene: Scene, offline: OfflineResult,
         obj_ids, det_obj = np.unique(
             np.fromiter((d.obj for _, d in dets_flat), np.int64, nd),
             return_inverse=True)
-        flags = np.zeros(nd, bool)
-        for c in scene.cameras:
-            sel = np.nonzero(det_cam == c.cam_id)[0]
-            if sel.size:
-                flags[sel] = _detects_batch(
-                    c, offline, [dets_flat[i][1].bbox for i in sel],
-                    cfg.coverage_thresh)
+        l, tt, rr, bb, area = bbox_arrays([d.bbox for _, d in dets_flat])
+        flags = coverage_flags_batched(
+            scene.cameras, [offline.cam_grids[c.cam_id]
+                            for c in scene.cameras],
+            det_cam, l, tt, rr, bb, area, cfg.coverage_thresh)
 
         C, O = len(scene.cameras), len(obj_ids)
         present = np.zeros((n_frames, O), bool)
@@ -355,54 +476,14 @@ def run_online(scene: Scene, offline: OfflineResult,
     missed = int(missed_per_t.sum())
     accuracy = 1.0 - missed / max(total, 1)
 
-    # ---- network overhead -------------------------------------------------
-    frames_per_seg = max(int(round(cfg.segment_s * fps)), 1)
-    n_segs = max(n_frames // frames_per_seg, 1)
+    # ---- network / throughput / latency -----------------------------------
     # per-frame activity: fraction of streamed content that changed; approx
-    # by object bbox area within the mask relative to mask area
-    total_bytes = 0.0
-    frames_sent_per_cam = np.zeros(len(scene.cameras), np.int64)
-    for c in scene.cameras:
-        cid = c.cam_id
-        groups = offline.cam_groups[cid]
-        for si in range(n_segs):
-            s0, s1 = t0 + si * frames_per_seg, t0 + (si + 1) * frames_per_seg
-            if keep is not None:
-                sent = int(keep[cid][s0 - t0:s1 - t0].sum())
-            else:
-                sent = frames_per_seg
-            if sent == 0:
-                continue
-            frames_sent_per_cam[cid] += sent
-            # segment compression efficiency improves with longer segments
-            # (more temporal references): activity ~ 1/sqrt(seg frames / 10)
-            act = 1.0 / np.sqrt(max(sent, 1) / 10.0) * 0.9 + 0.1
-            total_bytes += codec.groups_bytes(cid, groups, sent, act)
-    duration_s = n_frames / fps
-    network_mbps = total_bytes * 8.0 / duration_s / 1e6
-
-    # ---- throughput ---------------------------------------------------------
-    roi_density = offline.fleet_density
-    server_hz = server.throughput_hz(roi_density, cfg.roi_inference)
-    # camera fps: bounded by encode speed over the cropped area (worst cam)
-    worst_area = max(offline.mask_area_px(c.cam_id) for c in scene.cameras)
-    camera_fps = min(encoder.throughput_fps(worst_area), 160.0)
-
-    # ---- end-to-end latency -------------------------------------------------
-    seg = cfg.segment_s
-    wait = seg / 2.0                                     # frame->segment close
-    frames_seg = frames_per_seg
-    enc = max(offline.mask_area_px(c.cam_id) * frames_seg
-              for c in scene.cameras) / encoder.pixels_per_s
-    seg_bytes = total_bytes / n_segs
-    tx = seg_bytes * 8.0 / (cfg.bandwidth_mbps * 1e6) + cfg.rtt_ms / 2e3
-    # the server runs the segment's fleet-frames through the detector in
-    # arrival order: the average frame sits behind half the segment, plus
-    # one in-flight frame per camera stream.
-    avg_sent_per_seg = float(frames_sent_per_cam.sum()) / n_segs
-    infer = (avg_sent_per_seg / 2.0 + len(scene.cameras)) / server_hz
-    latency = wait + enc + tx + infer
-    parts = {"wait": wait, "encode": enc, "network": tx, "inference": infer}
+    # by object bbox area within the mask relative to mask area; segment
+    # compression efficiency improves with longer segments (more temporal
+    # references): activity ~ 1/sqrt(seg frames / 10)
+    (network_mbps, server_hz, camera_fps, latency, parts, _,
+     _) = online_system_metrics(scene.cameras, offline, cfg, fps, n_frames,
+                                keep)
 
     frames_reduced = 0
     if keep is not None:

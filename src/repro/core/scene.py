@@ -40,6 +40,21 @@ class SceneConfig:
     vehicle_length: float = 4.6
     vehicle_width: float = 1.9
     vehicle_height: float = 1.6
+    # --- traffic profile (fleet scenario diversity; see fleet/topology) ---
+    # "uniform" keeps the original constant-rate spawn process (and, with
+    # the remaining fields at their defaults, the exact legacy RNG stream,
+    # so seeded scenes are bit-identical to earlier revisions).
+    spawn_profile: str = "uniform"       # uniform | rush_hour | sparse | bursty
+    entry_weights: Optional[Tuple[float, ...]] = None  # over N, S, E, W
+    turn_probs: Tuple[float, float, float] = (0.6, 0.2, 0.2)
+    # --- scripted traffic shift (mask-drift evaluation, paper §5.5) ------
+    # From ``shift_at_s`` on, new vehicles spawn with the shifted entry /
+    # turn distributions — e.g. profiling on N/S traffic and shifting to
+    # E/W traffic moves the occupied corridors, which is exactly the drift
+    # the online adapter has to chase.
+    shift_at_s: Optional[float] = None
+    shift_entry_weights: Optional[Tuple[float, ...]] = None
+    shift_turn_probs: Optional[Tuple[float, float, float]] = None
 
     @property
     def num_frames(self) -> int:
@@ -146,6 +161,24 @@ def _opposite(d: str) -> str:
     return {"N": "S", "S": "N", "E": "W", "W": "E"}[d]
 
 
+# ---------------------------------------------------------------------------
+# spawn-intensity profiles (per-group scenario diversity for fleet scenes)
+# ---------------------------------------------------------------------------
+# name -> (peak multiplier, intensity(t, duration) in [0, peak]); spawning
+# uses Poisson thinning at the peak rate, so any bounded profile is exact.
+
+SPAWN_PROFILES = {
+    "uniform": (1.0, lambda t, T: 1.0),
+    # commute ramp: quiet shoulders, ~1.6x the base rate at mid-window
+    "rush_hour": (1.6, lambda t, T: 0.4 + 1.2 * float(
+        np.sin(np.pi * min(max(t / max(T, 1e-9), 0.0), 1.0)))),
+    # light overnight traffic
+    "sparse": (0.35, lambda t, T: 0.35),
+    # platoons: 15 s bursts every 45 s, near-empty gaps between
+    "bursty": (1.8, lambda t, T: 1.8 if (t % 45.0) < 15.0 else 0.2),
+}
+
+
 @dataclass
 class Scene:
     cfg: SceneConfig
@@ -171,20 +204,53 @@ def generate_scene(cfg: Optional[SceneConfig] = None,
     vehicles: List[Vehicle] = []
     vid = 0
     t = 0.0
-    while t < cfg.duration_s:
-        gap = rng.exponential(1.0 / cfg.spawn_rate)
-        t += gap
-        entry = rng.choice(list(_DIRS))
-        exit_ = rng.choice(_TURNS[entry], p=[0.6, 0.2, 0.2])
-        vehicles.append(Vehicle(
-            vid=vid,
-            t0=t,
-            speed=float(rng.uniform(*cfg.speed_range)),
-            entry=entry,
-            exit=exit_,
-            lane_offset=float(rng.uniform(2.0, cfg.road_halfwidth - 1.5)),
-        ))
-        vid += 1
+    legacy = (cfg.spawn_profile == "uniform" and cfg.entry_weights is None
+              and cfg.turn_probs == (0.6, 0.2, 0.2)
+              and cfg.shift_at_s is None)
+    if legacy:
+        # original constant-rate process, draw-for-draw (seed stability)
+        while t < cfg.duration_s:
+            gap = rng.exponential(1.0 / cfg.spawn_rate)
+            t += gap
+            entry = rng.choice(list(_DIRS))
+            exit_ = rng.choice(_TURNS[entry], p=[0.6, 0.2, 0.2])
+            vehicles.append(Vehicle(
+                vid=vid,
+                t0=t,
+                speed=float(rng.uniform(*cfg.speed_range)),
+                entry=entry,
+                exit=exit_,
+                lane_offset=float(rng.uniform(2.0,
+                                              cfg.road_halfwidth - 1.5)),
+            ))
+            vid += 1
+    else:
+        peak, intensity = SPAWN_PROFILES[cfg.spawn_profile]
+        dirs = list(_DIRS)
+        while t < cfg.duration_s:
+            gap = rng.exponential(1.0 / (cfg.spawn_rate * peak))
+            t += gap
+            # Poisson thinning: accept at the local intensity
+            if rng.random() >= intensity(t, cfg.duration_s) / peak:
+                continue
+            shifted = cfg.shift_at_s is not None and t >= cfg.shift_at_s
+            ew = (cfg.shift_entry_weights if shifted
+                  and cfg.shift_entry_weights is not None
+                  else cfg.entry_weights)
+            tp = (cfg.shift_turn_probs if shifted
+                  and cfg.shift_turn_probs is not None else cfg.turn_probs)
+            entry = rng.choice(dirs, p=ew)
+            exit_ = rng.choice(_TURNS[entry], p=list(tp))
+            vehicles.append(Vehicle(
+                vid=vid,
+                t0=t,
+                speed=float(rng.uniform(*cfg.speed_range)),
+                entry=entry,
+                exit=exit_,
+                lane_offset=float(rng.uniform(2.0,
+                                              cfg.road_halfwidth - 1.5)),
+            ))
+            vid += 1
 
     detections: List[List[Detection]] = []
     for fi in range(cfg.num_frames):

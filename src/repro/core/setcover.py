@@ -105,7 +105,8 @@ def preprocess(constraints: Sequence[Sequence[Region]]) -> CoreInstance:
 # greedy
 # ---------------------------------------------------------------------------
 
-def _greedy_core(core: CoreInstance) -> Set[int]:
+def _greedy_core(core: CoreInstance,
+                 seed: Optional[Set[int]] = None) -> Set[int]:
     """Cost-effectiveness greedy on a bitset representation.
 
     The set-based formulation recomputed constraint satisfaction for every
@@ -116,7 +117,14 @@ def _greedy_core(core: CoreInstance) -> Set[int]:
     updated incrementally after each pick instead of rebuilt.  Candidate
     enumeration order (constraint order, then region order) matches the old
     code, so tie-breaking — and therefore the chosen mask — is identical.
-    """
+
+    ``seed`` warm-starts the solve from an existing mask (the online
+    drift adapter re-solves incrementally): seeded tiles count as already
+    chosen — constraints with a fully-seeded region are satisfied up
+    front, residuals shrink accordingly, and the greedy only pays for
+    tiles the seed doesn't already cover.  The returned set contains ONLY
+    the newly chosen tiles (callers union with their seed).  ``seed=None``
+    (or empty) is byte-identical to the cold solve."""
     ncons = len(core.constraints)
     if ncons == 0:
         return set()
@@ -138,6 +146,14 @@ def _greedy_core(core: CoreInstance) -> Set[int]:
     resid = R.copy()                       # region tiles still uncovered
     chosen = np.zeros(nt, bool)
     unsat = np.ones(ncons, bool)
+
+    if seed:
+        seeded = np.zeros(nt, bool)
+        hits = [tidx[t] for t in seed if t in tidx]
+        if hits:
+            seeded[hits] = True
+            resid &= ~seeded               # seeded tiles are free
+            unsat[rcons[~resid.any(axis=1)]] = False
 
     while unsat.any():
         best = None                        # (score, region_row_index)
@@ -169,6 +185,24 @@ def solve_greedy(table: AssociationTable) -> SolveResult:
     chosen = _greedy_core(core)
     mask = frozenset(core.forced | chosen)
     return SolveResult(mask, float(len(core.forced)), "greedy",
+                       wall_s=time.time() - t0)
+
+
+def solve_warm(table: AssociationTable, seed_mask) -> SolveResult:
+    """Incremental greedy re-solve seeded from an existing mask.
+
+    The online drift adapter's path: constraints come from a recent
+    observation window, ``seed_mask`` is the currently deployed mask.  The
+    result always contains the seed (deployed tiles are not retracted
+    mid-stream — shrinking is an offline decision) plus the cheapest greedy
+    completion for the constraints the seed no longer covers.  Cost scales
+    with the residual core, not the full offline instance."""
+    t0 = time.time()
+    seed = set(seed_mask)
+    core = preprocess(table.constraints)
+    chosen = _greedy_core(core, seed=seed)
+    mask = frozenset(seed | core.forced | chosen)
+    return SolveResult(mask, float(len(core.forced)), "greedy-warm",
                        wall_s=time.time() - t0)
 
 

@@ -1,0 +1,26 @@
+"""Fleet layer: many intersections, one engine.
+
+Sits between the offline solver (`repro.core`) and the serving stack
+(`repro.serving`): `topology` composes the single-intersection scene into K
+independent camera groups with per-group traffic profiles; `runtime` runs
+the fleet online phase as one vectorized evaluation plus one packed conv
+launch chain per group per step; `drift` keeps the deployed RoI masks
+tracking traffic shifts with warm-started incremental re-solves.
+"""
+from repro.fleet.topology import (FleetConfig, FleetGroup, FleetScene,
+                                  GroupSpec, TRAFFIC_PROFILES, build_fleet,
+                                  cross_group_leakage)
+from repro.fleet.runtime import (FleetOfflineResult, FleetOnlineMetrics,
+                                 fleet_inference_step, run_fleet_offline,
+                                 run_fleet_online)
+from repro.fleet.drift import (AdaptiveRunResult, DriftAdapter, DriftConfig,
+                               DriftEvent, run_adaptive_online)
+
+__all__ = [
+    "FleetConfig", "FleetGroup", "FleetScene", "GroupSpec",
+    "TRAFFIC_PROFILES", "build_fleet", "cross_group_leakage",
+    "FleetOfflineResult", "FleetOnlineMetrics", "fleet_inference_step",
+    "run_fleet_offline", "run_fleet_online",
+    "AdaptiveRunResult", "DriftAdapter", "DriftConfig", "DriftEvent",
+    "run_adaptive_online",
+]

@@ -1,0 +1,201 @@
+"""Fleet online runtime: K camera groups, one engine, no per-camera loops.
+
+Three jobs:
+
+* ``run_fleet_offline`` — the offline phase per group.  Groups are
+  independent by construction (topology), so this is exactly the
+  single-intersection pipeline run K times; per-group results are
+  bit-identical to isolation.
+* ``run_fleet_online`` — the online phase for the whole fleet as ONE
+  vectorized evaluation: every detection of every camera of every group is
+  flattened into flat arrays and coverage flags come from a single
+  ``coverage_flags_batched`` call over the fleet's stacked mask grids
+  (replacing ``run_online``'s per-camera Python loop); the (camera x
+  segment) network model is the vectorized ``segment_network_bytes``.
+  Per-group metrics are numerically identical to ``run_online`` on that
+  group alone — the fleet path changes the schedule, not the math.
+* ``fleet_inference_step`` — the kernel-level hot path: per group, all
+  cameras' active RoI tiles run as ONE fused gather+conv, ONE
+  ``roi_conv_packed`` per remaining layer (cross-camera neighbor table
+  with per-camera slot offsets — halos cannot leak between cameras), and
+  ONE scatter.  The dispatch structure is asserted per group via
+  ``ops.count_kernels`` on every step.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.pipeline import (OfflineConfig, OfflineResult, OnlineConfig,
+                                 OnlineMetrics, bbox_arrays,
+                                 coverage_flags_batched,
+                                 online_system_metrics, run_offline)
+from repro.fleet.topology import FleetScene
+from repro.kernels import ops as kops
+
+
+# ---------------------------------------------------------------------------
+# offline phase
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FleetOfflineResult:
+    per_group: List[OfflineResult]
+    wall_s: float = 0.0
+
+    @property
+    def fleet_density(self) -> float:
+        return float(np.mean([o.fleet_density for o in self.per_group]))
+
+
+def run_fleet_offline(fleet: FleetScene,
+                      cfg: Optional[OfflineConfig] = None
+                      ) -> FleetOfflineResult:
+    t0 = time.time()
+    per_group = [run_offline(g.scene, cfg) for g in fleet.groups]
+    return FleetOfflineResult(per_group, wall_s=time.time() - t0)
+
+
+# ---------------------------------------------------------------------------
+# online phase (vectorized across the whole fleet)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FleetOnlineMetrics:
+    per_group: List[OnlineMetrics]
+    accuracy_mean: float
+    accuracy_min: float
+    network_mbps_total: float
+    fleet_server_hz: float        # one engine multiplexing all groups
+    camera_fps_min: float
+    latency_max_s: float
+    wall_s: float = 0.0
+
+
+def run_fleet_online(fleet: FleetScene,
+                     offlines: Sequence[OfflineResult],
+                     cfg: Optional[OnlineConfig] = None,
+                     t0: Optional[int] = None, t1: Optional[int] = None
+                     ) -> FleetOnlineMetrics:
+    cfg = cfg or OnlineConfig()
+    if cfg.frame_keep is not None:
+        raise NotImplementedError("fleet runtime does not take Reducto "
+                                  "keep masks; run per-group run_online")
+    wall0 = time.time()
+    t0 = t0 if t0 is not None else 600
+    t1 = t1 if t1 is not None else min(len(g.scene.detections)
+                                       for g in fleet.groups)
+    n_frames = t1 - t0
+    fps = fleet.groups[0].scene.cfg.fps
+
+    cameras = fleet.all_cameras()
+    grids = [offlines[g.gid].cam_grids[c.cam_id]
+             for g in fleet.groups for c in g.scene.cameras]
+
+    # ---- flatten every group's detections into one flat batch ------------
+    det_t_parts, det_cam_parts, det_obj_parts, bbox_parts = [], [], [], []
+    group_obj_slice = []                 # [o_start, o_end) per group
+    obj_base = 0
+    cam_base = 0
+    for g in fleet.groups:
+        rows = [(ti - t0, d) for ti in range(t0, t1)
+                for d in g.scene.detections[ti]]
+        ng = len(rows)
+        gt = np.fromiter((t for t, _ in rows), np.int64, ng)
+        gc = np.fromiter((d.cam for _, d in rows), np.int64, ng) + cam_base
+        _, ginv = np.unique(
+            np.fromiter((d.obj for _, d in rows), np.int64, ng),
+            return_inverse=True)
+        n_obj = int(ginv.max()) + 1 if ng else 0
+        det_t_parts.append(gt)
+        det_cam_parts.append(gc)
+        det_obj_parts.append(ginv.astype(np.int64) + obj_base)
+        bbox_parts.extend(d.bbox for _, d in rows)
+        group_obj_slice.append((obj_base, obj_base + n_obj))
+        obj_base += n_obj
+        cam_base += g.num_cameras
+
+    nd = sum(p.shape[0] for p in det_t_parts)
+    C, O = len(cameras), obj_base
+    missed_per_group = [np.zeros(n_frames, np.int64) for _ in fleet.groups]
+    totals = [0 for _ in fleet.groups]
+    if nd:
+        det_t = np.concatenate(det_t_parts)
+        det_cam = np.concatenate(det_cam_parts)
+        det_obj = np.concatenate(det_obj_parts)
+        l, tt, rr, bb, area = bbox_arrays(bbox_parts)
+
+        # ONE coverage evaluation for every camera in every group
+        flags = coverage_flags_batched(cameras, grids, det_cam, l, tt, rr,
+                                       bb, area, cfg.coverage_thresh)
+
+        present = np.zeros((n_frames, O), bool)
+        present[det_t, det_obj] = True
+        cur = np.zeros((n_frames, C, O), bool)
+        cur[det_t[flags], det_cam[flags], det_obj[flags]] = True
+        detected = cur.any(axis=1)
+        missed_grid = present & ~detected
+        for gi, (o0, o1) in enumerate(group_obj_slice):
+            missed_per_group[gi] = missed_grid[:, o0:o1].sum(axis=1) \
+                .astype(np.int64)
+            totals[gi] = int(present[:, o0:o1].sum())
+
+    # ---- per-group system metrics (the exact run_online block, shared) ----
+    per_group: List[OnlineMetrics] = []
+    for g, off in zip(fleet.groups, offlines):
+        (network_mbps, server_hz, camera_fps, latency, parts, _,
+         _) = online_system_metrics(g.scene.cameras, off, cfg, fps,
+                                    n_frames)
+        missed = int(missed_per_group[g.gid].sum())
+        total = totals[g.gid]
+        per_group.append(OnlineMetrics(
+            1.0 - missed / max(total, 1), missed, total,
+            missed_per_group[g.gid], network_mbps, server_hz, camera_fps,
+            latency, parts))
+
+    accs = [m.accuracy for m in per_group]
+    return FleetOnlineMetrics(
+        per_group=per_group,
+        accuracy_mean=float(np.mean(accs)),
+        accuracy_min=float(np.min(accs)),
+        network_mbps_total=float(sum(m.network_mbps for m in per_group)),
+        # one server multiplexing the groups round-robin: rates compose
+        # harmonically (time per fleet sweep = sum of per-group times)
+        fleet_server_hz=1.0 / sum(1.0 / m.server_hz for m in per_group),
+        camera_fps_min=float(min(m.camera_fps for m in per_group)),
+        latency_max_s=float(max(m.latency_s for m in per_group)),
+        wall_s=time.time() - wall0)
+
+
+# ---------------------------------------------------------------------------
+# kernel-level fleet step (one packed launch chain per group)
+# ---------------------------------------------------------------------------
+
+def fleet_inference_step(det, frames: Dict[int, List],
+                         grids: Dict[int, List[np.ndarray]]):
+    """Run one fleet step: every group's cameras as ONE packed launch chain.
+
+    frames[gid] / grids[gid]: per-camera frame arrays and RoI tile grids of
+    group ``gid``.  Returns ({gid: per-camera head maps}, total dispatch
+    Counter).  Asserts — per group, every step — the packed structure the
+    fleet batcher guarantees: one fused gather+conv, one packed conv per
+    remaining layer (not per camera), one scatter."""
+    outs = {}
+    total: collections.Counter = collections.Counter()
+    expected = {"roi_conv_fleet": 1,
+                "roi_conv_packed": det.num_conv_layers - 1,
+                "sbnet_scatter_fleet": 1}
+    for gid in frames:
+        with kops.count_kernels() as c:
+            outs[gid] = det.fleet_forward(frames[gid], grids[gid])
+        # compare via Counter lookups: a zero expectation (1-layer stack
+        # has no packed layers) must match an absent key
+        observed = {k: c[k] for k in expected}
+        assert observed == expected and not set(c) - set(expected), \
+            f"group {gid}: packed dispatch structure broken: {dict(c)}"
+        total.update(c)
+    return outs, total

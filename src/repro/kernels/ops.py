@@ -13,6 +13,7 @@ and one scatter (see serving/detector.RoIDetector.roi_forward).
 from __future__ import annotations
 
 import collections
+import contextlib
 import functools
 import os
 
@@ -24,9 +25,10 @@ from repro.kernels import ref
 from repro.kernels.roi_attention import (PAD_POS, block_min_positions,
                                          roi_attention as _roi_attn)
 from repro.kernels.roi_conv import (NEIGHBOR_OFFSETS, roi_conv as _roi_conv,
+                                    roi_conv_fleet as _roi_conv_fleet,
                                     roi_conv_packed as _roi_conv_packed)
 from repro.kernels.sbnet import sbnet_gather as _gather, \
-    sbnet_scatter as _scatter
+    sbnet_scatter as _scatter, sbnet_scatter_fleet as _scatter_fleet
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
@@ -34,6 +36,28 @@ INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 # issued from Python.  Reset with KERNEL_COUNTS.clear() around a region of
 # interest; each launch is counted once regardless of jit caching.
 KERNEL_COUNTS: collections.Counter = collections.Counter()
+
+
+@contextlib.contextmanager
+def count_kernels():
+    """Isolated dispatch-count region: ``with count_kernels() as c: ...``.
+
+    Snapshots ``KERNEL_COUNTS`` on entry, clears it for the region, and on
+    exit (a) fills ``c`` with the region's dispatch counts and (b) restores
+    the global counter to snapshot + region — so an enclosing region (an
+    outer test, the fleet runtime's own assertion window) still observes
+    every dispatch, while the region's assertion cannot be corrupted by
+    counts that leaked in from earlier work.  Nests cleanly.  ``c`` is
+    populated at exit; inspect it after the ``with`` block."""
+    outer = collections.Counter(KERNEL_COUNTS)
+    KERNEL_COUNTS.clear()
+    region: collections.Counter = collections.Counter()
+    try:
+        yield region
+    finally:
+        region.update(KERNEL_COUNTS)
+        KERNEL_COUNTS.clear()
+        KERNEL_COUNTS.update(outer + region)
 
 
 def mask_to_indices(grid: np.ndarray) -> np.ndarray:
@@ -62,6 +86,50 @@ def neighbor_table(idx: np.ndarray, grid_shape) -> np.ndarray:
             if 0 <= ny < ty_max and 0 <= nx < tx_max:
                 nbr[i, j] = slot.get((ny, nx), -1)
     return nbr
+
+
+# ---------------------------------------------------------------------------
+# fleet (multi-camera group) index plumbing
+# ---------------------------------------------------------------------------
+
+def fleet_indices(grids) -> "tuple[np.ndarray, np.ndarray]":
+    """Per-camera bool grids -> one packed index space for the whole group.
+
+    grids: sequence of (tiles_y, tiles_x) bool RoI grids, one per camera.
+    Returns (idx (n, 3) int32 rows of (cam, ty, tx), offsets (C+1,) int64):
+    camera c's tiles occupy packed slots [offsets[c], offsets[c+1]), in the
+    same row-major order ``mask_to_indices`` would give per camera — so the
+    fleet-packed tensor is the per-camera packed tensors concatenated."""
+    rows = []
+    offsets = np.zeros(len(grids) + 1, np.int64)
+    for c, grid in enumerate(grids):
+        ys, xs = np.nonzero(np.asarray(grid, bool))
+        offsets[c + 1] = offsets[c] + ys.size
+        rows.append(np.stack([np.full(ys.size, c), ys, xs], axis=1))
+    idx = (np.concatenate(rows, axis=0) if rows
+           else np.zeros((0, 3))).astype(np.int32)
+    return idx, offsets
+
+
+def fleet_neighbor_table(grids) -> np.ndarray:
+    """(n, 8) neighbor table for the concatenated fleet packing.
+
+    Each camera's table is built on its OWN grid (off-frame and inactive
+    neighbors are -1) and its slots are shifted by the camera's packed
+    offset — a tile's halo can therefore only ever reference slots of the
+    same camera, so halos never leak across cameras by construction."""
+    tables = []
+    off = 0
+    for grid in grids:
+        grid = np.asarray(grid, bool)
+        idx = mask_to_indices(grid)
+        nbr = neighbor_table(idx, grid.shape)
+        nbr[nbr >= 0] += off
+        off += idx.shape[0]
+        tables.append(nbr)
+    if not tables:
+        return np.zeros((0, 8), np.int32)
+    return np.concatenate(tables, axis=0).astype(np.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -116,6 +184,33 @@ def roi_conv_packed(packed: jax.Array, w: jax.Array, nbr: jax.Array,
     full-frame materialization between layers."""
     KERNEL_COUNTS["roi_conv_packed"] += 1
     return _roi_conv_packed_jit(packed, w, nbr, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("th", "tw", "interpret"))
+def _roi_conv_fleet_jit(x, w, idx, th, tw, interpret=INTERPRET):
+    return _roi_conv_fleet(x, w, idx, th, tw, interpret=interpret)
+
+
+def roi_conv_fleet(x: jax.Array, w: jax.Array, idx: jax.Array, th: int,
+                   tw: int, interpret: bool = INTERPRET) -> jax.Array:
+    """Cross-camera fused gather+conv: (C, H, W, Cin) stacked frames +
+    (n, 3) (cam, ty, tx) coords -> packed (n, th, tw, Cout) for the whole
+    camera group in ONE launch (see ``fleet_indices``)."""
+    KERNEL_COUNTS["roi_conv_fleet"] += 1
+    return _roi_conv_fleet_jit(x, w, idx, th, tw, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _sbnet_scatter_fleet_jit(packed, idx, base, interpret=INTERPRET):
+    return _scatter_fleet(packed, idx, base, interpret=interpret)
+
+
+def sbnet_scatter_fleet(packed: jax.Array, idx: jax.Array, base: jax.Array,
+                        interpret: bool = INTERPRET) -> jax.Array:
+    """Cross-camera scatter: packed group tiles -> (C, H, W, Cout) stacked
+    frames in ONE launch; untouched regions keep ``base`` values."""
+    KERNEL_COUNTS["sbnet_scatter_fleet"] += 1
+    return _sbnet_scatter_fleet_jit(packed, idx, base, interpret)
 
 
 def roi_conv_batched(x: jax.Array, w: jax.Array, idx: jax.Array,
@@ -201,8 +296,10 @@ def attention_visit_bound(positions: np.ndarray, block_q: int = 128,
     return out
 
 
-__all__ = ["mask_to_indices", "neighbor_table", "sbnet_gather",
-           "sbnet_scatter", "roi_conv", "roi_conv_packed",
-           "roi_conv_batched", "pack_tokens", "unpack_tokens",
-           "roi_attention", "attention_visit_bound", "block_min_positions",
-           "KERNEL_COUNTS", "PAD_POS", "ref"]
+__all__ = ["mask_to_indices", "neighbor_table", "fleet_indices",
+           "fleet_neighbor_table", "sbnet_gather", "sbnet_scatter",
+           "sbnet_scatter_fleet", "roi_conv", "roi_conv_fleet",
+           "roi_conv_packed", "roi_conv_batched", "pack_tokens",
+           "unpack_tokens", "roi_attention", "attention_visit_bound",
+           "block_min_positions", "KERNEL_COUNTS", "count_kernels",
+           "PAD_POS", "ref"]

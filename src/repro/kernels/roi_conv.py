@@ -137,6 +137,55 @@ def _roi_conv_packed_kernel(nbr_ref, p_ref, w_ref, o_ref, *,
     o_ref[0] = _conv3x3_tile(win, w_ref, th, tw, cout).astype(o_ref.dtype)
 
 
+def _roi_conv_fleet_kernel(idx_ref, x_ref, w_ref, o_ref, *, th: int,
+                           tw: int):
+    i = pl.program_id(0)
+    cam = idx_ref[i, 0]
+    ty = idx_ref[i, 1]
+    tx = idx_ref[i, 2]
+    cout = o_ref.shape[-1]
+    # haloed window from camera ``cam``'s padded (H+2, W+2, Cin) plane of
+    # the stacked fleet tensor — cameras are separate leading-dim entries,
+    # so a window can never read another camera's pixels
+    win = pl.load(x_ref, (pl.ds(cam, 1), pl.ds(ty * th, th + 2),
+                          pl.ds(tx * tw, tw + 2), slice(None)))[0]
+    o_ref[0] = _conv3x3_tile(win, w_ref, th, tw, cout).astype(o_ref.dtype)
+
+
+def roi_conv_fleet(x: jax.Array, w: jax.Array, idx: jax.Array, th: int,
+                   tw: int, *, interpret: bool = True) -> jax.Array:
+    """Cross-camera fused gather+conv: ONE launch for a whole camera group.
+
+    x: (C, H, W, Cin) stacked (zero-padded to common H, W) camera frames;
+    w: (3, 3, Cin, Cout); idx: (n, 3) int32 (cam, ty, tx) active-tile coords
+    over ALL cameras.  Returns packed (n, th, tw, Cout) in idx order — the
+    same packed tensor ``roi_conv`` would produce per camera, concatenated.
+    Per-camera zero padding reproduces each camera's own SAME-conv frame
+    boundary, so the output is bit-compatible with per-camera launches."""
+    C, H, W, Cin = x.shape
+    Cout = w.shape[-1]
+    n = idx.shape[0]
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    kernel = functools.partial(_roi_conv_fleet_kernel, th=th, tw=tw)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec(memory_space=_MEMSPACE.ANY),
+            pl.BlockSpec((3, 3, Cin, Cout),
+                         lambda i, idx_ref: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, th, tw, Cout),
+                               lambda i, idx_ref: (i, 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, th, tw, Cout), x.dtype),
+        interpret=interpret,
+    )(idx, xp, w)
+
+
 def roi_conv_packed(packed: jax.Array, w: jax.Array, nbr: jax.Array,
                     *, interpret: bool = True) -> jax.Array:
     """packed: (n, th, tw, Cin) previous layer's packed output;

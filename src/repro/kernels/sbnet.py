@@ -82,3 +82,37 @@ def sbnet_scatter(packed: jax.Array, idx: jax.Array, base: jax.Array,
         input_output_aliases={2: 0},   # args: (idx, packed, base) -> out
         interpret=interpret,
     )(idx, packed, base)
+
+
+def sbnet_scatter_fleet(packed: jax.Array, idx: jax.Array, base: jax.Array,
+                        *, interpret: bool = True) -> jax.Array:
+    """Cross-camera scatter: ONE launch materializes a whole camera group.
+
+    packed: (n, th, tw, C); idx: (n, 3) int32 (cam, ty, tx); base:
+    (num_cams, H, W, C) stacked frames.  Writes tile i into camera
+    idx[i, 0]'s plane; untouched regions keep base values."""
+    n, th, tw, C = packed.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, th, tw, C), lambda i, idx_ref: (i, 0, 0, 0)),
+            pl.BlockSpec(base.shape,
+                         lambda i, idx_ref: (0, 0, 0, 0)),  # unused
+        ],
+        out_specs=pl.BlockSpec((1, th, tw, C),
+                               lambda i, idx_ref: (idx_ref[i, 0],
+                                                   idx_ref[i, 1],
+                                                   idx_ref[i, 2], 0)),
+    )
+
+    def kernel(idx_ref, p_ref, b_ref, o_ref):
+        o_ref[...] = p_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(base.shape, base.dtype),
+        input_output_aliases={2: 0},   # args: (idx, packed, base) -> out
+        interpret=interpret,
+    )(idx, packed, base)

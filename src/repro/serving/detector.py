@@ -60,6 +60,8 @@ class RoIDetector:
             / np.sqrt(chans[-1])
         # per-mask static cache: mask bytes -> (idx, nbr) device arrays
         self._mask_cache: Dict[bytes, Tuple[jax.Array, jax.Array]] = {}
+        # per-group static cache: fleet mask bytes -> (idx3, nbr) arrays
+        self._fleet_cache: Dict[bytes, Tuple[jax.Array, jax.Array]] = {}
 
     # -- dense path ----------------------------------------------------------
     def dense_forward(self, x: jax.Array) -> jax.Array:
@@ -105,6 +107,52 @@ class RoIDetector:
         base = jnp.zeros(x.shape[:2] + (packed.shape[-1],), packed.dtype)
         full = kops.sbnet_scatter(packed, idx, base)   # the scatter
         return full @ self.head
+
+    # -- fleet (multi-camera group) path --------------------------------------
+    def _fleet_tables(self, grids):
+        key = b"".join(np.packbits(np.asarray(g, bool)).tobytes()
+                       + bytes(str(g.shape), "ascii") for g in grids)
+        hit = self._fleet_cache.get(key)
+        if hit is None:
+            idx_np, _ = kops.fleet_indices(grids)
+            hit = (jnp.asarray(idx_np),
+                   jnp.asarray(kops.fleet_neighbor_table(grids)))
+            while len(self._fleet_cache) >= 8:
+                self._fleet_cache.pop(next(iter(self._fleet_cache)))
+            self._fleet_cache[key] = hit
+        return hit
+
+    def fleet_forward(self, frames: List[jax.Array],
+                      grids: List[np.ndarray]) -> List[jax.Array]:
+        """One camera group, one launch per stage: frames (one (H, W, 3)
+        per camera, any sizes) are stacked on a common zero canvas and the
+        whole group's active tiles run as ONE fused gather+conv, ONE
+        roi_conv_packed per remaining layer (cross-camera neighbor table —
+        halos cannot leak between cameras), and ONE scatter.  Returns the
+        per-camera full-frame head maps, each bit-compatible with
+        ``roi_forward(frame, grid)`` on that camera alone."""
+        t = self.cfg.tile
+        canvas_h = max(max(f.shape[0] for f in frames),
+                       max(g.shape[0] * t for g in grids))
+        canvas_w = max(max(f.shape[1] for f in frames),
+                       max(g.shape[1] * t for g in grids))
+        x = jnp.stack([jnp.pad(f, ((0, canvas_h - f.shape[0]),
+                                   (0, canvas_w - f.shape[1]), (0, 0)))
+                       for f in frames])
+        idx, nbr = self._fleet_tables(grids)
+        packed = None
+        for li, w in enumerate(self.weights):
+            if li == 0:
+                packed = kops.roi_conv_fleet(x, w, idx, t, t)
+            else:
+                packed = kops.roi_conv_packed(packed, w, nbr)
+            packed = jax.nn.relu(packed)
+        base = jnp.zeros((len(frames), canvas_h, canvas_w,
+                          packed.shape[-1]), packed.dtype)
+        full = kops.sbnet_scatter_fleet(packed, idx, base)
+        heads = full @ self.head
+        return [heads[c, :f.shape[0], :f.shape[1]]
+                for c, f in enumerate(frames)]
 
     def forward(self, x: jax.Array, grid: Optional[np.ndarray]) -> jax.Array:
         if grid is None or grid.mean() >= self.cfg.switch_density:

@@ -79,18 +79,44 @@ class ServingEngine:
                 lambda tb, cb, pb: M.decode_step(p, cfg, tb, cb, pb,
                                                  dist=dist),
                 in_axes=(0, 0, 0))(t, c, pos))
+        # persistent group cache ring: one stacked (G, ...) cache pytree
+        # reused across flushes, so serve() never jnp.stack's per-request
+        # caches.  Stale slot contents are harmless: decode only attends
+        # cache rows at positions written by THIS request's prefill/decode
+        # chain (rows past the current position are masked).  Slot writes
+        # go through one jit'd dynamic-update with the ring donated, so on
+        # hardware the update is in-place (O(slot) traffic per request,
+        # not O(ring)); CPU ignores donation and falls back to a copy.
+        donate = () if jax.default_backend() == "cpu" else (0,)
+        self._ring_write = jax.jit(
+            lambda ring, slot, gi: jax.tree.map(
+                lambda full, s: jax.lax.dynamic_update_index_in_dim(
+                    full, s.astype(full.dtype), gi, 0), ring, slot),
+            donate_argnums=donate)
+        self._ring = None
+        self._ring_sig: Optional[Tuple[int, int]] = None
+        self.ring_rebuilds = 0          # ring (re)allocations — steady
+        #                                 state stays flat across flushes
+        self.cache_stack_count = 0      # per-flush jnp.stack's (legacy
+        #                                 path only; serve() must not bump)
 
     # -- plain prefill -----------------------------------------------------
-    def prefill(self, batch: Dict, max_seq: Optional[int] = None):
+    def prefill(self, batch: Dict, max_seq: Optional[int] = None,
+                caches=None):
+        """``caches`` (optional) supplies a preallocated cache pytree —
+        serve() passes a slot of the persistent group ring instead of
+        allocating per request."""
         B = next(iter(batch.values())).shape[0]
         max_seq = max_seq or self.scfg.max_seq
-        caches = M.init_cache(self.cfg, B, max_seq)
+        if caches is None:
+            caches = M.init_cache(self.cfg, B, max_seq)
         return self._prefill(self.params, batch, caches, None)
 
     # -- RoI-sparsified prefill ---------------------------------------------
     def roi_prefill(self, tokens: jax.Array, keep: jax.Array,
                     block: int = 128,
-                    max_seq: Optional[int] = None) -> RoIPrefillResult:
+                    max_seq: Optional[int] = None,
+                    caches=None) -> RoIPrefillResult:
         """tokens: (S,) or (S, D) stream; keep: (S,) bool.  Packs kept
         tokens, prefills the packed prefix with original positions.
         ``max_seq`` sizes the KV cache (>= packed length; decode masks
@@ -109,7 +135,8 @@ class ServingEngine:
             # patch stream: embed via the VLM frontend path
             batch = {"tokens": jnp.zeros((1, 0), jnp.int32),
                      "patches": packed[None]}
-        caches = M.init_cache(self.cfg, 1, max(max_seq or Sp, Sp, 1))
+        if caches is None:
+            caches = M.init_cache(self.cfg, 1, max(max_seq or Sp, Sp, 1))
         logits, caches = self._prefill(self.params, batch, caches,
                                        positions[None], n_kept - 1)
         return RoIPrefillResult(logits, caches, int(n_kept), S)
@@ -135,9 +162,18 @@ class ServingEngine:
 
         caches_list: per-request cache pytrees (B=1, identical shapes —
         allocate prefills at a group-common max_seq).  Returns (G, n_steps)
-        tokens; one jit'd dispatch per step serves the whole group."""
-        G = len(caches_list)
+        tokens; one jit'd dispatch per step serves the whole group.
+
+        Legacy entry point: stacks the per-request caches on every call
+        (counted in ``cache_stack_count``).  ``serve`` avoids this by
+        prefilling straight into the persistent group ring."""
+        self.cache_stack_count += 1
         caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches_list)
+        return self._decode_stacked(caches, first_tokens, start_pos,
+                                    n_steps)
+
+    def _decode_stacked(self, caches, first_tokens, start_pos,
+                        n_steps: int) -> Tuple[np.ndarray, Any]:
         tok = jnp.stack([jnp.asarray(t).reshape(1, 1)
                          for t in first_tokens])            # (G, 1, 1)
         pos0 = jnp.asarray(start_pos, jnp.int32)            # (G,)
@@ -149,14 +185,33 @@ class ServingEngine:
             out.append(np.asarray(tok[:, :, 0]))
         return np.concatenate(out, axis=1), caches
 
+    # -- persistent group cache ring ------------------------------------------
+    def _ensure_ring(self, G: int, max_seq: int):
+        """(Re)allocate the stacked group cache only when the flush needs a
+        wider group or a longer sequence than the ring already holds —
+        steady-state flushes reuse the same buffers with zero stacking."""
+        sig = (G, max_seq)
+        if (self._ring is None or self._ring_sig[0] != G
+                or self._ring_sig[1] < max_seq):
+            slot = M.init_cache(self.cfg, 1, max_seq, abstract=True)
+            self._ring = jax.tree.map(
+                lambda s: jnp.zeros((G,) + s.shape, s.dtype), slot)
+            self._ring_sig = sig
+            self.ring_rebuilds += 1
+        return self._ring
+
     # -- batched request driver ----------------------------------------------
     def serve(self, requests: List[Request], greedy_steps: int = 8
               ) -> Dict[int, np.ndarray]:
         """Batched serving: group requests to max_batch, prefill each
         request (RoI-packed when a keep-list is present — keep-lists are
-        ragged, so packing stays per-request), then greedy-decode the whole
-        group in lockstep with one vmapped dispatch per step.  Returns
-        {rid: generated tokens}."""
+        ragged, so packing stays per-request) INTO a slot of the persistent
+        group cache ring, then greedy-decode the whole group in lockstep
+        with one vmapped dispatch per step.  The ring survives across
+        flushes: no per-flush cache allocation and no per-request
+        ``jnp.stack`` — ``cache_stack_count`` stays flat and
+        ``ring_rebuilds`` only moves when the group geometry grows.
+        Returns {rid: generated tokens}."""
         results: Dict[int, np.ndarray] = {}
         group: List[Request] = []
         pack_block = 128
@@ -176,25 +231,26 @@ class ServingEngine:
                     need.append(_round_up(len(r.tokens), pack_block) + gsteps)
                 else:
                     need.append(len(r.tokens) + gsteps)
-            max_seq = max(need)
+            ring = self._ensure_ring(len(group), max(need))
 
-            caches_list, firsts, starts = [], [], []
-            for r in group:   # per-request packing (ragged keep-lists)
+            firsts, starts = [], []
+            for gi, r in enumerate(group):   # ragged per-request packing
+                slot = jax.tree.map(lambda x: x[gi], ring)
                 if r.keep is not None and self.scfg.roi_sparsity:
                     res = self.roi_prefill(jnp.asarray(r.tokens),
                                            jnp.asarray(r.keep),
-                                           block=pack_block, max_seq=max_seq)
-                    caches_list.append(res.caches)
+                                           block=pack_block, caches=slot)
+                    new_slot = res.caches
                     firsts.append(jnp.argmax(res.logits[:, -1], -1))
                     starts.append(res.n_kept)
                 else:
                     batch = {"tokens": jnp.asarray(r.tokens)[None]}
-                    logits, caches = self.prefill(batch, max_seq=max_seq)
-                    caches_list.append(caches)
+                    logits, new_slot = self.prefill(batch, caches=slot)
                     firsts.append(jnp.argmax(logits[:, -1], -1))
                     starts.append(len(r.tokens))
-            toks, _ = self.decode_tokens_group(caches_list, firsts, starts,
-                                               gsteps)
+                ring = self._ring_write(ring, new_slot, gi)
+            toks, ring = self._decode_stacked(ring, firsts, starts, gsteps)
+            self._ring = ring                 # keep buffers for next flush
             for gi, (r, ns) in enumerate(zip(group, steps)):
                 results[r.rid] = toks[gi, :ns]
             group.clear()

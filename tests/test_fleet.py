@@ -1,0 +1,307 @@
+"""Fleet subsystem: topology isolation, vectorized runtime parity, packed
+group launches, online drift adaptation, and kernel-count isolation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import setcover
+from repro.core.association import TileUniverse, build_association_table
+from repro.core.pipeline import (OfflineConfig, OnlineConfig, run_offline,
+                                 run_online)
+from repro.core.reid import ReIDNoiseConfig, run_noisy_reid
+from repro.core.scene import SceneConfig, generate_scene
+from repro.fleet import (DriftConfig, FleetConfig, GroupSpec, build_fleet,
+                         cross_group_leakage, fleet_inference_step,
+                         run_adaptive_online, run_fleet_offline,
+                         run_fleet_online)
+from repro.kernels import ops
+from repro.serving.detector import DetectorConfig, RoIDetector
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return build_fleet(FleetConfig(
+        groups=[GroupSpec("uniform", seed=3),
+                GroupSpec("rush_hour", seed=11)],
+        duration_s=45))
+
+
+@pytest.fixture(scope="module")
+def offlines(fleet):
+    cfg = OfflineConfig(profile_frames=300, solver="greedy")
+    return run_fleet_offline(fleet, cfg).per_group
+
+
+# ---------------------------------------------------------------------------
+# topology: per-group isolation + zero cross-group correlation
+# ---------------------------------------------------------------------------
+
+def test_groups_bit_identical_to_isolation(fleet, offlines):
+    """A fleet group's offline result must be bit-identical to running the
+    single-intersection pipeline on the same (profile, seed) alone."""
+    g = fleet.groups[1]
+    iso_scene = generate_scene(SceneConfig(
+        duration_s=45, seed=11, spawn_profile="rush_hour"))
+    iso = run_offline(iso_scene,
+                      OfflineConfig(profile_frames=300, solver="greedy"))
+    assert iso.mask == offlines[1].mask
+    for c in g.scene.cameras:
+        np.testing.assert_array_equal(iso.cam_grids[c.cam_id],
+                                      offlines[1].cam_grids[c.cam_id])
+    # and the raw detections are identical too (translation invariance)
+    a = [(d.cam, d.t, d.obj, d.bbox.as_vec().tolist())
+         for fr in g.scene.detections for d in fr]
+    b = [(d.cam, d.t, d.obj, d.bbox.as_vec().tolist())
+         for fr in iso_scene.detections for d in fr]
+    assert a == b
+
+
+def test_zero_cross_group_visibility(fleet):
+    """At the default 600 m spacing no vehicle of one group projects an
+    above-threshold box into another group's cameras."""
+    assert cross_group_leakage(fleet, frame_step=50) == 0
+
+
+def test_zero_cross_group_correlation_entries(fleet):
+    """Association built over the MERGED fleet (global camera ids) keeps
+    every constraint's candidate regions inside one group."""
+    cams_flat = fleet.all_cameras()
+    # reindex cameras to their global ids so the universe spans the fleet
+    from dataclasses import replace
+    cams_global = [replace(c, cam_id=i) for i, c in enumerate(cams_flat)]
+    universe = TileUniverse.build(cams_global)
+    C = fleet.cams_per_group
+    records = []
+    rid_base = 0
+    for g in fleet.groups:
+        recs = run_noisy_reid(g.scene, ReIDNoiseConfig(), 0, 300)
+        for r in recs:
+            records.append(type(r)(fleet.global_cam(g.gid, r.cam), r.t,
+                                   r.bbox, r.rid + rid_base,
+                                   r.obj + rid_base))
+        rid_base += 10_000_000
+    table = build_association_table(records, universe)
+    assert table.constraints, "merged fleet table should not be empty"
+    for regions in table.constraints:
+        groups_seen = {r.cam // C for r in regions}
+        assert len(groups_seen) == 1, \
+            f"constraint spans groups {groups_seen}"
+
+
+def test_traffic_profiles_shape_spawn_rates():
+    mk = lambda prof: generate_scene(SceneConfig(
+        duration_s=60, seed=4, spawn_profile=prof))
+    n_uniform = len(mk("uniform").vehicles)
+    n_sparse = len(mk("sparse").vehicles)
+    n_rush = len(mk("rush_hour").vehicles)
+    assert n_sparse < 0.6 * n_uniform
+    assert n_rush > n_sparse
+    # scripted shift: post-shift spawns come from the shifted entries
+    sc = generate_scene(SceneConfig(
+        duration_s=60, seed=4, entry_weights=(0.5, 0.5, 0.0, 0.0),
+        shift_at_s=30.0, shift_entry_weights=(0.0, 0.0, 0.5, 0.5)))
+    pre = {v.entry for v in sc.vehicles if v.t0 < 30.0}
+    post = {v.entry for v in sc.vehicles if v.t0 >= 30.0}
+    assert pre <= {"N", "S"} and post <= {"E", "W"}
+
+
+# ---------------------------------------------------------------------------
+# vectorized fleet online runtime
+# ---------------------------------------------------------------------------
+
+def test_fleet_online_matches_single_group_runs(fleet, offlines):
+    """The all-cameras-at-once evaluation must reproduce run_online on
+    each group exactly: same flags -> same accuracy, same network model ->
+    same bytes (to fp round-off)."""
+    fm = run_fleet_online(fleet, offlines, OnlineConfig(), 300, 450)
+    for g, m in zip(fleet.groups, fm.per_group):
+        ref = run_online(g.scene, offlines[g.gid], OnlineConfig(), 300, 450)
+        assert m.accuracy == ref.accuracy
+        assert m.missed == ref.missed
+        np.testing.assert_array_equal(m.missed_per_t, ref.missed_per_t)
+        assert m.network_mbps == pytest.approx(ref.network_mbps, rel=1e-9)
+        assert m.server_hz == ref.server_hz
+        assert m.camera_fps == ref.camera_fps
+        assert m.latency_s == pytest.approx(ref.latency_s, rel=1e-12)
+    # aggregates are consistent with the per-group rows
+    assert fm.accuracy_min == min(m.accuracy for m in fm.per_group)
+    assert fm.network_mbps_total == pytest.approx(
+        sum(m.network_mbps for m in fm.per_group))
+    assert fm.fleet_server_hz < min(m.server_hz for m in fm.per_group)
+
+
+def test_fleet_online_strict_threshold(fleet, offlines):
+    fm = run_fleet_online(fleet, offlines,
+                         OnlineConfig(coverage_thresh=1.0), 300, 450)
+    for g, m in zip(fleet.groups, fm.per_group):
+        ref = run_online(g.scene, offlines[g.gid],
+                         OnlineConfig(coverage_thresh=1.0), 300, 450)
+        assert m.accuracy == ref.accuracy
+
+
+def test_fleet_4x5_end_to_end():
+    """Acceptance: a 4-group x 5-camera fleet completes end-to-end; each
+    group's accuracy >= the single-group baseline; every step runs ONE
+    packed conv launch per group (not per camera)."""
+    fleet = build_fleet(FleetConfig(
+        groups=[GroupSpec("uniform", seed=21), GroupSpec("sparse", seed=22),
+                GroupSpec("rush_hour", seed=23),
+                GroupSpec("bursty", seed=24)],
+        duration_s=30))
+    assert fleet.num_groups == 4 and fleet.num_cameras == 20
+    offs = run_fleet_offline(
+        fleet, OfflineConfig(profile_frames=200, solver="greedy"))
+    fm = run_fleet_online(fleet, offs.per_group, OnlineConfig(), 200, 300)
+    for g, m in zip(fleet.groups, fm.per_group):
+        base = run_online(g.scene, offs.per_group[g.gid], OnlineConfig(),
+                          200, 300)
+        assert m.accuracy >= base.accuracy
+
+    # kernel-level steps: per group, ONE fused gather+conv + one packed
+    # conv per remaining layer + ONE scatter, asserted inside the step
+    det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    t = det.cfg.tile
+    grids = {g.gid: [rng.random((3, 4)) < 0.5 for _ in range(5)]
+             for g in fleet.groups}
+    for gs in grids.values():          # ensure non-empty masks
+        for gg in gs:
+            gg[1, 1] = True
+    n_layers = det.num_conv_layers
+    for step in range(2):
+        frames = {g.gid: [jnp.asarray(
+            rng.normal(size=(3 * t, 4 * t, 3)), jnp.float32)
+            for _ in range(5)] for g in fleet.groups}
+        outs, counts = fleet_inference_step(det, frames, grids)
+        assert counts["roi_conv_fleet"] == fleet.num_groups
+        assert counts["roi_conv_packed"] == fleet.num_groups * (n_layers - 1)
+        assert counts["sbnet_scatter_fleet"] == fleet.num_groups
+        assert set(outs) == set(grids)
+
+
+def test_fleet_forward_matches_per_camera():
+    """The cross-camera batcher is bit-compatible with per-camera
+    roi_forward on every camera, including mixed frame sizes."""
+    det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(1))
+    rng = np.random.default_rng(5)
+    t = det.cfg.tile
+    shapes = [(4, 5), (3, 4), (5, 3), (4, 4), (2, 6)]
+    grids = [rng.random(s) < 0.45 for s in shapes]
+    for g in grids:
+        g[1, 1] = True
+    frames = [jnp.asarray(rng.normal(size=(gy * t, gx * t, 3)), jnp.float32)
+              for gy, gx in shapes]
+    outs = det.fleet_forward(frames, grids)
+    for f, g, o in zip(frames, grids, outs):
+        ref = det.roi_forward(f, g)
+        assert o.shape == ref.shape
+        np.testing.assert_allclose(np.asarray(o), np.asarray(ref),
+                                   atol=1e-5)
+
+
+def test_fleet_neighbor_table_never_leaks():
+    """Halo slots of camera c must stay inside camera c's packed range."""
+    rng = np.random.default_rng(9)
+    grids = [rng.random((4, 6)) < 0.6 for _ in range(4)]
+    idx, offsets = ops.fleet_indices(grids)
+    nbr = ops.fleet_neighbor_table(grids)
+    assert idx.shape[0] == offsets[-1] == nbr.shape[0]
+    for ci in range(len(grids)):
+        sl = nbr[offsets[ci]:offsets[ci + 1]]
+        ok = (sl == -1) | ((sl >= offsets[ci]) & (sl < offsets[ci + 1]))
+        assert ok.all(), f"camera {ci} halo leaks across cameras"
+    # per-camera slot ranges hold exactly that camera's tiles, in
+    # mask_to_indices order
+    for ci, g in enumerate(grids):
+        sub = idx[offsets[ci]:offsets[ci + 1]]
+        assert (sub[:, 0] == ci).all()
+        np.testing.assert_array_equal(sub[:, 1:], ops.mask_to_indices(g))
+
+
+# ---------------------------------------------------------------------------
+# kernel-count isolation
+# ---------------------------------------------------------------------------
+
+def test_count_kernels_snapshot_restore():
+    det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    grid = np.ones((3, 3), bool)
+    x = jnp.asarray(rng.normal(size=(48, 48, 3)), jnp.float32)
+    ops.KERNEL_COUNTS.clear()
+    det.roi_forward(x, grid)               # pollute the global counter
+    polluted = dict(ops.KERNEL_COUNTS)
+    with ops.count_kernels() as inner:
+        det.roi_forward(x, grid)
+    # the region saw exactly one stack, regardless of prior pollution
+    assert inner["roi_conv"] == 1
+    assert inner["sbnet_scatter"] == 1
+    assert inner["roi_conv_packed"] == det.num_conv_layers - 1
+    # and the global counter now reflects outer + inner work
+    assert ops.KERNEL_COUNTS["roi_conv"] == polluted["roi_conv"] + 1
+    # nesting: inner regions isolate, outer still totals
+    with ops.count_kernels() as outer_c:
+        det.roi_forward(x, grid)
+        with ops.count_kernels() as nested:
+            det.roi_forward(x, grid)
+        assert nested["roi_conv"] == 1
+    assert outer_c["roi_conv"] == 2
+
+
+# ---------------------------------------------------------------------------
+# warm-started set cover + online drift adaptation
+# ---------------------------------------------------------------------------
+
+def test_solve_warm_consistency(fleet, offlines):
+    g = fleet.groups[0]
+    records = run_noisy_reid(g.scene, ReIDNoiseConfig(), 0, 300)
+    from repro.core.filters import FilterConfig, apply_filters
+    cleaned, _ = apply_filters(records, len(g.scene.cameras),
+                               FilterConfig())
+    universe = offlines[0].universe
+    table = build_association_table(cleaned, universe)
+    cold = setcover.solve_greedy(table)
+    # seeding with the cold solution is a fixed point: nothing to add
+    warm_same = setcover.solve_warm(table, cold.mask)
+    assert warm_same.mask == cold.mask
+    # seeding with a subset still satisfies every constraint and keeps
+    # the seed
+    seed = frozenset(list(cold.mask)[: len(cold.mask) // 2])
+    warm = setcover.solve_warm(table, seed)
+    assert seed <= warm.mask
+    for regions in table.constraints:
+        assert any(r.tiles <= warm.mask for r in regions)
+    # empty seed degenerates to the cold greedy mask exactly
+    assert setcover.solve_warm(table, frozenset()).mask == cold.mask
+
+
+def test_drift_adapter_recovers_after_traffic_shift():
+    """Acceptance: a scripted traffic shift (N/S profiling -> E/W online)
+    drops coverage; the adapter fires ONE warm re-solve and coverage over
+    the remaining stream recovers to >= 95%."""
+    scfg = SceneConfig(duration_s=80, seed=2,
+                       entry_weights=(0.5, 0.5, 0.0, 0.0),
+                       shift_at_s=40.0,
+                       shift_entry_weights=(0.0, 0.0, 0.5, 0.5))
+    scene = generate_scene(scfg)
+    off = run_offline(scene, OfflineConfig(profile_frames=300,
+                                           solver="greedy"))
+    res = run_adaptive_online(scene, off, 300, 800, DriftConfig())
+    # before the shift bites, the profiled mask covers the stream
+    assert res.coverage_between(300, 400) >= 0.95
+    assert res.resolves == 1, \
+        f"expected exactly one warm re-solve, got {res.adapter.events}"
+    ev = res.adapter.events[0]
+    assert ev.coverage_before < 0.95          # the monitor saw the drift
+    assert ev.tiles_added > 0                 # and the mask actually grew
+    assert res.coverage_between(ev.t + 1, 800) >= 0.95
+    # residuals drove the growth toward uncovered tiles only
+    assert ev.t >= 400                        # fired after the shift
+
+
+def test_drift_adapter_quiet_on_stationary_traffic(fleet, offlines):
+    """No shift -> no re-solve: the profiled mask keeps covering."""
+    g = fleet.groups[0]
+    res = run_adaptive_online(g.scene, offlines[0], 300, 450, DriftConfig())
+    assert res.resolves == 0
+    assert res.coverage_between(300, 450) >= 0.95

@@ -136,6 +136,41 @@ def test_serve_mixed_decode_budgets(engine):
         np.testing.assert_array_equal(out[r.rid], single[r.rid])
 
 
+def test_serve_persistent_ring_no_restack(engine):
+    """ROADMAP open item: serve() must reuse one persistent group cache
+    ring across flushes — no per-flush jnp.stack of per-request caches
+    (counter stays flat) and no ring rebuild once the geometry is seen."""
+    rng = np.random.default_rng(11)
+
+    def mkreqs(rid0):
+        reqs = []
+        for i in range(4):
+            toks = rng.integers(0, engine.cfg.vocab_size, 48).astype(np.int32)
+            keep = rng.random(48) < 0.7 if i % 2 else None
+            reqs.append(Request(rid0 + i, tokens=toks, keep=keep,
+                                max_new_tokens=3))
+        return reqs
+
+    stacks0 = engine.cache_stack_count
+    out1 = engine.serve(mkreqs(0), greedy_steps=3)      # 1 flush of 4
+    rebuilds_after_first = engine.ring_rebuilds
+    out2 = engine.serve(mkreqs(10), greedy_steps=3)     # same geometry
+    out3 = engine.serve(mkreqs(20), greedy_steps=3)
+    assert engine.cache_stack_count == stacks0, \
+        "serve() must not stack per-request caches"
+    assert engine.ring_rebuilds == rebuilds_after_first, \
+        "steady-state flushes must reuse the ring"
+    assert len(out1) == len(out2) == len(out3) == 4
+    # ring reuse must not leak state between flushes: identical prompts in
+    # a fresh flush decode to identical tokens
+    fixed = np.arange(40).astype(np.int32) % engine.cfg.vocab_size
+    a = engine.serve([Request(0, tokens=fixed, max_new_tokens=4)],
+                     greedy_steps=4)[0]
+    b = engine.serve([Request(0, tokens=fixed, max_new_tokens=4)],
+                     greedy_steps=4)[0]
+    np.testing.assert_array_equal(a, b)
+
+
 def test_decode_continues_prefill(engine):
     """Greedy decode after prefill is self-consistent: feeding the argmax
     token back advances the distribution deterministically."""

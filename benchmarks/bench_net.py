@@ -1,0 +1,144 @@
+"""Edge-to-server streaming runtime benchmark (repro/net/).
+
+Four panels:
+
+  1. equivalence — zero-jitter / no-congestion / infinite-deadline
+     simulated transport vs the analytic formula: relative error of the
+     mean latency and of total bytes (must be < 1e-6; the convergence is
+     exact by construction, so this doubles as a drift alarm).
+  2. congestion — the default congestion trace (middle half of the window
+     at 30% capacity): CrossRoI masks vs full-frame streaming, p50/p99
+     response delay and the reduction fractions (the paper-style
+     delay-reduction claim, now *reproduced* at the transport layer
+     instead of asserted).
+  3. resilience — rate control (tile_delta-fed shedding) and deadline
+     batching under the same trace: bytes shed, quality floor, straggler
+     fraction, deadline hits.
+  4. tile_delta kernel — bit-exactness vs the numpy reference, dispatch
+     count, and the static-tile fraction it feeds the controller.
+
+``quick=True`` is the CI smoke shape (~20 s).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_json, table
+from repro.core.pipeline import (OfflineConfig, OnlineConfig,
+                                 full_frame_offline, online_system_metrics,
+                                 run_offline)
+from repro.core.scene import SceneConfig, generate_scene
+from repro.kernels import ops, ref
+from repro.net import (LinkConfig, NetConfig, RateControlConfig,
+                       default_congestion_trace, tile_static_fraction)
+
+
+def run(verbose: bool = True, quick: bool = False):
+    t00 = time.time()
+    duration = 40 if quick else 60
+    profile = 200 if quick else 300
+    fps = 10.0
+    scene = generate_scene(SceneConfig(duration_s=duration, seed=1))
+    off = run_offline(scene, OfflineConfig(profile_frames=profile,
+                                           solver="greedy"))
+    ff = full_frame_offline(scene)
+    n_frames = duration * int(fps) - profile
+    window_s = n_frames / fps
+
+    def metrics(offline, cfg):
+        return online_system_metrics(scene.cameras, offline, cfg, fps,
+                                     n_frames)
+
+    # --- panel 1: analytic <-> simulated equivalence -----------------------
+    a = metrics(off, OnlineConfig())
+    s = metrics(off, OnlineConfig(transport="simulated"))
+    equiv_lat = abs(s[3] - a[3]) / a[3]
+    equiv_bytes = abs(s[5] - a[5]) / a[5]
+
+    # --- panel 2: congestion, RoI vs full-frame ----------------------------
+    link = LinkConfig(congestion=default_congestion_trace(window_s))
+    cong = OnlineConfig(transport="simulated", net=NetConfig(link=link))
+    ts_roi = metrics(off, cong)[7]
+    ts_ff = metrics(ff, cong)[7]
+    p50_red = 1.0 - ts_roi.p50_s / ts_ff.p50_s
+    p99_red = 1.0 - ts_roi.p99_s / ts_ff.p99_s
+
+    # --- panel 3: resilience (rate control + deadline batching) ------------
+    rc_cfg = OnlineConfig(transport="simulated", net=NetConfig(
+        link=link,
+        rate_control=RateControlConfig(enabled=True, static_fraction=0.4)))
+    ts_rc = metrics(ff, rc_cfg)[7]
+    dl_cfg = OnlineConfig(transport="simulated", net=NetConfig(
+        link=LinkConfig(jitter_std=0.4, seed=3,
+                        congestion=default_congestion_trace(window_s)),
+        deadline_s=0.8))
+    ts_dl = metrics(ff, dl_cfg)[7]
+
+    # --- panel 4: tile_delta kernel ----------------------------------------
+    rng = np.random.default_rng(0)
+    t = 16
+    cur = rng.normal(scale=50, size=(8 * t, 8 * t, 3)).astype(np.float32)
+    prev = cur + rng.normal(scale=7, size=cur.shape).astype(np.float32)
+    prev[:4 * t] = cur[:4 * t]            # top half static
+    grid = np.ones((8, 8), bool)
+    idx = ops.mask_to_indices(grid)
+    with ops.count_kernels() as kc:
+        stats = np.asarray(ops.tile_delta(jnp.asarray(cur),
+                                          jnp.asarray(prev),
+                                          jnp.asarray(idx), t, t))
+        static_frac = tile_static_fraction(jnp.asarray(cur),
+                                           jnp.asarray(prev), grid, t)
+    expect = ref.tile_delta(cur, prev, idx, t, t)
+    bit_exact = bool(np.array_equal(stats, expect))
+
+    payload = {
+        "transport_window_s": window_s,
+        "equiv_latency_rel_err": equiv_lat,
+        "equiv_bytes_rel_err": equiv_bytes,
+        "analytic_latency_s": a[3],
+        "roi_p50_s": ts_roi.p50_s, "roi_p99_s": ts_roi.p99_s,
+        "full_p50_s": ts_ff.p50_s, "full_p99_s": ts_ff.p99_s,
+        "p50_reduction": p50_red, "p99_reduction": p99_red,
+        "rc_shed_mb": ts_rc.shed_bytes / 1e6,
+        "rc_quality_min": ts_rc.quality_min,
+        "rc_p50_s": ts_rc.p50_s,
+        "deadline_hits": ts_dl.deadline_hits,
+        "straggler_frac": ts_dl.straggler_frac,
+        "tile_delta_bit_exact": bit_exact,
+        "tile_delta_dispatches": int(kc["tile_delta"]),
+        "tile_delta_static_frac": static_frac,
+        "wall_s": time.time() - t00,
+    }
+    if verbose:
+        rows = [
+            ["analytic", f"{a[3]:.3f}", "-", "-"],
+            ["sim uncongested", f"{s[3]:.3f}",
+             f"{s[7].p50_s:.3f}", f"{s[7].p99_s:.3f}"],
+            ["sim congested RoI", f"{ts_roi.mean_s:.3f}",
+             f"{ts_roi.p50_s:.3f}", f"{ts_roi.p99_s:.3f}"],
+            ["sim congested full", f"{ts_ff.mean_s:.3f}",
+             f"{ts_ff.p50_s:.3f}", f"{ts_ff.p99_s:.3f}"],
+            ["  + rate control", f"{ts_rc.mean_s:.3f}",
+             f"{ts_rc.p50_s:.3f}", f"{ts_rc.p99_s:.3f}"],
+        ]
+        print("== transport: response latency (s) ==")
+        print(table(rows, ["path", "mean", "p50", "p99"]))
+        print(f"equivalence rel err: latency {equiv_lat:.2e}, "
+              f"bytes {equiv_bytes:.2e}")
+        print(f"congested delay reduction: p50 {p50_red:.1%}, "
+              f"p99 {p99_red:.1%}")
+        print(f"rate control shed {payload['rc_shed_mb']:.1f} MB "
+              f"(quality floor {ts_rc.quality_min:.2f}); deadline run: "
+              f"{ts_dl.deadline_hits} hits, "
+              f"{ts_dl.straggler_frac:.1%} straggler frames")
+        print(f"tile_delta: bit-exact={bit_exact}, "
+              f"static fraction {static_frac:.2f}")
+    save_json("bench_net.json", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -17,7 +17,7 @@ import os
 import time
 
 BENCHES = ["reid", "compression", "ablations", "sensitivity", "reducto",
-           "kernels", "fleet", "roofline"]
+           "kernels", "fleet", "net", "roofline"]
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -110,6 +110,36 @@ def fleet_quick():
     print(f"\nfleet smoke OK in {time.time() - t0:.1f}s -> {out}")
 
 
+def net_quick():
+    """CI smoke for the streaming runtime: analytic<->simulated
+    equivalence at 1e-6, the paper-style >= 20% p50 delay reduction for
+    CrossRoI masks under the default congestion trace, bit-exact
+    tile_delta dispatches, and live rate-control/deadline accounting —
+    then merges a "net" panel into BENCH_kernels.json."""
+    from benchmarks import bench_net
+    t0 = time.time()
+    payload = bench_net.run(verbose=True, quick=True)
+
+    assert payload["equiv_latency_rel_err"] < 1e-6, payload
+    assert payload["equiv_bytes_rel_err"] < 1e-6, payload
+    assert payload["p50_reduction"] >= 0.20, \
+        f"RoI masks must cut p50 response delay >= 20% under the " \
+        f"default congestion trace (got {payload['p50_reduction']:.1%})"
+    assert payload["p99_reduction"] > 0.0, payload
+    assert payload["tile_delta_bit_exact"], \
+        "tile_delta kernel must match the numpy reference bit-exactly"
+    assert payload["tile_delta_dispatches"] == 2, payload
+    assert payload["rc_shed_mb"] > 0 and payload["rc_quality_min"] < 1.0
+    assert payload["rc_p50_s"] < payload["full_p50_s"]
+    assert payload["deadline_hits"] > 0 and payload["straggler_frac"] > 0
+
+    out = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+    merged = _merge_bench_json(out, {"net": payload})
+    with open(out, "w") as f:
+        json.dump(merged, f, indent=1, default=float)
+    print(f"\nnet smoke OK in {time.time() - t0:.1f}s -> {out}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -120,12 +150,19 @@ def main():
     ap.add_argument("--fleet", action="store_true",
                     help="CI smoke: fleet invariants (2 groups x 5 cams) "
                          "merged into BENCH_kernels.json")
+    ap.add_argument("--net", action="store_true",
+                    help="CI smoke: streaming-runtime invariants "
+                         "(equivalence, congestion p50 reduction, "
+                         "tile_delta exactness) merged into "
+                         "BENCH_kernels.json")
     args = ap.parse_args()
     if args.quick:
         quick()
     if args.fleet:
         fleet_quick()
-    if args.quick or args.fleet:
+    if args.net:
+        net_quick()
+    if args.quick or args.fleet or args.net:
         return
     selected = args.only.split(",") if args.only else BENCHES
 

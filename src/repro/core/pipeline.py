@@ -23,6 +23,12 @@ from repro.core.grouping import TileGroup, group_tiles
 from repro.core.reid import ReIDNoiseConfig, ReIDRecord, run_noisy_reid
 from repro.core.scene import Scene
 from repro.core import setcover
+# the edge-to-server streaming runtime (numpy-only at import time); the
+# analytic byte model delegates to its packetizer so the analytic and
+# simulated transport paths cannot drift apart
+from repro.net.batcher import NetConfig, TransportStats, simulate_transport
+from repro.net.encoder import (camera_coefficients, segment_byte_matrices,
+                               sent_matrix)
 
 
 # ---------------------------------------------------------------------------
@@ -116,13 +122,17 @@ class OfflineResult:
                    for c in self.universe.cameras) / tot
 
 
-def run_offline(scene: Scene, cfg: Optional[OfflineConfig] = None
-                ) -> OfflineResult:
+def run_offline(scene: Scene, cfg: Optional[OfflineConfig] = None,
+                t0_frame: int = 0) -> OfflineResult:
+    """``t0_frame`` shifts the profiling window to
+    [t0_frame, t0_frame + profile_frames) — the drift adapter uses it to
+    re-profile on a recent window of the stream (shrink re-solves)."""
     cfg = cfg or OfflineConfig()
     t0 = time.time()
     universe = TileUniverse.build(scene.cameras)
 
-    records = run_noisy_reid(scene, cfg.reid_noise, 0, cfg.profile_frames)
+    records = run_noisy_reid(scene, cfg.reid_noise, t0_frame,
+                             t0_frame + cfg.profile_frames)
     cleaned, fstats = apply_filters(records, len(scene.cameras), cfg.filters)
     table = build_association_table(cleaned, universe)
     sres = setcover.solve(table, cfg.solver)
@@ -166,6 +176,12 @@ class OnlineConfig:
     rtt_ms: float = 10.0
     roi_inference: bool = True            # No-RoIInf ablation switch
     frame_keep: Optional[Dict[int, np.ndarray]] = None  # Reducto keep masks
+    # transport pricing: "analytic" is the steady-state scalar formula;
+    # "simulated" runs the repro.net edge-to-server runtime (per-camera
+    # uplinks, rate control, deadline batching) and yields per-frame
+    # latency distributions.  ``net`` configures the simulated path.
+    transport: str = "analytic"
+    net: Optional[NetConfig] = None
     # Detector tolerance: YOLO still finds an object when a thin boundary
     # strip is cropped; a detection counts if >= this fraction of the bbox
     # pixel area survives the RoI crop.  1.0 recovers the strict
@@ -186,6 +202,16 @@ class OnlineMetrics:
     latency_s: float
     latency_parts: Dict[str, float]
     frames_reduced: int = 0
+    # per-frame latency distribution (simulated transport only)
+    transport: Optional[TransportStats] = None
+
+    @property
+    def latency_p50_s(self) -> float:
+        return self.transport.p50_s if self.transport else self.latency_s
+
+    @property
+    def latency_p99_s(self) -> float:
+        return self.transport.p99_s if self.transport else self.latency_s
 
 
 def _covered(tiles: FrozenSet[int], mask: FrozenSet[int]) -> bool:
@@ -319,43 +345,20 @@ def segment_network_bytes(cameras: Sequence, cam_groups, codec: CodecModel,
                           ) -> Tuple[float, np.ndarray]:
     """Vectorized (cameras x segments) streaming model.
 
-    Replaces the per-(camera, segment) Python loop: per-segment sent-frame
-    counts come from one reshape-sum over the keep masks, and the codec's
-    group pricing — linear in activity — collapses to one per-camera
-    coefficient (sum over merged rectangles of area * rho * boundary
-    amplification) times the segment activity series, plus per-stream
-    headers on segments that ship at least one frame.  Returns
-    (total_bytes, frames_sent (C,) int64 positional per camera)."""
-    C = len(cameras)
-    win = n_segs * frames_per_seg
-    sent = np.full((C, n_segs), frames_per_seg, np.int64)
-    if keep is not None:
-        for ci, c in enumerate(cameras):
-            km = np.zeros(win, bool)
-            src = np.asarray(keep[c.cam_id], bool)[:win]
-            km[:src.shape[0]] = src
-            sent[ci] = km.reshape(n_segs, frames_per_seg).sum(axis=1)
-    act = 1.0 / np.sqrt(np.maximum(sent, 1) / 10.0) * 0.9 + 0.1
-    active = sent > 0
-    total = 0.0
-    for ci, c in enumerate(cameras):
-        cid = c.cam_id
-        groups = cam_groups[cid]
-        areas = []
-        for g in groups:
-            x0, y0 = g.x0 * c.tile, g.y0 * c.tile
-            areas.append(min(g.w * c.tile, c.width - x0)
-                         * min(g.h * c.tile, c.height - y0))
-        areas = np.asarray(areas, np.float64)
-        pos = areas > 0
-        k, rho = codec.boundary_k[cid], codec.rho[cid]
-        per_frame = float(np.sum(areas[pos] * rho
-                                 * (1.0 + k / np.sqrt(areas[pos]))))
-        headers = codec.header_bytes * int(np.count_nonzero(pos))
-        total += (per_frame * float(np.sum(act[ci][active[ci]]
-                                           * sent[ci][active[ci]]))
-                  + headers * int(np.count_nonzero(active[ci])))
-    return total, sent.sum(axis=1)
+    Delegates to the ``repro.net.encoder`` packetizer: per-segment
+    sent-frame counts come from one reshape-sum over the keep masks, and
+    the codec's group pricing — linear in activity — collapses to
+    per-camera (body, halo, header) coefficients times the segment
+    activity series.  Headers are charged per shipped segment and ONLY
+    for cameras with a nonzero mask: an empty-mask camera streams nothing
+    — no container overhead, and its ``frames_sent`` entry is 0 (it used
+    to report full frame counts, which leaked phantom frames into the
+    fleet latency/transport model).  Returns (total_bytes, frames_sent
+    (C,) int64 positional per camera)."""
+    coef = camera_coefficients(cameras, cam_groups, codec)
+    sent = sent_matrix(cameras, coef, keep, n_segs, frames_per_seg)
+    body, halo, headers = segment_byte_matrices(coef, sent)
+    return float((body + halo + headers).sum()), sent.sum(axis=1)
 
 
 def online_system_metrics(cameras: Sequence, offline: OfflineResult,
@@ -365,14 +368,27 @@ def online_system_metrics(cameras: Sequence, offline: OfflineResult,
     ``run_online`` (one scene) and the fleet runtime (per group) so the
     two stay numerically identical by construction.  Returns
     (network_mbps, server_hz, camera_fps, latency_s, latency_parts,
-    total_bytes, frames_sent (C,))."""
+    total_bytes, frames_sent (C,), transport).
+
+    ``cfg.transport`` selects the pricing: "analytic" keeps the paper's
+    steady-state scalar formula; "simulated" runs the ``repro.net``
+    edge-to-server runtime (per-camera uplink FIFOs, optional jitter/
+    congestion/rate control, deadline group batching) and reports the
+    per-frame distribution — ``latency_s`` becomes the per-frame mean,
+    which in the uncongested limit equals the analytic value identically,
+    and ``transport`` carries p50/p99 and the per-part breakdown."""
     codec = CodecModel.calibrated(cameras, fps)
     encoder = EncoderModel()
     server = ServerModel()
     frames_per_seg = max(int(round(cfg.segment_s * fps)), 1)
     n_segs = max(n_frames // frames_per_seg, 1)
-    total_bytes, frames_sent = segment_network_bytes(
-        cameras, offline.cam_groups, codec, keep, n_segs, frames_per_seg)
+    # packetize once; the simulated transport path reuses coef/sent
+    # instead of rebuilding them (same math as segment_network_bytes)
+    coef = camera_coefficients(cameras, offline.cam_groups, codec)
+    sent = sent_matrix(cameras, coef, keep, n_segs, frames_per_seg)
+    body, halo, headers = segment_byte_matrices(coef, sent)
+    total_bytes = float((body + halo + headers).sum())
+    frames_sent = sent.sum(axis=1)
     duration_s = n_frames / fps
     network_mbps = total_bytes * 8.0 / duration_s / 1e6
 
@@ -395,8 +411,23 @@ def online_system_metrics(cameras: Sequence, offline: OfflineResult,
     infer = (avg_sent_per_seg / 2.0 + len(cameras)) / server_hz
     latency = wait + enc + tx + infer
     parts = {"wait": wait, "encode": enc, "network": tx, "inference": infer}
+    transport = None
+    if cfg.transport == "simulated":
+        mask_areas = np.asarray([offline.mask_area_px(c.cam_id)
+                                 for c in cameras])
+        transport = simulate_transport(
+            cameras, offline.cam_groups, codec, mask_areas, keep,
+            cfg.segment_s, frames_per_seg, n_segs, cfg.bandwidth_mbps,
+            cfg.rtt_ms, server_hz, encoder.pixels_per_s, cfg.net,
+            coef=coef, sent=sent)
+        latency = transport.mean_s
+        parts = transport.parts_mean()
+        total_bytes = transport.bytes_total
+        network_mbps = total_bytes * 8.0 / duration_s / 1e6
+    elif cfg.transport != "analytic":
+        raise ValueError(f"unknown transport {cfg.transport!r}")
     return (network_mbps, server_hz, camera_fps, latency, parts,
-            total_bytes, frames_sent)
+            total_bytes, frames_sent, transport)
 
 
 def _detects(scene: Scene, offline: OfflineResult, d, thresh: float) -> bool:
@@ -481,13 +512,14 @@ def run_online(scene: Scene, offline: OfflineResult,
     # by object bbox area within the mask relative to mask area; segment
     # compression efficiency improves with longer segments (more temporal
     # references): activity ~ 1/sqrt(seg frames / 10)
-    (network_mbps, server_hz, camera_fps, latency, parts, _,
-     _) = online_system_metrics(scene.cameras, offline, cfg, fps, n_frames,
-                                keep)
+    (network_mbps, server_hz, camera_fps, latency, parts, _, _,
+     transport) = online_system_metrics(scene.cameras, offline, cfg, fps,
+                                        n_frames, keep)
 
     frames_reduced = 0
     if keep is not None:
         frames_reduced = int(sum((~keep[c.cam_id]).sum()
                                  for c in scene.cameras))
     return OnlineMetrics(accuracy, missed, total, missed_per_t, network_mbps,
-                         server_hz, camera_fps, latency, parts, frames_reduced)
+                         server_hz, camera_fps, latency, parts,
+                         frames_reduced, transport)

@@ -14,7 +14,8 @@ from repro.fleet.runtime import (FleetOfflineResult, FleetOnlineMetrics,
                                  fleet_inference_step, run_fleet_offline,
                                  run_fleet_online)
 from repro.fleet.drift import (AdaptiveRunResult, DriftAdapter, DriftConfig,
-                               DriftEvent, run_adaptive_online)
+                               DriftEvent, ShrinkEvent,
+                               run_adaptive_online)
 
 __all__ = [
     "FleetConfig", "FleetGroup", "FleetScene", "GroupSpec",
@@ -22,5 +23,5 @@ __all__ = [
     "FleetOfflineResult", "FleetOnlineMetrics", "fleet_inference_step",
     "run_fleet_offline", "run_fleet_online",
     "AdaptiveRunResult", "DriftAdapter", "DriftConfig", "DriftEvent",
-    "run_adaptive_online",
+    "ShrinkEvent", "run_adaptive_online",
 ]

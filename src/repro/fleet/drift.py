@@ -30,7 +30,8 @@ import numpy as np
 
 from repro.core import setcover
 from repro.core.association import AssociationTable, Region
-from repro.core.pipeline import OfflineResult, bbox_mask_area
+from repro.core.pipeline import (OfflineConfig, OfflineResult,
+                                 bbox_mask_area, run_offline)
 from repro.core.scene import Scene
 
 
@@ -52,6 +53,20 @@ class DriftConfig:
     # appearance counts as covered when >= this fraction of its bbox pixel
     # area survives the RoI crop
     coverage_thresh: float = 0.75
+    # --- scheduled shrink re-solves (ROADMAP: "drift adapter only grows
+    # masks").  Growth re-solves are additive by design; at *detected
+    # low-traffic windows* the adapter instead re-profiles a recent slice
+    # of the stream with the FULL offline pipeline (run_offline on
+    # [t - shrink_profile_frames, t)) and adopts the cold mask — but only
+    # when it is smaller AND does not regress coverage on the buffered
+    # observation window.  A bad adoption self-heals: the breach monitor
+    # keeps running on the shrunk mask and fires a warm grow re-solve.
+    shrink_enabled: bool = False
+    shrink_check_every: int = 50       # frames between low-traffic checks
+    shrink_low_rate: float = 0.5       # appearances/frame; below = lull
+    shrink_profile_frames: int = 250   # re-profile window length
+    shrink_cooldown_frames: int = 400
+    shrink_min_constraints: int = 20   # evidence floor for the re-solve
 
 
 @dataclass
@@ -63,14 +78,30 @@ class DriftEvent:
     wall_s: float                  # re-solve wall time
 
 
+@dataclass
+class ShrinkEvent:
+    t: int                         # frame the shrink re-solve ran
+    mask_before: int               # deployed mask size going in
+    mask_after: int                # ... and coming out (== before if
+    #                                the candidate was rejected)
+    coverage_before: float         # buffered-window coverage, old mask
+    coverage_after: float          # ... under the adopted mask
+    constraints: int               # offline re-profile constraint count
+    adopted: bool
+    wall_s: float
+
+
 class DriftAdapter:
     """Per-group online mask maintainer.
 
     Holds the group's deployed mask (global tile ids over the group's
     ``TileUniverse``) plus the derived per-camera grids, and mutates both
-    when a re-solve fires.  Deployed tiles are never retracted mid-stream —
-    shrinking the mask is an offline decision; the adapter's job is to stop
-    the accuracy bleed when traffic moves."""
+    when a re-solve fires.  Online (grow) re-solves never retract deployed
+    tiles — stopping the accuracy bleed when traffic moves is additive by
+    design.  Retraction happens on a separate, slower path: at detected
+    low-traffic windows ``maybe_shrink`` re-runs the FULL offline pipeline
+    on a recent slice of the stream and adopts the cold (smaller) mask iff
+    it does not regress coverage on the buffered observations."""
 
     def __init__(self, scene: Scene, offline: OfflineResult,
                  cfg: Optional[DriftConfig] = None):
@@ -87,7 +118,9 @@ class DriftAdapter:
             collections.deque()
         self.residual_counts: collections.Counter = collections.Counter()
         self.events: List[DriftEvent] = []
+        self.shrink_events: List[ShrinkEvent] = []
         self._last_resolve_t = -10 ** 9
+        self._last_shrink_t = -10 ** 9
         self._breach_start: Optional[int] = None
 
     # -- monitoring --------------------------------------------------------
@@ -176,6 +209,70 @@ class DriftAdapter:
         self._window.clear()
         self.residual_counts.clear()
 
+    # -- scheduled shrink (full offline re-solve at low-traffic windows) ---
+    @property
+    def shrinks(self) -> int:
+        return sum(1 for e in self.shrink_events if e.adopted)
+
+    def _buffer_coverage(self, mask) -> float:
+        """Fraction of buffered appearances every one of whose candidate
+        regions fits the mask strictly — a conservative (tile-containment)
+        criterion, so "no regress" under it implies no regress under the
+        looser detector tolerance."""
+        if not self._regions:
+            return 1.0
+        ok = 0
+        for _, _, regions in self._regions:
+            if any(self.universe.globalize(c, tiles) <= mask
+                   for c, tiles in regions.items()):
+                ok += 1
+        return ok / len(self._regions)
+
+    def traffic_rate(self) -> float:
+        """Windowed appearances per frame — the low-traffic detector."""
+        return len(self._window) / max(self.cfg.window_frames, 1)
+
+    def maybe_shrink(self, t: int, scene: Scene) -> bool:
+        """At a detected low-traffic window, re-profile the recent stream
+        with the FULL offline pipeline and adopt the cold mask iff it is
+        smaller and does not regress buffered coverage.  Returns True when
+        a shrink was adopted."""
+        cfg = self.cfg
+        if (not cfg.shrink_enabled
+                or t - self._last_shrink_t < cfg.shrink_cooldown_frames
+                or t < cfg.shrink_profile_frames
+                or self.traffic_rate() >= cfg.shrink_low_rate):
+            return False
+        wall0 = time.time()
+        self._last_shrink_t = t
+        res = run_offline(
+            scene, OfflineConfig(profile_frames=cfg.shrink_profile_frames,
+                                 solver="greedy"),
+            t0_frame=t - cfg.shrink_profile_frames)
+        candidate = frozenset(res.mask)
+        n_constraints = len(res.table.constraints)
+        cov_before = self._buffer_coverage(self.mask)
+        cov_after = self._buffer_coverage(candidate)
+        adopted = (n_constraints >= cfg.shrink_min_constraints
+                   and len(candidate) < len(self.mask)
+                   and cov_after >= cov_before - 1e-12)
+        ev = ShrinkEvent(t, len(self.mask),
+                         len(candidate) if adopted else len(self.mask),
+                         cov_before, cov_after if adopted else cov_before,
+                         n_constraints, adopted, time.time() - wall0)
+        self.shrink_events.append(ev)
+        if not adopted:
+            return False
+        self.mask = set(candidate)
+        for c in self.cameras:
+            self.cam_grids[c.cam_id] = self.universe.cam_mask_grid(
+                c.cam_id, self.mask)
+        # measurements under the old mask are stale
+        self._window.clear()
+        self.residual_counts.clear()
+        self._breach_start = None
+        return True
+
 
 # ---------------------------------------------------------------------------
 # reference driver
@@ -220,5 +317,8 @@ def run_adaptive_online(scene: Scene, offline: OfflineResult,
         apps.append(len(by_obj))
         covs.append(n_cov)
         adapter.observe(t, dets)
+        if (adapter.cfg.shrink_enabled
+                and t % adapter.cfg.shrink_check_every == 0):
+            adapter.maybe_shrink(t, scene)
     return AdaptiveRunResult(adapter, np.asarray(frame_t),
                              np.asarray(apps), np.asarray(covs))

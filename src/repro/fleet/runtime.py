@@ -14,6 +14,12 @@ Three jobs:
   segment) network model is the vectorized ``segment_network_bytes``.
   Per-group metrics are numerically identical to ``run_online`` on that
   group alone — the fleet path changes the schedule, not the math.
+  Reducto keep masks ride along per group (``frame_keep[gid][cam_id]``)
+  with the same last-streamed-result forward-fill semantics as
+  ``run_online``, so the transport layer sees filtered ``frames_sent``
+  per camera; ``cfg.transport="simulated"`` prices every group through
+  the ``repro.net`` streaming runtime and merges the per-frame latency
+  distributions fleet-wide.
 * ``fleet_inference_step`` — the kernel-level hot path: per group, all
   cameras' active RoI tiles run as ONE fused gather+conv, ONE
   ``roi_conv_packed`` per remaining layer (cross-camera neighbor table
@@ -36,6 +42,7 @@ from repro.core.pipeline import (OfflineConfig, OfflineResult, OnlineConfig,
                                  online_system_metrics, run_offline)
 from repro.fleet.topology import FleetScene
 from repro.kernels import ops as kops
+from repro.net.batcher import TransportStats, merge_transport
 
 
 # ---------------------------------------------------------------------------
@@ -74,17 +81,28 @@ class FleetOnlineMetrics:
     camera_fps_min: float
     latency_max_s: float
     wall_s: float = 0.0
+    frames_reduced: int = 0       # Reducto-filtered frames, fleet-wide
+    # fleet-wide per-frame latency distribution (simulated transport):
+    # every group's frames merged into one p50/p99-able population
+    transport: Optional[TransportStats] = None
 
 
 def run_fleet_online(fleet: FleetScene,
                      offlines: Sequence[OfflineResult],
                      cfg: Optional[OnlineConfig] = None,
-                     t0: Optional[int] = None, t1: Optional[int] = None
+                     t0: Optional[int] = None, t1: Optional[int] = None,
+                     frame_keep: Optional[Dict[int, Dict]] = None
                      ) -> FleetOnlineMetrics:
+    """``frame_keep`` maps gid -> {cam_id -> (n_frames,) bool keep mask}
+    (groups may be omitted = unfiltered).  ``cfg.frame_keep`` is the
+    single-scene field and stays per-camera; pass the fleet-keyed dict
+    here instead."""
     cfg = cfg or OnlineConfig()
     if cfg.frame_keep is not None:
-        raise NotImplementedError("fleet runtime does not take Reducto "
-                                  "keep masks; run per-group run_online")
+        raise ValueError("use the frame_keep argument (keyed by gid) for "
+                         "fleet runs; OnlineConfig.frame_keep is "
+                         "single-scene")
+    frame_keep = frame_keep or {}
     wall0 = time.time()
     t0 = t0 if t0 is not None else 600
     t1 = t1 if t1 is not None else min(len(g.scene.detections)
@@ -137,7 +155,39 @@ def run_fleet_online(fleet: FleetScene,
         present[det_t, det_obj] = True
         cur = np.zeros((n_frames, C, O), bool)
         cur[det_t[flags], det_cam[flags], det_obj[flags]] = True
-        detected = cur.any(axis=1)
+        if not frame_keep:
+            detected = cur.any(axis=1)
+        else:
+            # Reducto forward-fill (same semantics as run_online): a
+            # filtered frame reuses the detector output of the camera's
+            # most recent *streamed* frame, per flat fleet camera
+            exists = np.zeros((n_frames, C, O), bool)
+            exists[det_t, det_cam, det_obj] = True
+            used = np.empty_like(cur)
+            ci = 0
+            for g in fleet.groups:
+                gkeep = frame_keep.get(g.gid)
+                for c in g.scene.cameras:
+                    if gkeep is None or c.cam_id not in gkeep:
+                        used[:, ci, :] = cur[:, ci, :]
+                        ci += 1
+                        continue
+                    km = np.zeros(n_frames, bool)
+                    src = np.asarray(gkeep[c.cam_id], bool)[:n_frames]
+                    km[:src.shape[0]] = src
+                    kt = np.nonzero(km)[0]
+                    if kt.size == 0:              # camera never streams
+                        used[:, ci, :] = False
+                        ci += 1
+                        continue
+                    j = np.searchsorted(kt, np.arange(n_frames),
+                                        side="left") - 1
+                    last = cur[kt[np.maximum(j, 0)], ci, :]
+                    last[j < 0] = False           # nothing streamed yet
+                    used[:, ci, :] = np.where(km[:, None], cur[:, ci, :],
+                                              last)
+                    ci += 1
+            detected = (exists & used).any(axis=1)
         missed_grid = present & ~detected
         for gi, (o0, o1) in enumerate(group_obj_slice):
             missed_per_group[gi] = missed_grid[:, o0:o1].sum(axis=1) \
@@ -146,18 +196,34 @@ def run_fleet_online(fleet: FleetScene,
 
     # ---- per-group system metrics (the exact run_online block, shared) ----
     per_group: List[OnlineMetrics] = []
+    frames_reduced = 0
     for g, off in zip(fleet.groups, offlines):
-        (network_mbps, server_hz, camera_fps, latency, parts, _,
-         _) = online_system_metrics(g.scene.cameras, off, cfg, fps,
-                                    n_frames)
+        gkeep = frame_keep.get(g.gid)
+        if gkeep is not None:
+            # partial per-camera dicts are legal (missing camera =
+            # unfiltered, matching the accuracy pass above); the byte/
+            # transport model wants a complete dict
+            gkeep = {c.cam_id: gkeep.get(c.cam_id,
+                                         np.ones(n_frames, bool))
+                     for c in g.scene.cameras}
+        (network_mbps, server_hz, camera_fps, latency, parts, _, _,
+         transport) = online_system_metrics(g.scene.cameras, off, cfg,
+                                            fps, n_frames, gkeep)
         missed = int(missed_per_group[g.gid].sum())
         total = totals[g.gid]
+        reduced = 0
+        if gkeep is not None:
+            reduced = int(sum((~np.asarray(gkeep[c.cam_id], bool)).sum()
+                              for c in g.scene.cameras
+                              if c.cam_id in gkeep))
+        frames_reduced += reduced
         per_group.append(OnlineMetrics(
             1.0 - missed / max(total, 1), missed, total,
             missed_per_group[g.gid], network_mbps, server_hz, camera_fps,
-            latency, parts))
+            latency, parts, reduced, transport))
 
     accs = [m.accuracy for m in per_group]
+    transports = [m.transport for m in per_group if m.transport]
     return FleetOnlineMetrics(
         per_group=per_group,
         accuracy_mean=float(np.mean(accs)),
@@ -168,7 +234,9 @@ def run_fleet_online(fleet: FleetScene,
         fleet_server_hz=1.0 / sum(1.0 / m.server_hz for m in per_group),
         camera_fps_min=float(min(m.camera_fps for m in per_group)),
         latency_max_s=float(max(m.latency_s for m in per_group)),
-        wall_s=time.time() - wall0)
+        wall_s=time.time() - wall0,
+        frames_reduced=frames_reduced,
+        transport=merge_transport(transports) if transports else None)
 
 
 # ---------------------------------------------------------------------------

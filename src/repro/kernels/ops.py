@@ -29,6 +29,8 @@ from repro.kernels.roi_conv import (NEIGHBOR_OFFSETS, roi_conv as _roi_conv,
                                     roi_conv_packed as _roi_conv_packed)
 from repro.kernels.sbnet import sbnet_gather as _gather, \
     sbnet_scatter as _scatter, sbnet_scatter_fleet as _scatter_fleet
+from repro.kernels.tile_delta import (COEF_BITS, RUN_BITS, STATS_WIDTH,
+                                      tile_delta as _tile_delta)
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
@@ -213,6 +215,28 @@ def sbnet_scatter_fleet(packed: jax.Array, idx: jax.Array, base: jax.Array,
     return _sbnet_scatter_fleet_jit(packed, idx, base, interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("th", "tw", "qstep",
+                                             "coef_bits", "run_bits",
+                                             "interpret"))
+def _tile_delta_jit(cur, prev, idx, th, tw, qstep, coef_bits, run_bits,
+                    interpret=INTERPRET):
+    return _tile_delta(cur, prev, idx, th, tw, qstep, coef_bits, run_bits,
+                       interpret=interpret)
+
+
+def tile_delta(cur: jax.Array, prev: jax.Array, idx: jax.Array, th: int,
+               tw: int, qstep: float = 8.0, coef_bits: int = COEF_BITS,
+               run_bits: int = RUN_BITS,
+               interpret: bool = INTERPRET) -> jax.Array:
+    """Per-tile temporal delta stats for the edge rate controller:
+    (H, W, C) frame pair + (n, 2) tile coords -> (n, STATS_WIDTH) int32
+    rows of [byte_estimate, nnz, zero_runs, sum|q|, 0...] (bit-exact vs
+    ``ref.tile_delta``)."""
+    KERNEL_COUNTS["tile_delta"] += 1
+    return _tile_delta_jit(cur, prev, idx, th, tw, float(qstep),
+                           int(coef_bits), int(run_bits), interpret)
+
+
 def roi_conv_batched(x: jax.Array, w: jax.Array, idx: jax.Array,
                      th: int, tw: int) -> jax.Array:
     """(B, H, W, Cin) -> (B, n, th, tw, Cout), shared active set."""
@@ -299,7 +323,8 @@ def attention_visit_bound(positions: np.ndarray, block_q: int = 128,
 __all__ = ["mask_to_indices", "neighbor_table", "fleet_indices",
            "fleet_neighbor_table", "sbnet_gather", "sbnet_scatter",
            "sbnet_scatter_fleet", "roi_conv", "roi_conv_fleet",
-           "roi_conv_packed", "roi_conv_batched", "pack_tokens",
+           "roi_conv_packed", "roi_conv_batched", "tile_delta",
+           "STATS_WIDTH", "pack_tokens",
            "unpack_tokens", "roi_attention", "attention_visit_bound",
            "block_min_positions", "KERNEL_COUNTS", "count_kernels",
            "PAD_POS", "ref"]

@@ -85,3 +85,32 @@ def roi_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
     out = jnp.einsum("hqk,khd->qhd", p / denom, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# tile delta + zero-run byte estimation
+# ---------------------------------------------------------------------------
+
+def tile_delta(cur, prev, idx, th: int, tw: int, qstep: float = 8.0,
+               coef_bits: int = 6, run_bits: int = 10):
+    """Numpy oracle for kernels/tile_delta.py — same integer math, same
+    float32 quantization, same row-independent zero-run definition, so the
+    Pallas kernel must match it BIT-EXACTLY.  Returns (n, 8) int32 rows of
+    ``[byte_estimate, nnz, zero_runs, sum_abs_q, 0, 0, 0, 0]``."""
+    import numpy as np
+    cur = np.asarray(cur, np.float32)
+    prev = np.asarray(prev, np.float32)
+    idx = np.asarray(idx)
+    out = np.zeros((idx.shape[0], 8), np.int32)
+    for i, (ty, tx) in enumerate(idx):
+        c = cur[ty * th:(ty + 1) * th, tx * tw:(tx + 1) * tw, :]
+        p = prev[ty * th:(ty + 1) * th, tx * tw:(tx + 1) * tw, :]
+        q = np.round((c - p) / np.float32(qstep)).astype(np.int32)
+        z2 = (q == 0).reshape(th, -1)
+        nnz = int((~z2).sum())
+        left = np.concatenate([np.zeros((th, 1), bool), z2[:, :-1]], axis=1)
+        runs = int((z2 & ~left).sum())
+        sabs = int(np.abs(q).sum())
+        out[i] = [(nnz * coef_bits + runs * run_bits + 7) // 8,
+                  nnz, runs, sabs, 0, 0, 0, 0]
+    return out

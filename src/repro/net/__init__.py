@@ -1,0 +1,34 @@
+"""Edge-to-server streaming runtime.
+
+The subsystem between the codec model and the serving engine: per-camera
+uplinks (``links``: bandwidth traces, jitter, congestion episodes, FIFO
+queuing), RoI-aware packetization and backlog-driven rate control
+(``encoder``, fed by the ``tile_delta`` Pallas kernel), and server-side
+deadline-based group batching with straggler accounting (``batcher``).
+``simulate_transport`` evaluates the whole path as array ops over every
+(camera, segment, frame) at once and returns per-frame latency
+distributions; in the uncongested limit it converges identically to the
+analytic ``pipeline.online_system_metrics`` formula.
+"""
+from repro.net.links import (CongestionEpisode, LinkConfig,
+                             bandwidth_traces, default_congestion_trace,
+                             fifo_departures, queue_wait)
+from repro.net.encoder import (CameraCoefficients, RateControlConfig,
+                               activity, camera_coefficients,
+                               rate_controlled_departures,
+                               segment_byte_matrices, sent_matrix,
+                               tile_static_fraction, zero_safe_div)
+from repro.net.batcher import (DeadlineGroupFormer, NetConfig, Release,
+                               TransportStats, merge_transport,
+                               simulate_transport)
+
+__all__ = [
+    "CongestionEpisode", "LinkConfig", "bandwidth_traces",
+    "default_congestion_trace", "fifo_departures", "queue_wait",
+    "CameraCoefficients", "RateControlConfig", "activity",
+    "camera_coefficients", "rate_controlled_departures",
+    "segment_byte_matrices", "sent_matrix", "tile_static_fraction",
+    "zero_safe_div",
+    "DeadlineGroupFormer", "NetConfig", "Release", "TransportStats",
+    "merge_transport", "simulate_transport",
+]

@@ -1,0 +1,335 @@
+"""Deadline-based group batching + the end-to-end transport simulation.
+
+The server side of the streaming runtime: segments from a group's cameras
+arrive over their own uplinks (``links``); the batcher holds a release
+slot per segment and fires the group's fleet launch when **all** active
+cameras have arrived or the segment deadline expires.  Cameras that miss
+the release are *stragglers*: their frames are served on arrival as their
+own (smaller) launch, and the accounting keeps them visible — straggler
+fraction and deadline hits are first-class outputs, because that is where
+cross-camera savings are won or lost under congestion.
+
+``simulate_transport`` is the whole edge-to-server path as array ops:
+packetize (``encoder``) -> uplink FIFO (``links``) -> deadline release ->
+server FIFO -> per-frame response latencies with a per-part breakdown
+(wait / encode / network / batching / inference).  In the uncongested
+limit (zero jitter, no congestion, no shedding, infinite deadline) the
+per-frame mean degenerates *identically* to the analytic
+``online_system_metrics`` formula; the congested regimes are where the
+distributions (p50/p99) say what the scalar never could.
+
+``DeadlineGroupFormer`` is the same release policy at the kernel level:
+it collects per-camera frames and emits ONE ``RoIDetector.fleet_forward``
+launch chain per release, stragglers riding the next release.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.net.encoder import (CameraCoefficients, RateControlConfig,
+                               camera_coefficients,
+                               rate_controlled_departures,
+                               segment_byte_matrices, sent_matrix,
+                               zero_safe_div)
+from repro.net.links import (LinkConfig, bandwidth_traces, fifo_departures)
+
+
+@dataclass
+class NetConfig:
+    """Edge-to-server streaming runtime parameters (one group)."""
+    link: LinkConfig = field(default_factory=LinkConfig)
+    rate_control: RateControlConfig = field(default_factory=RateControlConfig)
+    deadline_s: float = float("inf")   # batcher wait after segment close
+
+
+@dataclass
+class TransportStats:
+    """Per-frame response-latency distribution + transport accounting."""
+    latency_s: np.ndarray              # (F,) per-frame response latency
+    parts: Dict[str, np.ndarray]       # per-frame breakdown, sums to latency
+    frame_cam: np.ndarray              # (F,) positional camera of each frame
+    bytes_total: float                 # shipped bytes (after shedding)
+    bytes_base: float                  # un-shed wire load
+    frames_sent: np.ndarray            # (C,) int64
+    straggler_frames: int
+    deadline_hits: int                 # releases cut short by the deadline
+    quality_min: float                 # lowest rate-controller quality seen
+
+    @property
+    def mean_s(self) -> float:
+        return float(self.latency_s.mean()) if self.latency_s.size else 0.0
+
+    @property
+    def p50_s(self) -> float:
+        return float(np.percentile(self.latency_s, 50)) \
+            if self.latency_s.size else 0.0
+
+    @property
+    def p99_s(self) -> float:
+        return float(np.percentile(self.latency_s, 99)) \
+            if self.latency_s.size else 0.0
+
+    @property
+    def shed_bytes(self) -> float:
+        return self.bytes_base - self.bytes_total
+
+    @property
+    def straggler_frac(self) -> float:
+        n = self.latency_s.size
+        return self.straggler_frames / n if n else 0.0
+
+    def parts_mean(self) -> Dict[str, float]:
+        return {k: float(v.mean()) if v.size else 0.0
+                for k, v in self.parts.items()}
+
+    def part_p99(self, key: str) -> float:
+        v = self.parts[key]
+        return float(np.percentile(v, 99)) if v.size else 0.0
+
+
+def merge_transport(stats: Sequence[TransportStats]) -> TransportStats:
+    """Fleet-level distribution: concatenate every group's frames."""
+    keys = list(stats[0].parts)
+    return TransportStats(
+        latency_s=np.concatenate([s.latency_s for s in stats]),
+        parts={k: np.concatenate([s.parts[k] for s in stats])
+               for k in keys},
+        frame_cam=np.concatenate([s.frame_cam for s in stats]),
+        bytes_total=float(sum(s.bytes_total for s in stats)),
+        bytes_base=float(sum(s.bytes_base for s in stats)),
+        frames_sent=np.concatenate([s.frames_sent for s in stats]),
+        straggler_frames=int(sum(s.straggler_frames for s in stats)),
+        deadline_hits=int(sum(s.deadline_hits for s in stats)),
+        quality_min=float(min(s.quality_min for s in stats)),
+    )
+
+
+def simulate_transport(cameras: Sequence, cam_groups, codec,
+                       mask_areas: np.ndarray, keep,
+                       segment_s: float, frames_per_seg: int, n_segs: int,
+                       bandwidth_mbps: float, rtt_ms: float,
+                       server_hz: float, pixels_per_s: float,
+                       net: Optional[NetConfig] = None,
+                       coef: Optional[CameraCoefficients] = None,
+                       sent: Optional[np.ndarray] = None
+                       ) -> TransportStats:
+    """Simulate one group's online window end-to-end.
+
+    All model inputs are duck-typed/plain (``codec`` carries the
+    CodecModel fields; ``mask_areas`` is the (C,) per-camera RoI pixel
+    area) so this module never imports the pipeline it is priced by.
+    ``coef``/``sent`` accept the packetization the caller already built
+    (the pipeline computes them for the analytic byte total anyway).
+    Frames inside a segment are laid uniformly over the segment span
+    (capture ``s*seg + (k+0.5)*seg/F``), which makes the mean in-segment
+    wait exactly ``seg/2`` for any (fps, segment_s) pairing."""
+    net = net or NetConfig()
+    C = len(cameras)
+    seg = segment_s
+    F = frames_per_seg
+    if coef is None:
+        coef = camera_coefficients(cameras, cam_groups, codec)
+    if sent is None:
+        sent = sent_matrix(cameras, coef, keep, n_segs, F)
+    body, halo, headers = segment_byte_matrices(coef, sent)
+    base = body + halo + headers
+    close = (np.arange(n_segs) + 1.0) * seg                     # (S,)
+    enc = mask_areas[:, None] * sent / pixels_per_s             # (C, S)
+    arrival_link = close[None, :] + enc
+
+    bw = bandwidth_traces(net.link, bandwidth_mbps, base, seg)
+    rc = net.rate_control
+    if rc.enabled:
+        dep, bytes_out, quality = rate_controlled_departures(
+            arrival_link, body, halo, headers, bw, rc)
+    else:
+        bytes_out, quality = base, np.ones_like(base)
+        dep = fifo_departures(arrival_link, zero_safe_div(bytes_out, bw))
+
+    rtt_half = rtt_ms / 2e3
+    arr_srv = dep + rtt_half                                    # (C, S)
+
+    # ---- deadline release per segment --------------------------------------
+    active = sent > 0
+    arr_m = np.where(active, arr_srv, -np.inf)
+    last = arr_m.max(axis=0)                                    # (S,)
+    release = np.minimum(last, close + net.deadline_s)
+    on_time = active & (arr_srv <= release[None, :] + 1e-12)
+    deadline_hits = int(np.count_nonzero(
+        np.isfinite(last) & (last > close + net.deadline_s)))
+
+    # ---- server FIFO over release + straggler events -----------------------
+    n_rel = (sent * on_time).sum(axis=0)                        # (S,)
+    rel_segs = np.nonzero(n_rel > 0)[0]
+    strag_c, strag_s = np.nonzero(active & ~on_time)
+    ev_time = np.concatenate([release[rel_segs],
+                              arr_srv[strag_c, strag_s]])
+    ev_n = np.concatenate([n_rel[rel_segs], sent[strag_c, strag_s]])
+    n_ev = ev_time.shape[0]
+    seg_ev = np.full(n_segs, -1, np.int64)
+    seg_ev[rel_segs] = np.arange(rel_segs.size)
+    evt_of_pair = np.where(on_time, seg_ev[None, :], -1)
+    evt_of_pair = evt_of_pair.copy()
+    evt_of_pair[strag_c, strag_s] = rel_segs.size \
+        + np.arange(strag_c.size)
+
+    ordv = np.argsort(ev_time, kind="stable")
+    service = ev_n / server_hz
+    dep_ev = fifo_departures(ev_time[ordv][None, :],
+                             service[ordv][None, :])[0]
+    start_ev = np.empty(n_ev)
+    start_ev[ordv] = dep_ev - service[ordv]
+
+    # ---- per-frame latency assembly (flat, no frame loop) ------------------
+    win = n_segs * F
+    K = np.zeros((C, win), bool)
+    if keep is None:
+        K[coef.has_mask] = True
+    else:
+        for ci, c in enumerate(cameras):
+            if not coef.has_mask[ci]:
+                continue
+            src = np.asarray(keep[c.cam_id], bool)[:win]
+            K[ci, :src.shape[0]] = src
+    K3 = K.reshape(C, n_segs, F)
+    cam_f, seg_f, k_f = np.nonzero(K3)
+    nF = cam_f.size
+    if nF == 0:
+        empty = np.zeros(0)
+        return TransportStats(empty, {k: empty.copy() for k in
+                                      ("wait", "encode", "network",
+                                       "batching", "inference")},
+                              np.zeros(0, np.int64), 0.0, 0.0,
+                              sent.sum(axis=1), 0, deadline_hits, 1.0)
+    pair_f = cam_f * n_segs + seg_f
+    cnt_pair = sent.reshape(-1)
+    first = np.zeros(C * n_segs + 1, np.int64)
+    first[1:] = np.cumsum(cnt_pair)
+    rank_f = np.arange(nF) - first[pair_f]
+
+    # within-event frame offsets: pairs ordered by (event, arrival, cam)
+    pc, ps = np.nonzero(active)
+    pe = evt_of_pair[pc, ps]
+    order = np.lexsort((pc, arr_srv[pc, ps], pe))
+    cnts_sorted = sent[pc, ps][order]
+    gcum = np.concatenate([[0], np.cumsum(cnts_sorted)[:-1]])
+    pe_sorted = pe[order]
+    is_first = np.ones(order.size, bool)
+    is_first[1:] = pe_sorted[1:] != pe_sorted[:-1]
+    ev_base = np.zeros(n_ev, np.int64)
+    ev_base[pe_sorted[is_first]] = gcum[is_first]
+    off_sorted = gcum - ev_base[pe_sorted]
+    off_cs = np.zeros((C, n_segs), np.int64)
+    off_cs[pc[order], ps[order]] = off_sorted
+
+    evt_f = evt_of_pair[cam_f, seg_f]
+    j_f = off_cs[cam_f, seg_f] + rank_f
+    t_cap = seg_f * seg + (k_f + 0.5) * seg / F
+    infer_f = (j_f + 0.5 + C) / server_hz
+    completion = start_ev[evt_f] + infer_f
+
+    parts = {
+        "wait": close[seg_f] - t_cap,
+        "encode": enc[cam_f, seg_f],
+        "network": dep[cam_f, seg_f] - arrival_link[cam_f, seg_f]
+                   + rtt_half,
+        "batching": start_ev[evt_f] - arr_srv[cam_f, seg_f],
+        "inference": infer_f,
+    }
+    latency = completion - t_cap
+    straggler_frames = int(sent[strag_c, strag_s].sum())
+    return TransportStats(
+        latency_s=latency, parts=parts, frame_cam=cam_f,
+        bytes_total=float(bytes_out.sum()),
+        bytes_base=float(base.sum()),
+        frames_sent=sent.sum(axis=1),
+        straggler_frames=straggler_frames,
+        deadline_hits=deadline_hits,
+        quality_min=float(quality.min()) if quality.size else 1.0)
+
+
+# ---------------------------------------------------------------------------
+# kernel-level deadline group former (drives RoIDetector.fleet_forward)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Release:
+    t: float                           # release timestamp
+    cams: List[int]                    # cameras in this launch
+    straggler_cams: List[int]          # of those, late joiners
+    deadline_hit: bool
+    outputs: Dict[int, Any]            # cam -> head map
+    # a camera offered its NEXT segment while this batch was still
+    # pending: the batch is forced out so no frame is ever dropped
+    superseded: bool = False
+
+
+class DeadlineGroupFormer:
+    """Collects per-camera (frame, grid) arrivals for one camera group and
+    fires ONE packed fleet launch (``det.fleet_forward``) per release:
+    when every expected camera has arrived, or when the oldest pending
+    arrival has waited ``deadline_s``.  Cameras that miss a release stay
+    pending and ride the next one (straggler accounting per release)."""
+
+    def __init__(self, det, expected_cams: Sequence[int],
+                 deadline_s: float):
+        self.det = det
+        self.expected = list(expected_cams)
+        self.deadline_s = deadline_s
+        self._pending: Dict[int, Tuple[float, Any, Any]] = {}
+        self._late: set = set()        # cams whose batch left without them
+        self.releases: List[Release] = []
+
+    @property
+    def straggler_count(self) -> int:
+        return sum(len(r.straggler_cams) for r in self.releases)
+
+    def offer(self, now: float, cam: int, frame, grid
+              ) -> Optional[Release]:
+        """Feed one camera arrival; returns the release it triggered (the
+        group completing, or the pending batch being forced out because
+        this camera moved on to its next segment), if any.  Call ``poll``
+        to let deadlines fire between arrivals."""
+        rel = None
+        if cam in self._pending:
+            # the camera's previous segment is still pending: its window
+            # is over, so force the batch out rather than dropping the
+            # older frame silently
+            rel = self._release(now, deadline_hit=False, superseded=True)
+        self._pending[cam] = (now, frame, grid)
+        if set(self._pending) >= set(self.expected):
+            return self._release(now, deadline_hit=False)
+        return rel or self.poll(now)
+
+    def poll(self, now: float) -> Optional[Release]:
+        """Fire the deadline if the oldest pending arrival has waited
+        longer than ``deadline_s``."""
+        if not self._pending:
+            return None
+        oldest = min(t for t, _, _ in self._pending.values())
+        if now - oldest >= self.deadline_s:
+            return self._release(now, deadline_hit=True)
+        return None
+
+    def _release(self, now: float, deadline_hit: bool,
+                 superseded: bool = False) -> Release:
+        cams = sorted(self._pending)
+        frames = [self._pending[c][1] for c in cams]
+        grids = [self._pending[c][2] for c in cams]
+        outs = self.det.fleet_forward(frames, grids)
+        stragglers = [c for c in cams if c in self._late]
+        if set(cams) <= self._late:
+            # a pure catch-up launch of the PREVIOUS cycle's stragglers:
+            # the punctual cameras' batch already left without them, so
+            # this release must not mark them late for the next cycle
+            self._late = self._late - set(cams)
+        else:
+            self._late = {c for c in self.expected if c not in cams}
+        self._pending.clear()
+        rel = Release(now, cams, stragglers, deadline_hit,
+                      dict(zip(cams, outs)), superseded)
+        self.releases.append(rel)
+        return rel

@@ -1,0 +1,203 @@
+"""Per-segment RoI packetization + backlog-driven rate control.
+
+Packetization decomposes the codec model's per-camera segment cost
+(`core/compression.py`: ``area * rho * act * (1 + k/sqrt(area)) + header``)
+into the three components the transport layer treats differently:
+
+* **body**  — ``area * rho * act`` bytes: the RoI content itself,
+* **halo**  — the ``k / sqrt(area)`` boundary-amplification surcharge:
+  bytes that exist only because tile rectangles are encoded independently,
+* **header** — per-rectangle container overhead, charged only on segments
+  that ship at least one frame, and only for cameras with a nonzero mask.
+
+Everything is evaluated as (cameras, segments) matrices in one pass; the
+matrices sum to exactly what ``pipeline.segment_network_bytes`` charges
+(that function now delegates here, so the analytic and simulated paths
+cannot drift apart).
+
+The **rate controller** is the edge's response to uplink backlog: when a
+camera's FIFO queue wait exceeds the trigger, it sheds quality on the
+*sheddable* byte mass — the halo surcharge plus the body bytes sitting in
+temporally-static tiles.  Which tiles are static comes from the
+``tile_delta`` Pallas kernel (``kernels/tile_delta.py``): per-tile
+quantized-delta zero-run byte estimates, computed on-device next to the
+encoder (``tile_static_fraction``).  Control is causal — segment ``s``
+reacts to the backlog left by segment ``s-1`` — so the evolution is a
+single scan over segments, vectorized across all cameras.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# packetization: (cameras, segments) byte matrices
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CameraCoefficients:
+    """Per-camera per-(activity*frame) byte coefficients of the codec
+    model, split into transport classes.  ``has_mask`` marks cameras with
+    at least one positive-area rectangle — empty-mask cameras ship
+    nothing: no body, no halo, no headers, no frames."""
+    body: np.ndarray          # (C,) area * rho summed over rectangles
+    halo: np.ndarray          # (C,) boundary surcharge (k/sqrt(area) term)
+    headers: np.ndarray       # (C,) container bytes per shipped segment
+    has_mask: np.ndarray      # (C,) bool
+
+    @property
+    def per_frame(self) -> np.ndarray:
+        return self.body + self.halo
+
+
+def camera_coefficients(cameras: Sequence, cam_groups, codec
+                        ) -> CameraCoefficients:
+    """``codec`` duck-types CodecModel (boundary_k, rho, header_bytes)."""
+    C = len(cameras)
+    body = np.zeros(C)
+    halo = np.zeros(C)
+    headers = np.zeros(C)
+    has = np.zeros(C, bool)
+    for ci, c in enumerate(cameras):
+        cid = c.cam_id
+        areas = []
+        for g in cam_groups[cid]:
+            x0, y0 = g.x0 * c.tile, g.y0 * c.tile
+            areas.append(min(g.w * c.tile, c.width - x0)
+                         * min(g.h * c.tile, c.height - y0))
+        areas = np.asarray(areas, np.float64)
+        pos = areas > 0
+        if not pos.any():
+            continue
+        k, rho = codec.boundary_k[cid], codec.rho[cid]
+        body[ci] = float(np.sum(areas[pos] * rho))
+        halo[ci] = float(np.sum(areas[pos] * rho * k / np.sqrt(areas[pos])))
+        headers[ci] = codec.header_bytes * int(np.count_nonzero(pos))
+        has[ci] = True
+    return CameraCoefficients(body, halo, headers, has)
+
+
+def sent_matrix(cameras: Sequence, coef: CameraCoefficients, keep,
+                n_segs: int, frames_per_seg: int) -> np.ndarray:
+    """(C, S) int64 frames shipped per camera per segment: the Reducto
+    keep masks folded per segment, zeroed for empty-mask cameras (a
+    camera with no RoI rectangles streams nothing at all)."""
+    C = len(cameras)
+    win = n_segs * frames_per_seg
+    sent = np.full((C, n_segs), frames_per_seg, np.int64)
+    if keep is not None:
+        for ci, c in enumerate(cameras):
+            km = np.zeros(win, bool)
+            src = np.asarray(keep[c.cam_id], bool)[:win]
+            km[:src.shape[0]] = src
+            sent[ci] = km.reshape(n_segs, frames_per_seg).sum(axis=1)
+    sent[~coef.has_mask] = 0
+    return sent
+
+
+def zero_safe_div(num: np.ndarray, den: np.ndarray) -> np.ndarray:
+    """num/den with 0 bytes taking 0 time regardless of the bandwidth
+    (zero for empty-mask cameras / fully filtered segments, infinite in
+    the uncongested limit) — the one shared transmit-time rule for the
+    whole transport layer."""
+    with np.errstate(divide="ignore", invalid="ignore"):
+        out = num / den
+    return np.where(num > 0, out, 0.0)
+
+
+def activity(sent: np.ndarray) -> np.ndarray:
+    """Per-segment compression activity: longer shipped runs compress
+    better (same law as the analytic model)."""
+    return 1.0 / np.sqrt(np.maximum(sent, 1) / 10.0) * 0.9 + 0.1
+
+
+def segment_byte_matrices(coef: CameraCoefficients, sent: np.ndarray
+                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(body, halo, headers) (C, S) byte matrices; their sum is the wire
+    load of the un-shed stream."""
+    act_sent = activity(sent) * sent
+    shipped = sent > 0
+    body = coef.body[:, None] * act_sent
+    halo = coef.halo[:, None] * act_sent
+    headers = coef.headers[:, None] * shipped
+    return body, halo, headers
+
+
+# ---------------------------------------------------------------------------
+# rate control: shed halo/static-tile quality under backlog
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RateControlConfig:
+    enabled: bool = False
+    backlog_trigger_s: float = 0.25   # queue wait that starts shedding
+    gain: float = 2.0                 # quality drop per second over trigger
+    min_quality: float = 0.35         # floor on the shed multiplier
+    # fraction of each camera's body bytes sitting in temporally-static
+    # tiles (sheddable without touching moving content); scalar or (C,).
+    # Calibrate with ``tile_static_fraction`` (the tile_delta kernel).
+    static_fraction: float | np.ndarray = 0.0
+
+
+def rate_controlled_departures(arrivals: np.ndarray, body: np.ndarray,
+                               halo: np.ndarray, headers: np.ndarray,
+                               bw: np.ndarray, rc: RateControlConfig
+                               ) -> Tuple[np.ndarray, np.ndarray,
+                                          np.ndarray]:
+    """Causal quality control + FIFO queue in one scan over segments.
+
+    Per segment the controller sees the backlog the previous segment left
+    on each camera's link (``dep[s-1] - arrival[s]``), drops quality
+    linearly past the trigger, and sheds the sheddable mass
+    ``halo + static_fraction * body`` by ``(1 - quality)``.  Returns
+    (departures (C, S), bytes_out (C, S), quality (C, S))."""
+    C, S = body.shape
+    static = np.broadcast_to(np.asarray(rc.static_fraction, np.float64),
+                             (C,))
+    sheddable = halo + static[:, None] * body
+    base = body + halo + headers
+    dep = np.zeros((C, S))
+    bytes_out = np.zeros((C, S))
+    quality = np.ones((C, S))
+    prev_dep = np.full(C, -np.inf)
+    for s in range(S):
+        backlog = np.maximum(prev_dep - arrivals[:, s], 0.0)
+        q = np.clip(1.0 - rc.gain
+                    * np.maximum(backlog - rc.backlog_trigger_s, 0.0),
+                    rc.min_quality, 1.0)
+        b = base[:, s] - (1.0 - q) * sheddable[:, s]
+        tx = zero_safe_div(b, bw[:, s])
+        start = np.maximum(arrivals[:, s], prev_dep)
+        prev_dep = start + tx
+        dep[:, s] = prev_dep
+        bytes_out[:, s] = b
+        quality[:, s] = q
+    return dep, bytes_out, quality
+
+
+# ---------------------------------------------------------------------------
+# on-device static-tile estimation (the tile_delta kernel's consumer)
+# ---------------------------------------------------------------------------
+
+def tile_static_fraction(cur, prev, grid: np.ndarray, tile: int,
+                         qstep: float = 8.0, static_ratio: float = 0.10
+                         ) -> float:
+    """Fraction of a camera's RoI tiles whose quantized temporal delta
+    prices below ``static_ratio`` of the dense tile cost — the
+    ``static_fraction`` feed for the rate controller.  One ``tile_delta``
+    kernel launch per call (observable in ``ops.KERNEL_COUNTS``).
+
+    The kernel import is local so the rest of this module (and the core
+    pipeline that prices through it) stays numpy-only at import time."""
+    from repro.kernels import ops as kops
+    idx = kops.mask_to_indices(np.asarray(grid, bool))
+    if idx.shape[0] == 0:
+        return 0.0
+    stats = np.asarray(kops.tile_delta(cur, prev, idx, tile, tile,
+                                       qstep=qstep))
+    C = np.asarray(cur).shape[-1]
+    dense_bytes = tile * tile * C * kops.COEF_BITS / 8.0
+    return float(np.mean(stats[:, 0] <= static_ratio * dense_bytes))

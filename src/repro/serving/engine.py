@@ -42,6 +42,23 @@ class Request:
     patches: Optional[np.ndarray] = None         # (S_img, D) VLM stream
     keep: Optional[np.ndarray] = None            # (S,) bool RoI keep-list
     max_new_tokens: int = 16
+    # deadline-batched serving (serve_deadline): which camera group the
+    # request belongs to, and when it arrived at the server
+    group: Optional[int] = None
+    arrival_s: float = 0.0
+
+
+@dataclass
+class ServeReport:
+    """Accounting from ``serve_deadline``: how request groups formed."""
+    complete_flushes: int = 0        # group reached its expected size
+    deadline_flushes: int = 0        # released early by the deadline
+    straggler_requests: int = 0      # arrived after their group released
+    release_s: Dict[int, float] = field(default_factory=dict)  # rid -> t
+
+    def wait_s(self, req: "Request") -> float:
+        """Batching delay this request paid in the group former."""
+        return self.release_s[req.rid] - req.arrival_s
 
 
 @dataclass
@@ -214,50 +231,114 @@ class ServingEngine:
         Returns {rid: generated tokens}."""
         results: Dict[int, np.ndarray] = {}
         group: List[Request] = []
-        pack_block = 128
-
-        def flush():
-            if not group:
-                return
-            steps = [min(r.max_new_tokens, greedy_steps) for r in group]
-            gsteps = max(steps)
-            # group-common cache length: every request's packed/dense
-            # prompt plus the GROUP's decode step count fits (lockstep
-            # decode runs gsteps for everyone; a shorter per-request
-            # budget must not let KV writes clamp onto the cache end)
-            need = []
-            for r in group:
-                if r.keep is not None and self.scfg.roi_sparsity:
-                    need.append(_round_up(len(r.tokens), pack_block) + gsteps)
-                else:
-                    need.append(len(r.tokens) + gsteps)
-            ring = self._ensure_ring(len(group), max(need))
-
-            firsts, starts = [], []
-            for gi, r in enumerate(group):   # ragged per-request packing
-                slot = jax.tree.map(lambda x: x[gi], ring)
-                if r.keep is not None and self.scfg.roi_sparsity:
-                    res = self.roi_prefill(jnp.asarray(r.tokens),
-                                           jnp.asarray(r.keep),
-                                           block=pack_block, caches=slot)
-                    new_slot = res.caches
-                    firsts.append(jnp.argmax(res.logits[:, -1], -1))
-                    starts.append(res.n_kept)
-                else:
-                    batch = {"tokens": jnp.asarray(r.tokens)[None]}
-                    logits, new_slot = self.prefill(batch, caches=slot)
-                    firsts.append(jnp.argmax(logits[:, -1], -1))
-                    starts.append(len(r.tokens))
-                ring = self._ring_write(ring, new_slot, gi)
-            toks, ring = self._decode_stacked(ring, firsts, starts, gsteps)
-            self._ring = ring                 # keep buffers for next flush
-            for gi, (r, ns) in enumerate(zip(group, steps)):
-                results[r.rid] = toks[gi, :ns]
-            group.clear()
-
         for r in requests:
             group.append(r)
             if len(group) >= self.scfg.max_batch:
-                flush()
-        flush()
+                self._flush_group(group, greedy_steps, results)
+                group = []
+        self._flush_group(group, greedy_steps, results)
         return results
+
+    def _flush_group(self, group: List[Request], greedy_steps: int,
+                     results: Dict[int, np.ndarray]) -> None:
+        """Prefill every request of ``group`` into the persistent ring and
+        greedy-decode the batch in lockstep (shared by ``serve`` and the
+        deadline former)."""
+        if not group:
+            return
+        pack_block = 128
+        steps = [min(r.max_new_tokens, greedy_steps) for r in group]
+        gsteps = max(steps)
+        # group-common cache length: every request's packed/dense
+        # prompt plus the GROUP's decode step count fits (lockstep
+        # decode runs gsteps for everyone; a shorter per-request
+        # budget must not let KV writes clamp onto the cache end)
+        need = []
+        for r in group:
+            if r.keep is not None and self.scfg.roi_sparsity:
+                need.append(_round_up(len(r.tokens), pack_block) + gsteps)
+            else:
+                need.append(len(r.tokens) + gsteps)
+        ring = self._ensure_ring(len(group), max(need))
+
+        firsts, starts = [], []
+        for gi, r in enumerate(group):   # ragged per-request packing
+            slot = jax.tree.map(lambda x: x[gi], ring)
+            if r.keep is not None and self.scfg.roi_sparsity:
+                res = self.roi_prefill(jnp.asarray(r.tokens),
+                                       jnp.asarray(r.keep),
+                                       block=pack_block, caches=slot)
+                new_slot = res.caches
+                firsts.append(jnp.argmax(res.logits[:, -1], -1))
+                starts.append(res.n_kept)
+            else:
+                batch = {"tokens": jnp.asarray(r.tokens)[None]}
+                logits, new_slot = self.prefill(batch, caches=slot)
+                firsts.append(jnp.argmax(logits[:, -1], -1))
+                starts.append(len(r.tokens))
+            ring = self._ring_write(ring, new_slot, gi)
+        toks, ring = self._decode_stacked(ring, firsts, starts, gsteps)
+        self._ring = ring                 # keep buffers for next flush
+        for gi, (r, ns) in enumerate(zip(group, steps)):
+            results[r.rid] = toks[gi, :ns]
+
+    # -- deadline-based group forming ------------------------------------------
+    def serve_deadline(self, requests: List[Request],
+                       group_sizes: Dict[int, int],
+                       deadline_s: float, greedy_steps: int = 8
+                       ) -> Tuple[Dict[int, np.ndarray], ServeReport]:
+        """Deadline-based group former over a timestamped request stream —
+        the ``repro.net.batcher`` release policy at the serving layer.
+
+        Requests carry ``(group, arrival_s)``; a group flushes the moment
+        its ``group_sizes[gid]`` members are pending, or when its oldest
+        pending member has waited ``deadline_s`` (measured against the
+        stream clock, which advances with each arrival).  Members that
+        show up after their batch left are stragglers: they ride the
+        group's next flush and are counted in the report.  Each flush is
+        one lockstep batch through the persistent cache ring, identical
+        to ``serve``'s."""
+        results: Dict[int, np.ndarray] = {}
+        report = ServeReport()
+        pending: Dict[int, List[Request]] = {}
+        # after a deadline flush releases k of a group's N members, the
+        # next (N - k) arrivals of that group are the stragglers of THAT
+        # cycle — members beyond them belong to the next batch and are
+        # not late.  A complete flush clears the quota.
+        late_quota: Dict[int, int] = {}
+
+        def flush(gid: int, now: float, by_deadline: bool) -> None:
+            members = pending.pop(gid, [])
+            if not members:
+                return
+            self._flush_group(members, greedy_steps, results)
+            for r in members:
+                report.release_s[r.rid] = now
+            if by_deadline:
+                report.deadline_flushes += 1
+                late_quota[gid] = (group_sizes.get(gid,
+                                                   self.scfg.max_batch)
+                                   - len(members))
+            else:
+                report.complete_flushes += 1
+                late_quota[gid] = 0
+
+        for r in sorted(requests, key=lambda r: r.arrival_s):
+            now = r.arrival_s
+            # deadlines that expired while the stream was quiet
+            for gid in list(pending):
+                oldest = min(m.arrival_s for m in pending[gid])
+                if now - oldest >= deadline_s:
+                    flush(gid, oldest + deadline_s, by_deadline=True)
+            gid = r.group if r.group is not None else -1
+            if late_quota.get(gid, 0) > 0:
+                report.straggler_requests += 1
+                late_quota[gid] -= 1
+            pending.setdefault(gid, []).append(r)
+            if len(pending[gid]) >= group_sizes.get(
+                    gid, self.scfg.max_batch):
+                flush(gid, now, by_deadline=False)
+        for gid in list(pending):
+            oldest = min(m.arrival_s for m in pending[gid])
+            flush(gid, oldest + deadline_s, by_deadline=True)
+        return results, report

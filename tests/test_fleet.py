@@ -305,3 +305,114 @@ def test_drift_adapter_quiet_on_stationary_traffic(fleet, offlines):
     res = run_adaptive_online(g.scene, offlines[0], 300, 450, DriftConfig())
     assert res.resolves == 0
     assert res.coverage_between(300, 450) >= 0.95
+
+
+# ---------------------------------------------------------------------------
+# Reducto keep masks through the fleet runtime (forward-fill semantics)
+# ---------------------------------------------------------------------------
+
+def test_fleet_keep_masks_match_single_group_runs(fleet, offlines):
+    """frame_keep[gid] flows through accuracy (last-streamed-result
+    forward fill) AND transport (filtered frames_sent) exactly like
+    run_online with the same per-camera masks."""
+    from repro.core.reducto import keep_masks_for_threshold
+    fk = {g.gid: keep_masks_for_threshold(g.scene, offlines[g.gid], 0.02,
+                                          300, 450, use_mask=True)
+          for g in fleet.groups}
+    fm = run_fleet_online(fleet, offlines, OnlineConfig(), 300, 450,
+                          frame_keep=fk)
+    total_reduced = 0
+    for g, m in zip(fleet.groups, fm.per_group):
+        ref = run_online(g.scene, offlines[g.gid],
+                         OnlineConfig(frame_keep=fk[g.gid]), 300, 450)
+        assert m.accuracy == ref.accuracy
+        assert m.missed == ref.missed
+        np.testing.assert_array_equal(m.missed_per_t, ref.missed_per_t)
+        assert m.network_mbps == pytest.approx(ref.network_mbps, rel=1e-9)
+        assert m.latency_s == pytest.approx(ref.latency_s, rel=1e-12)
+        assert m.frames_reduced == ref.frames_reduced > 0
+        total_reduced += ref.frames_reduced
+    assert fm.frames_reduced == total_reduced
+
+
+def test_fleet_rejects_single_scene_keep_field(fleet, offlines):
+    with pytest.raises(ValueError):
+        run_fleet_online(fleet, offlines,
+                         OnlineConfig(frame_keep={0: np.ones(10, bool)}),
+                         300, 450)
+
+
+def test_fleet_simulated_transport_merges_distributions(fleet, offlines):
+    """transport="simulated" yields per-group distributions whose merge is
+    the fleet-wide population; per-group means still equal the analytic
+    values in the uncongested limit."""
+    fa = run_fleet_online(fleet, offlines, OnlineConfig(), 300, 450)
+    fs = run_fleet_online(fleet, offlines,
+                          OnlineConfig(transport="simulated"), 300, 450)
+    assert fs.transport is not None and fa.transport is None
+    n = 0
+    for ma, ms in zip(fa.per_group, fs.per_group):
+        assert ms.transport is not None
+        assert ms.latency_s == pytest.approx(ma.latency_s, rel=1e-9)
+        assert ms.accuracy == ma.accuracy
+        n += ms.transport.latency_s.size
+    assert fs.transport.latency_s.size == n
+    assert fs.transport.p99_s >= fs.transport.p50_s
+
+
+# ---------------------------------------------------------------------------
+# scheduled shrink re-solves (low-traffic windows)
+# ---------------------------------------------------------------------------
+
+def test_shrink_resolve_drops_stale_tiles_without_regressing():
+    """Machinery: after traffic shifts away from the profiled corridors, a
+    low-traffic-window shrink re-solve adopts a smaller mask, never
+    regresses buffered coverage, and the breach monitor still guards the
+    shrunk mask (self-healing grow)."""
+    scfg = SceneConfig(duration_s=80, seed=2,
+                       entry_weights=(0.5, 0.5, 0.0, 0.0),
+                       shift_at_s=40.0,
+                       shift_entry_weights=(0.0, 0.0, 0.5, 0.5))
+    scene = generate_scene(scfg)
+    from repro.core.pipeline import OfflineConfig as OC
+    off = run_offline(scene, OC(profile_frames=300, solver="greedy"))
+    cfg = DriftConfig(shrink_enabled=True, shrink_low_rate=100.0,
+                      shrink_cooldown_frames=150,
+                      shrink_profile_frames=250)
+    res = run_adaptive_online(scene, off, 300, 800, cfg)
+    ad = res.adapter
+    adopted = [e for e in ad.shrink_events if e.adopted]
+    assert adopted, "at least one shrink must fire on this schedule"
+    for e in ad.shrink_events:
+        assert e.coverage_after >= e.coverage_before - 1e-12
+        if e.adopted:
+            assert e.mask_after < e.mask_before
+        else:
+            assert e.mask_after == e.mask_before
+    # post-shift stream still covered (grow re-solve may assist)
+    assert res.coverage_between(650, 800) >= 0.95
+
+
+def test_shrink_gated_by_traffic_rate(fleet, offlines):
+    """Stationary, busy traffic: the low-rate gate keeps shrink silent."""
+    g = fleet.groups[0]
+    cfg = DriftConfig(shrink_enabled=True, shrink_low_rate=0.01,
+                      shrink_profile_frames=100)
+    res = run_adaptive_online(g.scene, offlines[0], 300, 450, cfg)
+    assert res.adapter.shrinks == 0
+    assert all(not e.adopted for e in res.adapter.shrink_events)
+
+
+def test_fleet_partial_keep_dict_treats_missing_as_unfiltered(fleet,
+                                                              offlines):
+    """A frame_keep dict covering only SOME cameras of a group: missing
+    cameras are unfiltered in accuracy AND transport (this used to
+    KeyError in the byte model after the accuracy pass succeeded)."""
+    n = 150
+    partial = {0: {0: np.ones(n, bool)}}       # group 0, camera 0 only
+    fm = run_fleet_online(fleet, offlines, OnlineConfig(), 300, 450,
+                          frame_keep=partial)
+    ref = run_fleet_online(fleet, offlines, OnlineConfig(), 300, 450)
+    for m, r in zip(fm.per_group, ref.per_group):
+        assert m.accuracy == r.accuracy        # all-True mask = no filter
+        assert m.network_mbps == pytest.approx(r.network_mbps)

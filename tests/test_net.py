@@ -1,0 +1,398 @@
+"""Edge-to-server streaming runtime: analytic<->simulated equivalence,
+uplink FIFO/congestion behavior, tile_delta kernel exactness, rate
+control, deadline batching + stragglers, and the header-accounting fix."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.grouping import TileGroup
+from repro.core.compression import CodecModel
+from repro.core.pipeline import (OfflineConfig, OnlineConfig,
+                                 full_frame_offline, online_system_metrics,
+                                 run_offline, run_online,
+                                 segment_network_bytes)
+from repro.core.scene import SceneConfig, generate_scene
+from repro.kernels import ops, ref
+from repro.net import (DeadlineGroupFormer, LinkConfig, NetConfig,
+                       RateControlConfig, default_congestion_trace,
+                       fifo_departures, tile_static_fraction)
+from repro.serving.detector import DetectorConfig, RoIDetector
+
+
+@pytest.fixture(scope="module")
+def scene():
+    return generate_scene(SceneConfig(duration_s=40, seed=1))
+
+
+@pytest.fixture(scope="module")
+def offline(scene):
+    return run_offline(scene, OfflineConfig(profile_frames=200,
+                                            solver="greedy"))
+
+
+@pytest.fixture(scope="module")
+def fullframe(scene):
+    return full_frame_offline(scene)
+
+
+# ---------------------------------------------------------------------------
+# analytic <-> simulated equivalence (the uncongested limit)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(bw=st.floats(8.0, 5000.0), rtt=st.floats(0.0, 80.0),
+       seg=st.floats(0.5, 3.0))
+def test_simulated_converges_to_analytic(bw, rtt, seg):
+    """Zero jitter, no congestion, no shedding, infinite deadline: the
+    simulated per-frame MEAN latency and total bytes must match the
+    analytic formula within 1e-6 relative."""
+    scene = test_simulated_converges_to_analytic._scene
+    offline = test_simulated_converges_to_analytic._offline
+    a = online_system_metrics(
+        scene.cameras, offline,
+        OnlineConfig(segment_s=seg, bandwidth_mbps=bw, rtt_ms=rtt),
+        10.0, 200)
+    s = online_system_metrics(
+        scene.cameras, offline,
+        OnlineConfig(segment_s=seg, bandwidth_mbps=bw, rtt_ms=rtt,
+                     transport="simulated"),
+        10.0, 200)
+    assert abs(s[3] - a[3]) <= 1e-6 * a[3], (s[3], a[3])     # latency
+    assert abs(s[5] - a[5]) <= 1e-6 * a[5], (s[5], a[5])     # bytes
+    np.testing.assert_array_equal(s[6], a[6])                # frames_sent
+    assert s[7] is not None and a[7] is None
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _bind_property_fixtures(scene, offline):
+    # the hypothesis shim calls property functions with zero pytest
+    # fixtures; hand them the module fixtures via attributes
+    test_simulated_converges_to_analytic._scene = scene
+    test_simulated_converges_to_analytic._offline = offline
+
+
+def test_infinite_bandwidth_limit(scene, offline):
+    """bandwidth -> inf: transmission vanishes, rtt/2 survives, and the
+    two paths still agree exactly."""
+    cfg_a = OnlineConfig(bandwidth_mbps=float("inf"), rtt_ms=20.0)
+    cfg_s = OnlineConfig(bandwidth_mbps=float("inf"), rtt_ms=20.0,
+                         transport="simulated")
+    a = online_system_metrics(scene.cameras, offline, cfg_a, 10.0, 200)
+    s = online_system_metrics(scene.cameras, offline, cfg_s, 10.0, 200)
+    assert abs(s[3] - a[3]) <= 1e-6 * a[3]
+    assert s[7].parts_mean()["network"] == pytest.approx(20.0 / 2e3)
+
+
+def test_simulated_through_run_online(scene, offline):
+    """run_online carries the distribution; accuracy is untouched by the
+    transport model."""
+    m_a = run_online(scene, offline, OnlineConfig(), 200, 400)
+    m_s = run_online(scene, offline, OnlineConfig(transport="simulated"),
+                     200, 400)
+    assert m_s.accuracy == m_a.accuracy
+    assert m_s.transport is not None and m_a.transport is None
+    assert m_s.latency_s == pytest.approx(m_a.latency_s, rel=1e-9)
+    assert m_s.latency_p99_s > m_s.latency_p50_s
+    # per-frame parts telescope to the total latency
+    ts = m_s.transport
+    total = sum(ts.parts[k] for k in ts.parts)
+    np.testing.assert_allclose(total, ts.latency_s, rtol=1e-12)
+
+
+def test_unknown_transport_rejected(scene, offline):
+    with pytest.raises(ValueError):
+        online_system_metrics(scene.cameras, offline,
+                              OnlineConfig(transport="nope"), 10.0, 100)
+
+
+# ---------------------------------------------------------------------------
+# links: FIFO closed form, jitter, congestion
+# ---------------------------------------------------------------------------
+
+def test_fifo_departures_closed_form_matches_recursion():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        S = int(rng.integers(1, 40))
+        arr = np.cumsum(rng.uniform(0.0, 2.0, S))
+        tx = rng.uniform(0.0, 3.0, (3, S))
+        dep = fifo_departures(np.broadcast_to(arr, (3, S)), tx)
+        for c in range(3):
+            d = -np.inf
+            for s in range(S):
+                d = max(arr[s], d) + tx[c, s]
+                assert dep[c, s] == pytest.approx(d)
+
+
+def test_congestion_inflates_tail(scene, fullframe):
+    base = OnlineConfig(transport="simulated")
+    cong = OnlineConfig(transport="simulated", net=NetConfig(
+        link=LinkConfig(congestion=default_congestion_trace(20.0))))
+    ts0 = online_system_metrics(scene.cameras, fullframe, base,
+                                10.0, 200)[7]
+    ts1 = online_system_metrics(scene.cameras, fullframe, cong,
+                                10.0, 200)[7]
+    assert ts1.p50_s > ts0.p50_s
+    assert ts1.p99_s > ts0.p99_s
+    # congestion backs up the link, not the batcher's other parts
+    assert ts1.parts_mean()["network"] > 3 * ts0.parts_mean()["network"]
+
+
+def test_roi_beats_full_frame_under_congestion(scene, offline, fullframe):
+    """Acceptance: CrossRoI masks cut p50 response delay >= 20% vs
+    full-frame streaming under the default congestion trace."""
+    net = NetConfig(link=LinkConfig(congestion=default_congestion_trace(
+        20.0)))
+    cfg = OnlineConfig(transport="simulated", net=net)
+    roi = online_system_metrics(scene.cameras, offline, cfg, 10.0, 200)[7]
+    ff = online_system_metrics(scene.cameras, fullframe, cfg, 10.0, 200)[7]
+    assert roi.p50_s <= 0.8 * ff.p50_s
+    assert roi.p99_s < ff.p99_s
+
+
+def test_jitter_perturbs_but_preserves_mean_load(scene, offline):
+    cfg = OnlineConfig(transport="simulated", net=NetConfig(
+        link=LinkConfig(jitter_std=0.5, seed=7)))
+    ts = online_system_metrics(scene.cameras, offline, cfg, 10.0, 200)[7]
+    base = online_system_metrics(scene.cameras, offline,
+                                 OnlineConfig(transport="simulated"),
+                                 10.0, 200)[7]
+    assert ts.bytes_total == pytest.approx(base.bytes_total)  # load same
+    assert ts.latency_s.mean() >= base.latency_s.mean()       # queues hurt
+
+
+# ---------------------------------------------------------------------------
+# tile_delta kernel (the rate controller's on-device feed)
+# ---------------------------------------------------------------------------
+
+def test_tile_delta_bit_exact_vs_reference():
+    rng = np.random.default_rng(3)
+    for th, tw, C, q in [(8, 8, 3, 8.0), (16, 16, 3, 4.0), (8, 16, 1, 16.0)]:
+        H, W = th * 5, tw * 4
+        cur = rng.normal(scale=50, size=(H, W, C)).astype(np.float32)
+        prev = cur + rng.normal(scale=7, size=(H, W, C)).astype(np.float32)
+        prev[:th] = cur[:th]                       # one static tile row
+        grid = rng.random((5, 4)) < 0.8
+        grid[0, 0] = True
+        idx = ops.mask_to_indices(grid)
+        out = np.asarray(ops.tile_delta(jnp.asarray(cur), jnp.asarray(prev),
+                                        jnp.asarray(idx), th, tw, qstep=q))
+        expect = ref.tile_delta(cur, prev, idx, th, tw, qstep=q)
+        np.testing.assert_array_equal(out, expect)
+
+
+def test_tile_delta_dispatch_counted():
+    rng = np.random.default_rng(4)
+    cur = rng.normal(size=(32, 32, 3)).astype(np.float32)
+    idx = ops.mask_to_indices(np.ones((2, 2), bool))
+    with ops.count_kernels() as c:
+        ops.tile_delta(jnp.asarray(cur), jnp.asarray(cur),
+                       jnp.asarray(idx), 16, 16)
+    assert c["tile_delta"] == 1
+
+
+def test_tile_delta_static_tile_prices_near_zero():
+    cur = np.random.default_rng(5).normal(
+        scale=60, size=(16, 16, 3)).astype(np.float32)
+    idx = np.array([[0, 0]], np.int32)
+    out = np.asarray(ops.tile_delta(jnp.asarray(cur), jnp.asarray(cur),
+                                    jnp.asarray(idx), 16, 16))
+    nbytes, nnz, runs, sabs = out[0, :4]
+    assert nnz == 0 and sabs == 0
+    assert runs == 16                   # one run per scan row
+    assert nbytes == (runs * ops.RUN_BITS + 7) // 8
+
+
+def test_tile_static_fraction_feeds_controller():
+    rng = np.random.default_rng(6)
+    t = 16
+    cur = rng.normal(scale=60, size=(4 * t, 4 * t, 3)).astype(np.float32)
+    prev = cur.copy()
+    prev[:2 * t] += rng.normal(scale=30,
+                               size=(2 * t, 4 * t, 3)).astype(np.float32)
+    grid = np.ones((4, 4), bool)
+    with ops.count_kernels() as c:
+        frac = tile_static_fraction(jnp.asarray(cur), jnp.asarray(prev),
+                                    grid, t)
+    assert c["tile_delta"] == 1
+    assert frac == pytest.approx(0.5)   # bottom half static
+
+
+# ---------------------------------------------------------------------------
+# rate control
+# ---------------------------------------------------------------------------
+
+def test_rate_control_inert_without_backlog(scene, offline):
+    rc = RateControlConfig(enabled=True, static_fraction=0.5)
+    ts = online_system_metrics(
+        scene.cameras, offline,
+        OnlineConfig(transport="simulated", net=NetConfig(rate_control=rc)),
+        10.0, 200)[7]
+    base = online_system_metrics(scene.cameras, offline,
+                                 OnlineConfig(transport="simulated"),
+                                 10.0, 200)[7]
+    assert ts.shed_bytes == 0.0
+    assert ts.quality_min == 1.0
+    assert ts.latency_s.mean() == pytest.approx(base.latency_s.mean())
+
+
+def test_rate_control_sheds_under_congestion(scene, fullframe):
+    link = LinkConfig(congestion=default_congestion_trace(20.0))
+    plain = OnlineConfig(transport="simulated", net=NetConfig(link=link))
+    shed = OnlineConfig(transport="simulated", net=NetConfig(
+        link=link, rate_control=RateControlConfig(enabled=True,
+                                                  static_fraction=0.4)))
+    ts0 = online_system_metrics(scene.cameras, fullframe, plain,
+                                10.0, 200)[7]
+    ts1 = online_system_metrics(scene.cameras, fullframe, shed,
+                                10.0, 200)[7]
+    assert ts1.shed_bytes > 0
+    assert ts1.quality_min < 1.0
+    assert ts1.bytes_total < ts0.bytes_total
+    assert ts1.p50_s < ts0.p50_s        # shedding drains the backlog
+
+
+# ---------------------------------------------------------------------------
+# deadline batching + stragglers
+# ---------------------------------------------------------------------------
+
+def test_deadline_counts_stragglers(scene, fullframe):
+    link = LinkConfig(jitter_std=0.4, seed=3,
+                      congestion=default_congestion_trace(20.0))
+    loose = OnlineConfig(transport="simulated",
+                         net=NetConfig(link=link))
+    tight = OnlineConfig(transport="simulated",
+                         net=NetConfig(link=link, deadline_s=0.8))
+    ts_loose = online_system_metrics(scene.cameras, fullframe, loose,
+                                     10.0, 200)[7]
+    ts_tight = online_system_metrics(scene.cameras, fullframe, tight,
+                                     10.0, 200)[7]
+    assert ts_loose.straggler_frames == 0 and ts_loose.deadline_hits == 0
+    assert ts_tight.deadline_hits > 0
+    assert ts_tight.straggler_frames > 0
+    assert 0.0 < ts_tight.straggler_frac < 1.0
+    # every frame is still served exactly once
+    assert ts_tight.latency_s.size == ts_loose.latency_s.size
+
+
+def test_deadline_group_former_single_launch_per_release():
+    det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    t = det.cfg.tile
+    grids = [rng.random((3, 4)) < 0.5 for _ in range(3)]
+    for g in grids:
+        g[1, 1] = True
+    frames = [jnp.asarray(rng.normal(size=(3 * t, 4 * t, 3)), jnp.float32)
+              for _ in range(3)]
+    former = DeadlineGroupFormer(det, expected_cams=[0, 1, 2],
+                                 deadline_s=0.5)
+    n_layers = det.num_conv_layers
+    with ops.count_kernels() as c:
+        assert former.offer(0.00, 0, frames[0], grids[0]) is None
+        assert former.offer(0.10, 1, frames[1], grids[1]) is None
+        rel = former.poll(0.60)          # deadline fires without camera 2
+    assert rel is not None and rel.deadline_hit
+    assert rel.cams == [0, 1] and rel.straggler_cams == []
+    assert c["roi_conv_fleet"] == 1
+    assert c["roi_conv_packed"] == n_layers - 1
+    assert c["sbnet_scatter_fleet"] == 1
+    with ops.count_kernels() as c2:
+        rel2 = former.offer(0.70, 2, frames[2], grids[2])
+        assert rel2 is None              # group incomplete, deadline fresh
+        rel2 = former.poll(1.30)
+    assert rel2 is not None
+    assert rel2.cams == [2] and rel2.straggler_cams == [2]
+    assert former.straggler_count == 1
+    assert c2["roi_conv_fleet"] == 1     # stragglers still one launch chain
+    # a straggler catch-up launch must NOT mark the punctual cameras
+    # late: the next complete cycle reports zero stragglers
+    for cam in (0, 1, 2):
+        rel3 = former.offer(1.5 + 0.01 * cam, cam, frames[cam], grids[cam])
+    assert rel3 is not None and rel3.cams == [0, 1, 2]
+    assert rel3.straggler_cams == []
+    assert former.straggler_count == 1   # unchanged
+    # per-camera outputs match the per-camera forward exactly
+    np.testing.assert_allclose(
+        np.asarray(rel.outputs[0]),
+        np.asarray(det.roi_forward(frames[0], grids[0])), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# header accounting fix (empty-mask cameras ship nothing)
+# ---------------------------------------------------------------------------
+
+def test_empty_mask_camera_ships_nothing(scene):
+    cams = scene.cameras
+    codec = CodecModel.calibrated(cams, 10.0)
+    full = {c.cam_id: [TileGroup(0, 0, c.tiles_y, c.tiles_x)]
+            for c in cams}
+    bytes_all, sent_all = segment_network_bytes(cams, full, codec, None,
+                                                10, 10)
+    empty0 = dict(full)
+    empty0[cams[0].cam_id] = []
+    bytes_e, sent_e = segment_network_bytes(cams, empty0, codec, None,
+                                            10, 10)
+    # no body, no halo, no container headers, and NO phantom frames
+    bytes_rest, sent_rest = segment_network_bytes(
+        cams[1:], {c.cam_id: full[c.cam_id] for c in cams[1:]}, codec,
+        None, 10, 10)
+    assert bytes_e == pytest.approx(bytes_rest, rel=1e-12)
+    assert sent_e[0] == 0
+    np.testing.assert_array_equal(sent_e[1:], sent_rest)
+    assert bytes_e < bytes_all
+    # zero-area groups behave exactly like no groups
+    zero0 = dict(full)
+    zero0[cams[0].cam_id] = [TileGroup(0, 0, 0, 0)]
+    bytes_z, sent_z = segment_network_bytes(cams, zero0, codec, None,
+                                            10, 10)
+    assert bytes_z == pytest.approx(bytes_e, rel=1e-12)
+    assert sent_z[0] == 0
+
+
+def test_simulated_transport_with_empty_mask_and_keep(scene):
+    """Worst-case plumbing: an empty-mask camera + Reducto keep masks +
+    rate control + deadline all at once stays finite, ships zero frames
+    for the empty camera, and excludes it from the batcher."""
+    off = run_offline(scene, OfflineConfig(profile_frames=150,
+                                           solver="greedy"))
+    off.cam_groups[0] = []
+    off.cam_grids[0][:] = False
+    net = NetConfig(
+        link=LinkConfig(congestion=default_congestion_trace(15.0)),
+        rate_control=RateControlConfig(enabled=True, static_fraction=0.3),
+        deadline_s=1.0)
+    keep = {c.cam_id: (np.arange(150) % 2 == 0) for c in scene.cameras}
+    ts = online_system_metrics(
+        scene.cameras, off, OnlineConfig(transport="simulated", net=net),
+        10.0, 150, keep)[7]
+    assert np.isfinite(ts.latency_s).all()
+    assert ts.frames_sent[0] == 0
+    assert not (ts.frame_cam == 0).any()
+    assert ts.latency_s.size == ts.frames_sent.sum()
+
+
+def test_deadline_group_former_never_drops_superseded_frames():
+    """A camera offering its next segment while the batch is pending
+    forces the batch out (superseded release) instead of silently
+    dropping the older frame."""
+    det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(2))
+    rng = np.random.default_rng(11)
+    t = det.cfg.tile
+    grid = np.zeros((2, 2), bool)
+    grid[0, 0] = True
+    mk = lambda: jnp.asarray(rng.normal(size=(2 * t, 2 * t, 3)),
+                             jnp.float32)
+    former = DeadlineGroupFormer(det, expected_cams=[0, 1],
+                                 deadline_s=10.0)
+    f0a, f0b = mk(), mk()
+    assert former.offer(0.0, 0, f0a, grid) is None
+    rel = former.offer(0.2, 0, f0b, grid)      # same camera, next segment
+    assert rel is not None and rel.superseded
+    assert rel.cams == [0]
+    np.testing.assert_allclose(np.asarray(rel.outputs[0]),
+                               np.asarray(det.roi_forward(f0a, grid)),
+                               atol=1e-5)      # the OLDER frame was served
+    rel2 = former.offer(0.3, 1, mk(), grid)    # group completes normally
+    assert rel2 is not None and not rel2.superseded
+    assert rel2.cams == [0, 1]

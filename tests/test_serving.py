@@ -184,3 +184,69 @@ def test_decode_continues_prefill(engine):
     out2, _ = engine.decode_tokens(caches2, jnp.argmax(logits2[:, -1], -1),
                                    S, 3)
     np.testing.assert_array_equal(out1, out2)
+
+
+def test_serve_deadline_matches_serve_outputs(engine):
+    """The deadline former changes WHEN batches launch, never what they
+    decode: every request's tokens equal the plain serve() output, and
+    the accounting sees completes, deadline releases, and stragglers."""
+    rng = np.random.default_rng(7)
+    reqs = []
+    for i in range(6):
+        toks = rng.integers(0, engine.cfg.vocab_size, 48).astype(np.int32)
+        reqs.append(Request(rid=i, tokens=toks, max_new_tokens=4,
+                            group=i % 2, arrival_s=0.3 * i))
+    base = engine.serve([Request(r.rid, r.tokens, max_new_tokens=4)
+                         for r in reqs], greedy_steps=4)
+    res, rep = engine.serve_deadline(reqs, group_sizes={0: 3, 1: 3},
+                                     deadline_s=0.5, greedy_steps=4)
+    assert sorted(res) == sorted(base)
+    for rid in res:
+        np.testing.assert_array_equal(res[rid], base[rid])
+    # arrivals at 0.3s spacing with a 0.5s deadline: every flush is cut
+    # by the deadline and later group members are stragglers
+    assert rep.deadline_flushes > 0
+    assert rep.straggler_requests > 0
+    assert rep.complete_flushes + rep.deadline_flushes >= 2
+    for r in reqs:
+        assert rep.release_s[r.rid] >= r.arrival_s
+        assert rep.wait_s(r) <= 0.5 + 1e-9
+
+
+def test_serve_deadline_complete_groups_release_immediately(engine):
+    """Groups that fill before the deadline release at the completing
+    arrival (zero added wait for the last member)."""
+    rng = np.random.default_rng(8)
+    reqs = []
+    for i in range(4):
+        toks = rng.integers(0, engine.cfg.vocab_size, 32).astype(np.int32)
+        reqs.append(Request(rid=i, tokens=toks, max_new_tokens=2,
+                            group=0, arrival_s=0.01 * i))
+    res, rep = engine.serve_deadline(reqs, group_sizes={0: 4},
+                                     deadline_s=5.0, greedy_steps=2)
+    assert rep.complete_flushes == 1
+    assert rep.deadline_flushes == 0
+    assert rep.straggler_requests == 0
+    assert rep.wait_s(reqs[-1]) == 0.0
+    assert len(res) == 4
+
+
+def test_serve_deadline_straggler_quota(engine):
+    """Stragglers are bounded by the seats a deadline flush left empty:
+    members of the NEXT cycle are not counted late."""
+    rng = np.random.default_rng(9)
+    mk = lambda i, t: Request(
+        rid=i, tokens=rng.integers(0, engine.cfg.vocab_size,
+                                   32).astype(np.int32),
+        max_new_tokens=2, group=0, arrival_s=t)
+    # A alone misses the 1.0s deadline; B is its cycle's straggler; B+C
+    # then form a fresh complete batch, and D drains at end of stream.
+    reqs = [mk(0, 0.0), mk(1, 1.5), mk(2, 1.6), mk(3, 1.7)]
+    res, rep = engine.serve_deadline(reqs, group_sizes={0: 2},
+                                     deadline_s=1.0, greedy_steps=2)
+    assert len(res) == 4
+    assert rep.deadline_flushes == 2           # A alone + end-of-stream D
+    assert rep.complete_flushes == 1           # the B+C cycle completes
+    assert rep.straggler_requests == 1         # B only, never C or D
+    assert rep.release_s[0] == pytest.approx(1.0)
+    assert rep.release_s[1] == rep.release_s[2] == pytest.approx(1.6)

@@ -17,7 +17,7 @@ import os
 import time
 
 BENCHES = ["reid", "compression", "ablations", "sensitivity", "reducto",
-           "kernels", "fleet", "net", "roofline"]
+           "kernels", "fleet", "net", "stack", "roofline"]
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -37,16 +37,22 @@ def quick():
     counts = payload["kernel_dispatches"]
     # amortization check derived from the OBSERVED dispatch structure: a
     # regression to per-layer scatter/gather shows up as extra round-trips
-    round_trips = (counts.get("roi_conv", 0) + counts.get("sbnet_gather", 0)
+    round_trips = (counts.get("roi_conv", 0)
+                   + counts.get("roi_conv_entry", 0)
+                   + counts.get("sbnet_gather", 0)
                    + counts.get("sbnet_scatter", 0)) / 2
     observed = payload["io_round_trip_overhead"] * round_trips / n_layers
     assert observed <= 0.30 / n_layers + 1e-9, \
         f"gather/scatter tax must amortize to <= 0.30/N per layer " \
         f"(observed {round_trips} round-trips over {n_layers} layers)"
-    assert counts.get("roi_conv", 0) == 1, counts
+    # one-launch backbone: entry + layer-stack megakernel + scatter,
+    # ≤3 dispatches regardless of layer count
+    assert counts.get("roi_conv_entry", 0) == 1, counts
+    assert counts.get("roi_conv_stack", 0) == 1, counts
     assert counts.get("sbnet_scatter", 0) == 1, counts
     assert counts.get("sbnet_gather", 0) == 0, counts
-    assert counts.get("roi_conv_packed", 0) == n_layers - 1, counts
+    assert counts.get("roi_conv_packed", 0) == 0, counts
+    assert sum(counts.values()) <= 3, counts
     assert payload["roi_conv_interior_err"] <= 1e-4, payload
     assert payload["attn_skip_err"] == 0.0, \
         "block-skip attention must be bitwise-equal on real rows"
@@ -90,11 +96,11 @@ def fleet_quick():
     payload = bench_fleet.run(verbose=True, quick=True)
 
     assert payload["cross_group_leakage"] == 0
-    launches = payload["launches_per_group_step"]
-    n_layers = payload["num_conv_layers"]
-    assert launches.get("roi_conv_fleet", 0) == 1, launches
+    launches = payload["launches_per_step"]
+    assert launches.get("roi_conv_entry", 0) == 1, launches
+    assert launches.get("roi_conv_stack", 0) == 1, launches
     assert launches.get("sbnet_scatter_fleet", 0) == 1, launches
-    assert launches.get("roi_conv_packed", 0) == n_layers - 1, launches
+    assert sum(launches.values()) <= 3, launches
     for acc, base in zip(payload["per_group_accuracy"],
                          payload["per_group_baseline_accuracy"]):
         assert acc >= base, "fleet runtime must not lose accuracy"
@@ -140,6 +146,48 @@ def net_quick():
     print(f"\nnet smoke OK in {time.time() - t0:.1f}s -> {out}")
 
 
+def stack_quick():
+    """CI smoke for the one-launch fleet backbone: ≤3 dispatches per
+    fleet step regardless of group/layer count, megakernel bit-identical
+    to (and no slower than) the per-layer chain it replaces, coalesced
+    rim-halo structure (4 contiguous loads vs 8 strip DMAs), and the
+    straggler fold reclaiming launch chains — merges a "stack" panel
+    into BENCH_kernels.json."""
+    from benchmarks import bench_stack
+    t0 = time.time()
+    payload = bench_stack.run(verbose=True, quick=True)
+
+    assert payload["superlaunch_dispatches"] <= 3, payload["launch_counts"]
+    launches = payload["launch_counts"]
+    assert launches.get("roi_conv_entry", 0) == 1, launches
+    assert launches.get("roi_conv_stack", 0) == 1, launches
+    assert launches.get("sbnet_scatter_fleet", 0) == 1, launches
+    assert payload["chain_dispatches"] > payload["superlaunch_dispatches"]
+    assert payload["fused_vs_chain_max_abs_diff"] == 0.0, \
+        "super-launch must be bit-identical to the per-group chain"
+    # interleaved min-over-reps timings on a large tile set (fused margin
+    # ~20%); 15% slack absorbs scheduler noise on shared CI runners
+    # without hiding a real regression
+    assert payload["stack_kernel_wall_s"] <= \
+        1.15 * payload["chain_kernel_wall_s"], \
+        f"fused megakernel must not be slower than the per-layer chain " \
+        f"({payload['stack_kernel_wall_s']:.3f}s vs " \
+        f"{payload['chain_kernel_wall_s']:.3f}s)"
+    # fetch structure counted from the kernel sources (bench_stack): a
+    # regression of the coalesced-halo scheme changes these counts
+    assert payload["rim_halo_loads_per_tile"] == 4
+    assert payload["chain_halo_loads_per_tile"] == 8
+    assert payload["halo_dmas_fused"] < payload["halo_dmas_chain"]
+    assert payload["fold_reclaimed_launches"] >= 1
+    assert payload["fold_folded_frames"] >= 1
+
+    out = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+    merged = _merge_bench_json(out, {"stack": payload})
+    with open(out, "w") as f:
+        json.dump(merged, f, indent=1, default=float)
+    print(f"\nstack smoke OK in {time.time() - t0:.1f}s -> {out}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -155,6 +203,12 @@ def main():
                          "(equivalence, congestion p50 reduction, "
                          "tile_delta exactness) merged into "
                          "BENCH_kernels.json")
+    ap.add_argument("--stack", action="store_true",
+                    help="CI smoke: one-launch backbone invariants "
+                         "(≤3 dispatches per fleet step, megakernel "
+                         "bit-exact + wall-clock vs per-layer chain, "
+                         "rim-DMA structure, straggler fold) merged "
+                         "into BENCH_kernels.json")
     args = ap.parse_args()
     if args.quick:
         quick()
@@ -162,7 +216,9 @@ def main():
         fleet_quick()
     if args.net:
         net_quick()
-    if args.quick or args.fleet or args.net:
+    if args.stack:
+        stack_quick()
+    if args.quick or args.fleet or args.net or args.stack:
         return
     selected = args.only.split(",") if args.only else BENCHES
 

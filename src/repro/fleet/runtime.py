@@ -20,11 +20,15 @@ Three jobs:
   per camera; ``cfg.transport="simulated"`` prices every group through
   the ``repro.net`` streaming runtime and merges the per-frame latency
   distributions fleet-wide.
-* ``fleet_inference_step`` — the kernel-level hot path: per group, all
-  cameras' active RoI tiles run as ONE fused gather+conv, ONE
-  ``roi_conv_packed`` per remaining layer (cross-camera neighbor table
-  with per-camera slot offsets — halos cannot leak between cameras), and
-  ONE scatter.  The dispatch structure is asserted per group via
+* ``fleet_inference_step`` — the kernel-level hot path: EVERY camera of
+  EVERY group runs in ONE cross-group super-launch over the fleet-flat
+  (flat_cam, ty, tx) index space (built per call, digest-cached, by
+  ``RoIDetector._fleet_tables``; ``ops.superlaunch_tables`` is the
+  standalone builder of the same tables): one fused gather+conv entry
+  kernel, one layer-stack megakernel covering all remaining conv
+  layers, one scatter — ≤3 Pallas dispatches per fleet step,
+  independent of the group count K and layer count N (the old chain
+  paid K×(N+1)).  The dispatch ceiling is asserted via
   ``ops.count_kernels`` on every step.
 """
 from __future__ import annotations
@@ -245,25 +249,27 @@ def run_fleet_online(fleet: FleetScene,
 
 def fleet_inference_step(det, frames: Dict[int, List],
                          grids: Dict[int, List[np.ndarray]]):
-    """Run one fleet step: every group's cameras as ONE packed launch chain.
+    """Run one fleet step: ALL groups' cameras as ONE super-launch chain.
 
     frames[gid] / grids[gid]: per-camera frame arrays and RoI tile grids of
-    group ``gid``.  Returns ({gid: per-camera head maps}, total dispatch
-    Counter).  Asserts — per group, every step — the packed structure the
-    fleet batcher guarantees: one fused gather+conv, one packed conv per
-    remaining layer (not per camera), one scatter."""
-    outs = {}
-    total: collections.Counter = collections.Counter()
-    expected = {"roi_conv_fleet": 1,
-                "roi_conv_packed": det.num_conv_layers - 1,
-                "sbnet_scatter_fleet": 1}
-    for gid in frames:
-        with kops.count_kernels() as c:
-            outs[gid] = det.fleet_forward(frames[gid], grids[gid])
-        # compare via Counter lookups: a zero expectation (1-layer stack
-        # has no packed layers) must match an absent key
-        observed = {k: c[k] for k in expected}
-        assert observed == expected and not set(c) - set(expected), \
-            f"group {gid}: packed dispatch structure broken: {dict(c)}"
-        total.update(c)
+    group ``gid``.  Returns ({gid: per-camera head maps}, dispatch
+    Counter).  Asserts — every step — the constant-dispatch structure the
+    super-launch guarantees: one fused gather+conv entry, one layer-stack
+    megakernel (absent for a 1-layer net), one scatter — ≤3 dispatches
+    for the WHOLE FLEET, regardless of group count and layer count.  An
+    all-empty fleet (no active tile anywhere) launches nothing."""
+    with kops.count_kernels() as c:
+        outs = det.superlaunch_forward(frames, grids)
+    total: collections.Counter = collections.Counter(c)
+    n_tiles = sum(int(np.count_nonzero(np.asarray(g, bool)))
+                  for gs in grids.values() for g in gs)
+    expected = {} if n_tiles == 0 else {
+        "roi_conv_entry": 1,
+        "roi_conv_stack": 1 if det.num_conv_layers > 1 else 0,
+        "sbnet_scatter_fleet": 1}
+    observed = {k: total[k] for k in expected}
+    assert observed == expected and not set(total) - set(expected), \
+        f"super-launch dispatch structure broken: {dict(total)}"
+    assert sum(total.values()) <= 3, \
+        f"fleet step must stay within 3 dispatches: {dict(total)}"
     return outs, total

@@ -25,12 +25,15 @@ from repro.kernels import ref
 from repro.kernels.roi_attention import (PAD_POS, block_min_positions,
                                          roi_attention as _roi_attn)
 from repro.kernels.roi_conv import (NEIGHBOR_OFFSETS, roi_conv as _roi_conv,
+                                    roi_conv_entry as _roi_conv_entry,
                                     roi_conv_fleet as _roi_conv_fleet,
-                                    roi_conv_packed as _roi_conv_packed)
+                                    roi_conv_packed as _roi_conv_packed,
+                                    roi_conv_stack as _roi_conv_stack)
 from repro.kernels.sbnet import sbnet_gather as _gather, \
     sbnet_scatter as _scatter, sbnet_scatter_fleet as _scatter_fleet
 from repro.kernels.tile_delta import (COEF_BITS, RUN_BITS, STATS_WIDTH,
-                                      tile_delta as _tile_delta)
+                                      tile_delta as _tile_delta,
+                                      tile_delta_halo as _tile_delta_halo)
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
@@ -134,6 +137,25 @@ def fleet_neighbor_table(grids) -> np.ndarray:
     return np.concatenate(tables, axis=0).astype(np.int32)
 
 
+def superlaunch_tables(grids_per_group):
+    """Fleet-flat index space over ALL groups' cameras — the super-launch.
+
+    grids_per_group: sequence of per-group camera-grid lists.  Flattens
+    every camera of every group into ONE (flat_cam, ty, tx) index space:
+    returns (idx (n, 3) int32, nbr (n, 8) int32, tile_offsets (F+1,),
+    cam_starts (K+1,)) where F is the flat camera count and group g's
+    cameras are flat cams [cam_starts[g], cam_starts[g+1]).  Slot offsets
+    are per flat camera (``fleet_neighbor_table``), so halos are leak-free
+    across cameras AND across groups by construction — group boundaries
+    are just camera boundaries in the flat space."""
+    flat = [g for gs in grids_per_group for g in gs]
+    idx, tile_offsets = fleet_indices(flat)
+    nbr = fleet_neighbor_table(flat)
+    cam_starts = np.cumsum([0] + [len(gs) for gs in grids_per_group]) \
+        .astype(np.int64)
+    return idx, nbr, tile_offsets, cam_starts
+
+
 # ---------------------------------------------------------------------------
 # jit'd kernel entry points (private) + counting public wrappers
 # ---------------------------------------------------------------------------
@@ -202,6 +224,39 @@ def roi_conv_fleet(x: jax.Array, w: jax.Array, idx: jax.Array, th: int,
     return _roi_conv_fleet_jit(x, w, idx, th, tw, interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("th", "tw", "interpret"))
+def _roi_conv_entry_jit(x, w, idx, th, tw, interpret=INTERPRET):
+    return _roi_conv_entry(x, w, idx, th, tw, interpret=interpret)
+
+
+def roi_conv_entry(x: jax.Array, w: jax.Array, idx: jax.Array, th: int,
+                   tw: int, interpret: bool = INTERPRET) -> jax.Array:
+    """Fleet-flat fused gather+conv+relu over any number of cameras (and
+    groups): (C, H, W, Cin) stacked frames + (n, 3) (flat_cam, ty, tx)
+    coords -> relu'd packed (n, th, tw, Cout) — the fused backbone's
+    entry layer, feeding ``roi_conv_stack``."""
+    KERNEL_COUNTS["roi_conv_entry"] += 1
+    return _roi_conv_entry_jit(x, w, idx, th, tw, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _roi_conv_stack_jit(packed, ws, nbr, block, interpret=INTERPRET):
+    return _roi_conv_stack(packed, ws, nbr, block=block,
+                           interpret=interpret)
+
+
+def roi_conv_stack(packed: jax.Array, ws, nbr: jax.Array,
+                   block: int = 128,
+                   interpret: bool = INTERPRET) -> jax.Array:
+    """The fused layer-stack megakernel: the whole packed conv chain
+    (conv + relu per layer, double-buffered activations + coalesced rim
+    halos, weight prefetch for layer l+1 during layer l) in ONE dispatch
+    — bit-identical to N-1 ``roi_conv_packed`` + relu rounds."""
+    KERNEL_COUNTS["roi_conv_stack"] += 1
+    return _roi_conv_stack_jit(packed, tuple(ws), nbr, int(block),
+                               interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def _sbnet_scatter_fleet_jit(packed, idx, base, interpret=INTERPRET):
     return _scatter_fleet(packed, idx, base, interpret=interpret)
@@ -235,6 +290,29 @@ def tile_delta(cur: jax.Array, prev: jax.Array, idx: jax.Array, th: int,
     KERNEL_COUNTS["tile_delta"] += 1
     return _tile_delta_jit(cur, prev, idx, th, tw, float(qstep),
                            int(coef_bits), int(run_bits), interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("th", "tw", "qstep",
+                                             "coef_bits", "run_bits",
+                                             "interpret"))
+def _tile_delta_halo_jit(cur, prev, idx, th, tw, qstep, coef_bits,
+                         run_bits, interpret=INTERPRET):
+    return _tile_delta_halo(cur, prev, idx, th, tw, qstep, coef_bits,
+                            run_bits, interpret=interpret)
+
+
+def tile_delta_halo(cur: jax.Array, prev: jax.Array, idx: jax.Array,
+                    th: int, tw: int, qstep: float = 8.0,
+                    coef_bits: int = COEF_BITS, run_bits: int = RUN_BITS,
+                    interpret: bool = INTERPRET) -> jax.Array:
+    """Per-tile temporal delta stats of the HALO STRIPS (the tile's edge
+    ring — the pixels duplicated into neighbors when rectangles encode
+    independently): (n, STATS_WIDTH) int32 rows, bit-exact vs
+    ``ref.tile_delta_halo``.  Feeds halo-first shedding in the edge rate
+    controller."""
+    KERNEL_COUNTS["tile_delta_halo"] += 1
+    return _tile_delta_halo_jit(cur, prev, idx, th, tw, float(qstep),
+                                int(coef_bits), int(run_bits), interpret)
 
 
 def roi_conv_batched(x: jax.Array, w: jax.Array, idx: jax.Array,
@@ -321,10 +399,11 @@ def attention_visit_bound(positions: np.ndarray, block_q: int = 128,
 
 
 __all__ = ["mask_to_indices", "neighbor_table", "fleet_indices",
-           "fleet_neighbor_table", "sbnet_gather", "sbnet_scatter",
-           "sbnet_scatter_fleet", "roi_conv", "roi_conv_fleet",
-           "roi_conv_packed", "roi_conv_batched", "tile_delta",
-           "STATS_WIDTH", "pack_tokens",
+           "fleet_neighbor_table", "superlaunch_tables", "sbnet_gather",
+           "sbnet_scatter", "sbnet_scatter_fleet", "roi_conv",
+           "roi_conv_entry", "roi_conv_fleet", "roi_conv_packed",
+           "roi_conv_stack", "roi_conv_batched", "tile_delta",
+           "tile_delta_halo", "STATS_WIDTH", "pack_tokens",
            "unpack_tokens", "roi_attention", "attention_visit_bound",
            "block_min_positions", "KERNEL_COUNTS", "count_kernels",
            "PAD_POS", "ref"]

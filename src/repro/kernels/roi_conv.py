@@ -138,7 +138,7 @@ def _roi_conv_packed_kernel(nbr_ref, p_ref, w_ref, o_ref, *,
 
 
 def _roi_conv_fleet_kernel(idx_ref, x_ref, w_ref, o_ref, *, th: int,
-                           tw: int):
+                           tw: int, fuse_relu: bool = False):
     i = pl.program_id(0)
     cam = idx_ref[i, 0]
     ty = idx_ref[i, 1]
@@ -149,7 +149,10 @@ def _roi_conv_fleet_kernel(idx_ref, x_ref, w_ref, o_ref, *, th: int,
     # so a window can never read another camera's pixels
     win = pl.load(x_ref, (pl.ds(cam, 1), pl.ds(ty * th, th + 2),
                           pl.ds(tx * tw, tw + 2), slice(None)))[0]
-    o_ref[0] = _conv3x3_tile(win, w_ref, th, tw, cout).astype(o_ref.dtype)
+    o = _conv3x3_tile(win, w_ref, th, tw, cout)
+    if fuse_relu:
+        o = jnp.maximum(o, 0.0)
+    o_ref[0] = o.astype(o_ref.dtype)
 
 
 def roi_conv_fleet(x: jax.Array, w: jax.Array, idx: jax.Array, th: int,
@@ -162,11 +165,20 @@ def roi_conv_fleet(x: jax.Array, w: jax.Array, idx: jax.Array, th: int,
     same packed tensor ``roi_conv`` would produce per camera, concatenated.
     Per-camera zero padding reproduces each camera's own SAME-conv frame
     boundary, so the output is bit-compatible with per-camera launches."""
+    return _fleet_conv_call(x, w, idx, th, tw, fuse_relu=False,
+                            interpret=interpret)
+
+
+def _fleet_conv_call(x, w, idx, th, tw, *, fuse_relu, interpret):
+    """Shared launch for the fleet gather+conv (``roi_conv_fleet``) and
+    the fused backbone's entry layer (``roi_conv_entry`` = same kernel
+    with the ReLU fused in)."""
     C, H, W, Cin = x.shape
     Cout = w.shape[-1]
     n = idx.shape[0]
     xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
-    kernel = functools.partial(_roi_conv_fleet_kernel, th=th, tw=tw)
+    kernel = functools.partial(_roi_conv_fleet_kernel, th=th, tw=tw,
+                               fuse_relu=fuse_relu)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(n,),
@@ -184,6 +196,250 @@ def roi_conv_fleet(x: jax.Array, w: jax.Array, idx: jax.Array, th: int,
         out_shape=jax.ShapeDtypeStruct((n, th, tw, Cout), x.dtype),
         interpret=interpret,
     )(idx, xp, w)
+
+
+# ---------------------------------------------------------------------------
+# coalesced rim halos + the fused layer-stack megakernel
+# ---------------------------------------------------------------------------
+#
+# ``roi_conv_packed`` fetches its halo as 8 masked strip/corner DMAs per
+# tile per layer.  The fused path coalesces them: every layer *emits* the
+# assembled halo strips — "rims" — its successor will read, so the next
+# layer fetches the whole halo of a tile block in 4 contiguous loads:
+#
+#   rim_top[j]  (tw+2, C): the row above tile j  = [NW.br | N.bottom | NE.bl]
+#   rim_bot[j]  (tw+2, C): the row below tile j  = [SW.tr | S.top    | SE.tl]
+#   rim_left[j] (th,   C): the column left of j  =  W.rightmost column
+#   rim_right[j](th,   C): the column right of j =  E.leftmost  column
+#
+# Emission is two-step so every store stays contiguous: a conv phase
+# writes its block's own edge strips (top/bottom rows, left/right
+# columns, producer-indexed), and an interleaved assembly phase gathers
+# those edges donor-by-donor into the consumer-indexed rims above,
+# zero-masking positions whose donor is inactive/off-frame (-1 in the
+# neighbor table) — the same zero-halo contract as ``roi_conv_packed``.
+
+
+def assemble_rims(packed: jax.Array, nbr: jax.Array):
+    """Vectorized rim assembly (pure jnp — runs inside the stack launch,
+    before the megakernel, to seed layer 0's rims from the entry layer's
+    packed output).  Gathers each tile's halo strips from its donors'
+    edges: returns (rim_top (n, tw+2, C), rim_bot (n, tw+2, C), rim_left
+    (n, th, C), rim_right (n, th, C)); positions with no active donor are
+    zero.  Row-for-row equal to ``ref.rims_of_packed``'s first n rows."""
+    n, th, tw, c = packed.shape
+    valid = nbr >= 0
+    safe = jnp.clip(nbr, 0, max(n - 1, 0))
+
+    def gat(edge, j):
+        v = jnp.take(edge, safe[:, j], axis=0)
+        return jnp.where(valid[:, j, None, None], v, jnp.zeros_like(v))
+
+    be, te = packed[:, th - 1], packed[:, 0]              # (n, tw, C)
+    le, re = packed[:, :, 0], packed[:, :, tw - 1]        # (n, th, C)
+    # the row above tile j: [NW.bottom-right | N.bottom row | NE.bottom-left]
+    rt = jnp.concatenate([gat(be, 0)[:, tw - 1:tw], gat(be, 1),
+                          gat(be, 2)[:, 0:1]], axis=1)
+    # the row below: [SW.top-right | S.top row | SE.top-left]
+    rb = jnp.concatenate([gat(te, 5)[:, tw - 1:tw], gat(te, 6),
+                          gat(te, 7)[:, 0:1]], axis=1)
+    rl = gat(re, 3)                                       # W.rightmost col
+    rr = gat(le, 4)                                       # E.leftmost col
+    return rt, rb, rl, rr
+
+
+def roi_conv_entry(x: jax.Array, w: jax.Array, idx: jax.Array, th: int,
+                   tw: int, *, interpret: bool = True) -> jax.Array:
+    """The fused backbone's entry layer: gather + 3x3 conv + ReLU in ONE
+    launch for any number of cameras (and camera groups — the (n, 3)
+    (flat_cam, ty, tx) index space is oblivious to how cameras are
+    grouped).  x: (C, H, W, Cin) stacked frames; w: (3, 3, Cin, Cout);
+    idx: (n, 3).  Returns relu'd packed (n, th, tw, Cout) — relu is
+    idempotent, so callers may re-apply it bit-identically.  The packed
+    output feeds ``roi_conv_stack`` for every remaining layer."""
+    return _fleet_conv_call(x, w, idx, th, tw, fuse_relu=True,
+                            interpret=interpret)
+
+
+def _roi_conv_stack_kernel(nbr_ref, p0_ref, rt0, rb0, rl0, rr0, w_ref,
+                           o_ref, act_ref, te_ref, be_ref, le_ref, re_ref,
+                           rt_ref, rb_ref, rl_ref, rr_ref, *, th: int,
+                           tw: int, chans, tb: int, n_pad: int):
+    p = pl.program_id(0)
+    b = pl.program_id(1)
+    L = len(chans) - 1
+    sel = (pl.ds(b * tb, tb),)
+    nbrs = pl.load(nbr_ref, sel + (slice(None),))          # (tb, 8)
+    valid = nbrs >= 0
+    safe = jnp.clip(nbrs, 0, n_pad - 1)
+
+    def conv_phase(lc: int):
+        cin, cout = chans[lc], chans[lc + 1]
+        cs = slice(0, cin)
+        if lc == 0:
+            center = p0_ref[...]               # (tb, th, tw, c0) block
+            srcs = (rt0, rb0, rl0, rr0)
+        else:
+            center = pl.load(act_ref, sel + (slice(None), slice(None),
+                                             cs))
+            srcs = (rt_ref, rb_ref, rl_ref, rr_ref)
+        # the whole block halo in 4 contiguous loads — the rims were
+        # assembled (donor-gathered, zero-masked) by the previous phase,
+        # vs 8 masked strip/corner DMAs per tile in roi_conv_packed
+        top = pl.load(srcs[0], sel + (slice(None), cs))    # (tb, tw+2, ·)
+        bot = pl.load(srcs[1], sel + (slice(None), cs))
+        left = pl.load(srcs[2], sel + (slice(None), cs))   # (tb, th, ·)
+        right = pl.load(srcs[3], sel + (slice(None), cs))
+        mid = jnp.concatenate([left[:, :, None], center,
+                               right[:, :, None]], axis=2)
+        win = jnp.concatenate([top[:, None], mid, bot[:, None]],
+                              axis=1)          # (tb, th+2, tw+2, cin)
+        # w_ref's block is layer lc's (prefetched) weight plane; the
+        # static slice recovers the layer's true channel widths.  The
+        # block flattens into the GEMM M dimension — one
+        # (tb*th*tw, cin) @ (cin, cout) per tap; output rows are
+        # independent dot products, so each tile's values are bitwise
+        # identical to ``roi_conv_packed``'s per-tile matmuls
+        w = w_ref[0][:, :, :cin, :cout]
+        acc = jnp.zeros((tb * th * tw, cout), jnp.float32)
+        for dy in range(3):
+            for dx in range(3):
+                patch = win[:, dy:dy + th, dx:dx + tw, :].reshape(
+                    tb * th * tw, cin)
+                acc += patch.astype(jnp.float32) @ w[dy, dx].astype(
+                    jnp.float32)
+        o = jnp.maximum(acc, 0.0).reshape(tb, th, tw, cout).astype(
+            p0_ref.dtype)
+        if lc == L - 1:
+            pl.store(o_ref, sel + (slice(None), slice(None),
+                                   slice(None)), o)
+        else:
+            co = slice(0, cout)
+            pl.store(act_ref, sel + (slice(None), slice(None), co), o)
+            # emit this block's edge strips (contiguous stores) for the
+            # interleaved rim-assembly phase
+            pl.store(te_ref, sel + (slice(None), co), o[:, 0])
+            pl.store(be_ref, sel + (slice(None), co), o[:, th - 1])
+            pl.store(le_ref, sel + (slice(None), co), o[:, :, 0])
+            pl.store(re_ref, sel + (slice(None), co), o[:, :, tw - 1])
+
+    def assemble_phase(lc: int):
+        # gather the block's rims for layer lc+1 from layer lc's edges
+        # (the write side of the coalesced-halo scheme: donor gather +
+        # zero masking happens ONCE here, so the conv phase reads clean
+        # assembled strips)
+        co = slice(0, chans[lc + 1])
+        te = pl.load(te_ref, (slice(None), slice(None), co))
+        be = pl.load(be_ref, (slice(None), slice(None), co))
+        le = pl.load(le_ref, (slice(None), slice(None), co))
+        re = pl.load(re_ref, (slice(None), slice(None), co))
+
+        def gat(edge, j):
+            v = jnp.take(edge, safe[:, j], axis=0)
+            return jnp.where(valid[:, j, None, None], v,
+                             jnp.zeros_like(v))
+
+        rt = jnp.concatenate([gat(be, 0)[:, tw - 1:tw], gat(be, 1),
+                              gat(be, 2)[:, 0:1]], axis=1)
+        rb = jnp.concatenate([gat(te, 5)[:, tw - 1:tw], gat(te, 6),
+                              gat(te, 7)[:, 0:1]], axis=1)
+        pl.store(rt_ref, sel + (slice(None), co), rt)
+        pl.store(rb_ref, sel + (slice(None), co), rb)
+        pl.store(rl_ref, sel + (slice(None), co), gat(re, 3))
+        pl.store(rr_ref, sel + (slice(None), co), gat(le, 4))
+
+    # phase sequence: conv 0, assemble 0, conv 1, assemble 1, ..., conv L-1
+    for pc in range(2 * L - 1):
+        @pl.when(p == pc)
+        def _(pc=pc):
+            if pc % 2 == 0:
+                conv_phase(pc // 2)
+            else:
+                assemble_phase(pc // 2)
+
+
+def roi_conv_stack(packed: jax.Array, ws, nbr: jax.Array, *,
+                   block: int = 128, interpret: bool = True) -> jax.Array:
+    """The fused layer-stack megakernel: the ENTIRE packed conv chain
+    (3x3 conv + ReLU per layer) in ONE ``pallas_call`` with grid =
+    (phase, tile_block), replacing N-1 ``roi_conv_packed`` dispatches.
+
+    packed: (n, th, tw, C0) the entry layer's (relu'd) packed output;
+    ws: list of (3, 3, C_l, C_{l+1}) weights; nbr: (n, 8) neighbor table
+    (``neighbor_table`` / ``fleet_neighbor_table``).  Returns the last
+    layer's packed (n, th, tw, C_last), bit-identical to the per-layer
+    ``relu(roi_conv_packed(...))`` chain:
+
+    * the phase axis is OUTER and alternates conv / rim-assembly, so
+      every tile of layer l (and its rim assembly) completes before
+      layer l+1 starts — activations, edge strips and assembled rims
+      persist across grid steps in ANY-space buffers;
+    * each conv layer emits its block's edge strips (top/bottom (n, tw, C)
+      rows, left/right (n, th, C) columns) with contiguous stores; the
+      interleaved assembly phase gathers them into per-tile halo rims
+      (top/bottom (n, tw+2, C), left/right (n, th, C), inactive donors
+      zero-masked), which the NEXT layer fetches in 4 contiguous loads
+      per tile block instead of 8 masked strip/corner DMAs per tile;
+    * weights are stacked (L, 3, 3, Cmax_in, Cmax_out) and block-indexed
+      by the phase's layer id, so Pallas's pipeline machinery prefetches
+      layer l+1's weights while layer l computes;
+    * ``block`` tiles are processed per grid step (padded up with inert
+      -1-neighbor tiles), so the matmuls are (block*th*tw, C) MXU shapes.
+    """
+    n, th, tw, c0 = packed.shape
+    chans = (c0,) + tuple(w.shape[-1] for w in ws)
+    L = len(ws)
+    if n == 0:
+        return jnp.zeros((0, th, tw, chans[-1]), packed.dtype)
+    tb = max(1, min(block, n))
+    n_pad = -(-n // tb) * tb
+    cmax_i = max(chans[:-1])
+    cmax_o = max(chans[1:])
+    wstack = jnp.stack([
+        jnp.pad(w, ((0, 0), (0, 0), (0, cmax_i - w.shape[2]),
+                    (0, cmax_o - w.shape[3]))) for w in ws])
+    packed_p = jnp.pad(packed, ((0, n_pad - n), (0, 0), (0, 0), (0, 0)))
+    nbr_p = jnp.pad(nbr, ((0, n_pad - n), (0, 0)), constant_values=-1)
+    rims0 = assemble_rims(packed_p, nbr_p)
+    # edge/rim/act buffers carry INTERMEDIATE layers only (the last
+    # layer's output goes straight to o_ref; its rims are never built)
+    c_mid = max(chans[1:-1]) if L > 1 else 1
+    np_mid = n_pad if L > 1 else 1
+    th_mid = th if L > 1 else 1
+    tw_mid = tw if L > 1 else 1
+    kernel = functools.partial(_roi_conv_stack_kernel, th=th, tw=tw,
+                               chans=chans, tb=tb, n_pad=n_pad)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(2 * L - 1, n_pad // tb),
+        in_specs=[
+            pl.BlockSpec((tb, th, tw, c0),
+                         lambda p, b, nbr_ref: (b, 0, 0, 0)),
+        ] + [pl.BlockSpec(memory_space=_MEMSPACE.ANY)] * 4 + [
+            pl.BlockSpec((1, 3, 3, cmax_i, cmax_o),
+                         lambda p, b, nbr_ref: (p // 2, 0, 0, 0, 0)),
+        ],
+        out_specs=[pl.BlockSpec(memory_space=_MEMSPACE.ANY)] * 10,
+    )
+    dt = packed.dtype
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, th, tw, chans[-1]), dt),
+            jax.ShapeDtypeStruct((np_mid, th_mid, tw_mid, c_mid), dt),
+            jax.ShapeDtypeStruct((np_mid, tw_mid, c_mid), dt),  # top edge
+            jax.ShapeDtypeStruct((np_mid, tw_mid, c_mid), dt),  # bottom
+            jax.ShapeDtypeStruct((np_mid, th_mid, c_mid), dt),  # left
+            jax.ShapeDtypeStruct((np_mid, th_mid, c_mid), dt),  # right
+            jax.ShapeDtypeStruct((np_mid, tw_mid + 2, c_mid), dt),
+            jax.ShapeDtypeStruct((np_mid, tw_mid + 2, c_mid), dt),
+            jax.ShapeDtypeStruct((np_mid, th_mid, c_mid), dt),
+            jax.ShapeDtypeStruct((np_mid, th_mid, c_mid), dt),
+        ],
+        interpret=interpret,
+    )(nbr_p, packed_p, *rims0, wstack)
+    return out[0][:n]
 
 
 def roi_conv_packed(packed: jax.Array, w: jax.Array, nbr: jax.Array,

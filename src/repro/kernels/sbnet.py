@@ -20,6 +20,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# pltpu.TPUMemorySpace was renamed MemorySpace across jax versions
+_MEMSPACE = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+
 
 def _gather_kernel(idx_ref, x_ref, o_ref):
     # x_ref block = the (th, tw, C) tile selected by idx_ref[i]; copy to
@@ -50,10 +53,6 @@ def sbnet_gather(x: jax.Array, idx: jax.Array, th: int, tw: int,
     )(idx, x)
 
 
-def _scatter_kernel(idx_ref, p_ref, o_ref):
-    o_ref[...] = p_ref[...]
-
-
 def sbnet_scatter(packed: jax.Array, idx: jax.Array, base: jax.Array,
                   *, interpret: bool = True) -> jax.Array:
     """packed: (n, th, tw, C) -> write tiles into ``base`` (H, W, C) at the
@@ -65,7 +64,9 @@ def sbnet_scatter(packed: jax.Array, idx: jax.Array, base: jax.Array,
         grid=(n,),
         in_specs=[
             pl.BlockSpec((1, th, tw, C), lambda i, idx_ref: (i, 0, 0, 0)),
-            pl.BlockSpec(base.shape, lambda i, idx_ref: (0, 0, 0)),  # unused
+            # the base is only here to seed the aliased output; ANY keeps
+            # the pipeline from DMAing the whole frame on every grid step
+            pl.BlockSpec(memory_space=_MEMSPACE.ANY),
         ],
         out_specs=pl.BlockSpec((th, tw, C),
                                lambda i, idx_ref: (idx_ref[i, 0],
@@ -97,8 +98,8 @@ def sbnet_scatter_fleet(packed: jax.Array, idx: jax.Array, base: jax.Array,
         grid=(n,),
         in_specs=[
             pl.BlockSpec((1, th, tw, C), lambda i, idx_ref: (i, 0, 0, 0)),
-            pl.BlockSpec(base.shape,
-                         lambda i, idx_ref: (0, 0, 0, 0)),  # unused
+            # aliased seed only — ANY avoids a whole-canvas DMA per step
+            pl.BlockSpec(memory_space=_MEMSPACE.ANY),
         ],
         out_specs=pl.BlockSpec((1, th, tw, C),
                                lambda i, idx_ref: (idx_ref[i, 0],

@@ -105,3 +105,76 @@ def tile_delta(cur: jax.Array, prev: jax.Array, idx: jax.Array, th: int,
         out_shape=jax.ShapeDtypeStruct((n, STATS_WIDTH), jnp.int32),
         interpret=interpret,
     )(idx, cur, prev)
+
+
+# ---------------------------------------------------------------------------
+# halo-strip delta pricing (the boundary ring, not the tile body)
+# ---------------------------------------------------------------------------
+
+def _halo_strip_stats(cur, prev, qstep: float):
+    """One strip pair -> (nnz, runs, sum|q|) with the strip as ONE scan
+    row (a zero run never joins across strips)."""
+    q = jnp.round((cur.astype(jnp.float32) - prev.astype(jnp.float32))
+                  / qstep).astype(jnp.int32)
+    z = (q == 0).reshape(1, -1)
+    nnz = jnp.sum((~z).astype(jnp.int32))
+    left = jnp.concatenate([jnp.zeros((1, 1), bool), z[:, :-1]], axis=1)
+    runs = jnp.sum((z & ~left).astype(jnp.int32))
+    return nnz, runs, jnp.sum(jnp.abs(q))
+
+
+def _tile_delta_halo_kernel(idx_ref, cur_ref, prev_ref, o_ref, *, th: int,
+                            tw: int, qstep: float, coef_bits: int,
+                            run_bits: int):
+    i = pl.program_id(0)
+    y0 = idx_ref[i, 0] * th
+    x0 = idx_ref[i, 1] * tw
+    # the tile's edge ring as 4 strips: top row, bottom row, left column,
+    # right column.  Corners sit in both a row and a column strip — that
+    # duplication IS the halo cost of encoding rectangles independently.
+    sels = [(pl.ds(y0, 1), pl.ds(x0, tw)),
+            (pl.ds(y0 + th - 1, 1), pl.ds(x0, tw)),
+            (pl.ds(y0, th), pl.ds(x0, 1)),
+            (pl.ds(y0, th), pl.ds(x0 + tw - 1, 1))]
+    nnz = runs = sabs = jnp.asarray(0, jnp.int32)
+    for sel in sels:
+        c = pl.load(cur_ref, sel + (slice(None),))
+        p = pl.load(prev_ref, sel + (slice(None),))
+        dn, dr, ds_ = _halo_strip_stats(c, p, qstep)
+        nnz, runs, sabs = nnz + dn, runs + dr, sabs + ds_
+    nbytes = (nnz * coef_bits + runs * run_bits + 7) // 8
+    out = jnp.zeros((STATS_WIDTH,), jnp.int32)
+    o_ref[0] = out.at[0].set(nbytes).at[1].set(nnz).at[2].set(runs) \
+                  .at[3].set(sabs)
+
+
+def tile_delta_halo(cur: jax.Array, prev: jax.Array, idx: jax.Array,
+                    th: int, tw: int, qstep: float = 8.0,
+                    coef_bits: int = COEF_BITS, run_bits: int = RUN_BITS,
+                    *, interpret: bool = True) -> jax.Array:
+    """Delta stats of each active tile's HALO RING (top/bottom rows +
+    left/right columns, corners counted in both — the duplicated boundary
+    pixels behind the codec model's ``k/sqrt(area)`` surcharge).  Same
+    stats row layout as ``tile_delta``; bit-exact vs
+    ``ref.tile_delta_halo``.  Lets the rate controller shed halo rows
+    whose content is temporally static before touching whole tiles."""
+    n = idx.shape[0]
+    kernel = functools.partial(_tile_delta_halo_kernel, th=th, tw=tw,
+                               qstep=qstep, coef_bits=coef_bits,
+                               run_bits=run_bits)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec(memory_space=_MEMSPACE.ANY),
+            pl.BlockSpec(memory_space=_MEMSPACE.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, STATS_WIDTH),
+                               lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, STATS_WIDTH), jnp.int32),
+        interpret=interpret,
+    )(idx, cur, prev)

@@ -4,10 +4,13 @@ The server side of the streaming runtime: segments from a group's cameras
 arrive over their own uplinks (``links``); the batcher holds a release
 slot per segment and fires the group's fleet launch when **all** active
 cameras have arrived or the segment deadline expires.  Cameras that miss
-the release are *stragglers*: their frames are served on arrival as their
-own (smaller) launch, and the accounting keeps them visible — straggler
-fraction and deadline hits are first-class outputs, because that is where
-cross-camera savings are won or lost under congestion.
+the release are *stragglers*: their late segments are FOLDED into the
+next release's packed super-launch (extra entries in the same fleet-flat
+index space — one reclaimed launch chain per fold) instead of being
+served as their own late launch, and the accounting keeps them visible —
+straggler fraction, deadline hits and reclaimed launches are first-class
+outputs, because that is where cross-camera savings are won or lost
+under congestion.
 
 ``simulate_transport`` is the whole edge-to-server path as array ops:
 packetize (``encoder``) -> uplink FIFO (``links``) -> deadline release ->
@@ -57,6 +60,9 @@ class TransportStats:
     straggler_frames: int
     deadline_hits: int                 # releases cut short by the deadline
     quality_min: float                 # lowest rate-controller quality seen
+    # shed composition: halo-ring bytes go first, static body rows after
+    shed_halo_bytes: float = 0.0
+    shed_body_bytes: float = 0.0
 
     @property
     def mean_s(self) -> float:
@@ -104,6 +110,8 @@ def merge_transport(stats: Sequence[TransportStats]) -> TransportStats:
         straggler_frames=int(sum(s.straggler_frames for s in stats)),
         deadline_hits=int(sum(s.deadline_hits for s in stats)),
         quality_min=float(min(s.quality_min for s in stats)),
+        shed_halo_bytes=float(sum(s.shed_halo_bytes for s in stats)),
+        shed_body_bytes=float(sum(s.shed_body_bytes for s in stats)),
     )
 
 
@@ -143,10 +151,12 @@ def simulate_transport(cameras: Sequence, cam_groups, codec,
     bw = bandwidth_traces(net.link, bandwidth_mbps, base, seg)
     rc = net.rate_control
     if rc.enabled:
-        dep, bytes_out, quality = rate_controlled_departures(
-            arrival_link, body, halo, headers, bw, rc)
+        dep, bytes_out, quality, shed_h, shed_b = \
+            rate_controlled_departures(arrival_link, body, halo, headers,
+                                       bw, rc)
     else:
         bytes_out, quality = base, np.ones_like(base)
+        shed_h = shed_b = np.zeros_like(base)
         dep = fifo_departures(arrival_link, zero_safe_div(bytes_out, bw))
 
     rtt_half = rtt_ms / 2e3
@@ -248,7 +258,9 @@ def simulate_transport(cameras: Sequence, cam_groups, codec,
         frames_sent=sent.sum(axis=1),
         straggler_frames=straggler_frames,
         deadline_hits=deadline_hits,
-        quality_min=float(quality.min()) if quality.size else 1.0)
+        quality_min=float(quality.min()) if quality.size else 1.0,
+        shed_halo_bytes=float(shed_h.sum()),
+        shed_body_bytes=float(shed_b.sum()))
 
 
 # ---------------------------------------------------------------------------
@@ -261,10 +273,20 @@ class Release:
     cams: List[int]                    # cameras in this launch
     straggler_cams: List[int]          # of those, late joiners
     deadline_hit: bool
-    outputs: Dict[int, Any]            # cam -> head map
+    outputs: Dict[int, Any]            # cam -> head map (newest segment)
     # a camera offered its NEXT segment while this batch was still
     # pending: the batch is forced out so no frame is ever dropped
+    # (legacy mode only — with straggler folding the older frame rides
+    # the same packed launch instead)
     superseded: bool = False
+    # cam -> older head maps (oldest first) for straggler segments that
+    # were FOLDED into this release's packed launch instead of being
+    # served as their own late launch
+    folded_outputs: Dict[int, List[Any]] = field(default_factory=dict)
+
+    @property
+    def folded_frames(self) -> int:
+        return sum(len(v) for v in self.folded_outputs.values())
 
 
 class DeadlineGroupFormer:
@@ -272,16 +294,27 @@ class DeadlineGroupFormer:
     fires ONE packed fleet launch (``det.fleet_forward``) per release:
     when every expected camera has arrived, or when the oldest pending
     arrival has waited ``deadline_s``.  Cameras that miss a release stay
-    pending and ride the next one (straggler accounting per release)."""
+    pending and ride the next one (straggler accounting per release).
+
+    With ``fold_stragglers`` (the default), a straggler segment whose
+    camera has already moved on to its next segment is NOT forced out as
+    its own launch: both frames queue and ride the next release's packed
+    super-launch together (the fleet-flat index space is per *entry*, not
+    per camera, so one camera may contribute several segments to one
+    launch).  Every fold reclaims one whole launch chain;
+    ``reclaimed_launches`` counts them.  ``fold_stragglers=False`` keeps
+    the legacy force-out (``superseded``) behavior."""
 
     def __init__(self, det, expected_cams: Sequence[int],
-                 deadline_s: float):
+                 deadline_s: float, fold_stragglers: bool = True):
         self.det = det
         self.expected = list(expected_cams)
         self.deadline_s = deadline_s
-        self._pending: Dict[int, Tuple[float, Any, Any]] = {}
+        self.fold_stragglers = fold_stragglers
+        self._pending: Dict[int, List[Tuple[float, Any, Any]]] = {}
         self._late: set = set()        # cams whose batch left without them
         self.releases: List[Release] = []
+        self.reclaimed_launches = 0    # solo straggler launches avoided
 
     @property
     def straggler_count(self) -> int:
@@ -290,16 +323,22 @@ class DeadlineGroupFormer:
     def offer(self, now: float, cam: int, frame, grid
               ) -> Optional[Release]:
         """Feed one camera arrival; returns the release it triggered (the
-        group completing, or the pending batch being forced out because
-        this camera moved on to its next segment), if any.  Call ``poll``
-        to let deadlines fire between arrivals."""
+        group completing, or — legacy mode — the pending batch being
+        forced out because this camera moved on to its next segment), if
+        any.  Call ``poll`` to let deadlines fire between arrivals."""
         rel = None
-        if cam in self._pending:
-            # the camera's previous segment is still pending: its window
-            # is over, so force the batch out rather than dropping the
-            # older frame silently
-            rel = self._release(now, deadline_hit=False, superseded=True)
-        self._pending[cam] = (now, frame, grid)
+        if self._pending.get(cam):
+            if self.fold_stragglers:
+                # the straggler segment stays queued and rides THIS
+                # camera's next release as extra packed entries — one
+                # whole launch chain reclaimed
+                self.reclaimed_launches += 1
+            else:
+                # legacy: the camera's previous segment is still pending,
+                # so force the batch out rather than dropping it silently
+                rel = self._release(now, deadline_hit=False,
+                                    superseded=True)
+        self._pending.setdefault(cam, []).append((now, frame, grid))
         if set(self._pending) >= set(self.expected):
             return self._release(now, deadline_hit=False)
         return rel or self.poll(now)
@@ -309,7 +348,7 @@ class DeadlineGroupFormer:
         longer than ``deadline_s``."""
         if not self._pending:
             return None
-        oldest = min(t for t, _, _ in self._pending.values())
+        oldest = min(t for q in self._pending.values() for t, _, _ in q)
         if now - oldest >= self.deadline_s:
             return self._release(now, deadline_hit=True)
         return None
@@ -317,9 +356,20 @@ class DeadlineGroupFormer:
     def _release(self, now: float, deadline_hit: bool,
                  superseded: bool = False) -> Release:
         cams = sorted(self._pending)
-        frames = [self._pending[c][1] for c in cams]
-        grids = [self._pending[c][2] for c in cams]
+        entries = [(c, t, f, g) for c in cams
+                   for (t, f, g) in self._pending[c]]
+        frames = [f for _, _, f, _ in entries]
+        grids = [g for _, _, _, g in entries]
+        # ONE packed launch chain for every queued segment of every
+        # camera — folded straggler segments are just extra entries in
+        # the same fleet-flat index space
         outs = self.det.fleet_forward(frames, grids)
+        outputs: Dict[int, Any] = {}
+        folded: Dict[int, List[Any]] = {}
+        for (c, _, _, _), o in zip(entries, outs):
+            if c in outputs:
+                folded.setdefault(c, []).append(outputs[c])
+            outputs[c] = o                 # newest segment wins the slot
         stragglers = [c for c in cams if c in self._late]
         if set(cams) <= self._late:
             # a pure catch-up launch of the PREVIOUS cycle's stragglers:
@@ -329,7 +379,7 @@ class DeadlineGroupFormer:
         else:
             self._late = {c for c in self.expected if c not in cams}
         self._pending.clear()
-        rel = Release(now, cams, stragglers, deadline_hit,
-                      dict(zip(cams, outs)), superseded)
+        rel = Release(now, cams, stragglers, deadline_hit, outputs,
+                      superseded, folded)
         self.releases.append(rel)
         return rel

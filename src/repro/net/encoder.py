@@ -140,42 +140,61 @@ class RateControlConfig:
     # tiles (sheddable without touching moving content); scalar or (C,).
     # Calibrate with ``tile_static_fraction`` (the tile_delta kernel).
     static_fraction: float | np.ndarray = 0.0
+    # fraction of each camera's HALO bytes whose boundary rings are
+    # temporally static; scalar or (C,).  Calibrate with
+    # ``tile_halo_static_fraction`` (the tile_delta_halo kernel).  Halo
+    # mass is shed FIRST — boundary-duplication bytes go before any body
+    # row does (1.0 = the legacy all-halo-sheddable behavior).
+    halo_static_fraction: float | np.ndarray = 1.0
 
 
 def rate_controlled_departures(arrivals: np.ndarray, body: np.ndarray,
                                halo: np.ndarray, headers: np.ndarray,
                                bw: np.ndarray, rc: RateControlConfig
                                ) -> Tuple[np.ndarray, np.ndarray,
+                                          np.ndarray, np.ndarray,
                                           np.ndarray]:
     """Causal quality control + FIFO queue in one scan over segments.
 
     Per segment the controller sees the backlog the previous segment left
     on each camera's link (``dep[s-1] - arrival[s]``), drops quality
-    linearly past the trigger, and sheds the sheddable mass
-    ``halo + static_fraction * body`` by ``(1 - quality)``.  Returns
-    (departures (C, S), bytes_out (C, S), quality (C, S))."""
+    linearly past the trigger, and sheds ``(1 - quality)`` of the
+    sheddable mass ``halo_static_fraction * halo + static_fraction *
+    body`` — halo-ring bytes first, static body rows only once a
+    segment's sheddable halo is exhausted.  Returns (departures (C, S),
+    bytes_out (C, S), quality (C, S), shed_halo (C, S), shed_body
+    (C, S))."""
     C, S = body.shape
     static = np.broadcast_to(np.asarray(rc.static_fraction, np.float64),
                              (C,))
-    sheddable = halo + static[:, None] * body
+    halo_static = np.broadcast_to(
+        np.asarray(rc.halo_static_fraction, np.float64), (C,))
+    shed_h_max = halo_static[:, None] * halo
+    sheddable = shed_h_max + static[:, None] * body
     base = body + halo + headers
     dep = np.zeros((C, S))
     bytes_out = np.zeros((C, S))
     quality = np.ones((C, S))
+    shed_halo = np.zeros((C, S))
+    shed_body = np.zeros((C, S))
     prev_dep = np.full(C, -np.inf)
     for s in range(S):
         backlog = np.maximum(prev_dep - arrivals[:, s], 0.0)
         q = np.clip(1.0 - rc.gain
                     * np.maximum(backlog - rc.backlog_trigger_s, 0.0),
                     rc.min_quality, 1.0)
-        b = base[:, s] - (1.0 - q) * sheddable[:, s]
+        shed = (1.0 - q) * sheddable[:, s]
+        sh = np.minimum(shed, shed_h_max[:, s])   # halo rows go first
+        b = base[:, s] - shed
         tx = zero_safe_div(b, bw[:, s])
         start = np.maximum(arrivals[:, s], prev_dep)
         prev_dep = start + tx
         dep[:, s] = prev_dep
         bytes_out[:, s] = b
         quality[:, s] = q
-    return dep, bytes_out, quality
+        shed_halo[:, s] = sh
+        shed_body[:, s] = shed - sh
+    return dep, bytes_out, quality, shed_halo, shed_body
 
 
 # ---------------------------------------------------------------------------
@@ -200,4 +219,25 @@ def tile_static_fraction(cur, prev, grid: np.ndarray, tile: int,
                                        qstep=qstep))
     C = np.asarray(cur).shape[-1]
     dense_bytes = tile * tile * C * kops.COEF_BITS / 8.0
+    return float(np.mean(stats[:, 0] <= static_ratio * dense_bytes))
+
+
+def tile_halo_static_fraction(cur, prev, grid: np.ndarray, tile: int,
+                              qstep: float = 8.0,
+                              static_ratio: float = 0.10) -> float:
+    """Fraction of a camera's RoI tiles whose HALO RING (the duplicated
+    boundary pixels behind the codec's ``k/sqrt(area)`` surcharge) prices
+    below ``static_ratio`` of the dense ring cost — the
+    ``halo_static_fraction`` feed for the rate controller, letting it
+    shed static halo rows before it touches whole tiles.  One
+    ``tile_delta_halo`` kernel launch per call."""
+    from repro.kernels import ops as kops
+    idx = kops.mask_to_indices(np.asarray(grid, bool))
+    if idx.shape[0] == 0:
+        return 0.0
+    stats = np.asarray(kops.tile_delta_halo(cur, prev, idx, tile, tile,
+                                            qstep=qstep))
+    C = np.asarray(cur).shape[-1]
+    ring_px = 2 * tile + 2 * tile          # 2 rows + 2 cols (corners 2x)
+    dense_bytes = ring_px * C * kops.COEF_BITS / 8.0
     return float(np.mean(stats[:, 0] <= static_ratio * dense_bytes))

@@ -1,13 +1,19 @@
 """RoI-YOLO-lite: a small conv detector running on active tiles only.
 
 The online-phase server model (paper §4.4), with the packed representation
-persistent across the whole stack: layer 0 is the fused gather+conv kernel
-(roi_conv reads haloed windows straight from the frame — the *one* gather),
-layers 1..N-1 are packed-resident (roi_conv_packed pulls halo strips from
-neighbor tiles via the offline neighbor table), and a *single* scatter at
-the end materializes the full-frame head map.  The old SBNet formulation
-paid a full-frame scatter + HBM re-slice per layer; this one pays the
-round-trip once for the whole stack.
+persistent across the whole stack AND the whole launch chain fused to a
+constant number of dispatches: layer 0 is the fused gather+conv+relu
+entry kernel (``roi_conv_entry`` reads haloed windows straight from the
+stacked frames — the *one* gather — and emits coalesced rim halos),
+layers 1..N-1 run inside ONE ``roi_conv_stack`` megakernel (grid over
+(layer, tile), double-buffered activations/rims, per-layer weight
+prefetch), and a *single* scatter materializes the full-frame head maps.
+Every RoI forward — one camera, one group, or the WHOLE FLEET via
+``superlaunch_forward`` — is exactly 3 dispatches (2 for a 1-layer
+stack), independent of camera count, group count and layer count.  The
+old SBNet formulation paid a full-frame scatter + HBM re-slice per layer;
+the per-layer packed chain still exists as ``roi_forward_layers`` /
+``fleet_forward_layers`` (the bit-identical A/B baseline).
 
 Dense fallback (the paper loads both models and routes large-RoI frames to
 dense YOLO) selected by the density switch.
@@ -58,10 +64,24 @@ class RoIDetector:
         self.head = jax.random.normal(
             kh, (chans[-1], cfg.num_anchors * 5), jnp.float32) \
             / np.sqrt(chans[-1])
-        # per-mask static cache: mask bytes -> (idx, nbr) device arrays
-        self._mask_cache: Dict[bytes, Tuple[jax.Array, jax.Array]] = {}
-        # per-group static cache: fleet mask bytes -> (idx3, nbr) arrays
-        self._fleet_cache: Dict[bytes, Tuple[jax.Array, jax.Array]] = {}
+        # per-mask static cache: grid digest -> (idx2, idx3, nbr) arrays
+        self._mask_cache: Dict[bytes, Tuple[jax.Array, jax.Array,
+                                            jax.Array]] = {}
+        # per-group static cache: digest tuple -> (idx3, nbr) arrays
+        self._fleet_cache: Dict[tuple, Tuple[jax.Array, jax.Array]] = {}
+        # per-grid digest memo: id(grid) -> (grid ref, popcount, digest).
+        # Grids are packbits-serialized ONCE per array object, not once
+        # per call — the fleet cache key on a hit is K dict lookups, not
+        # K serializations.  Grids are treated as immutable (offline
+        # re-solves produce fresh arrays); the strong ref pins the id and
+        # a popcount guard re-hashes if a caller mutates one in place.
+        # Capacity scales with the largest fleet offered (_fleet_tables),
+        # so big fleets never thrash the memo back to per-call hashing.
+        self._grid_digests: Dict[int, Tuple[np.ndarray, int, bytes]] = {}
+        self._digest_cap = 64
+        self.grid_hash_computes = 0       # digest serializations performed
+        self.mask_cache_hits = 0
+        self.fleet_cache_hits = 0
 
     # -- dense path ----------------------------------------------------------
     def dense_forward(self, x: jax.Array) -> jax.Array:
@@ -71,31 +91,95 @@ class RoIDetector:
                 dimension_numbers=("NHWC", "HWIO", "NHWC"))[0])
         return x @ self.head
 
-    # -- RoI path -------------------------------------------------------------
+    # -- static-table caches ---------------------------------------------------
+    def _grid_digest(self, grid) -> bytes:
+        """Content digest of one RoI grid, serialized at most once per
+        array object (cache keys used to packbits every grid on every
+        call, cache hit or not).  A popcount guard catches in-place
+        mutation of a memoized grid (an exact-swap mutation that keeps
+        the popcount would evade it — produce fresh arrays instead)."""
+        pop = int(np.count_nonzero(grid))
+        hit = self._grid_digests.get(id(grid))
+        if hit is not None and hit[0] is grid and hit[1] == pop:
+            return hit[2]
+        g = np.asarray(grid, bool)
+        self.grid_hash_computes += 1
+        digest = np.packbits(g).tobytes() + bytes(str(g.shape), "ascii")
+        while len(self._grid_digests) >= self._digest_cap:
+            self._grid_digests.pop(next(iter(self._grid_digests)))
+        self._grid_digests[id(grid)] = (grid, pop, digest)
+        return digest
+
     def _mask_tables(self, grid: np.ndarray):
-        key = np.packbits(np.asarray(grid, bool)).tobytes() + bytes(
-            str(grid.shape), "ascii")
+        key = self._grid_digest(grid)
         hit = self._mask_cache.get(key)
         if hit is None:
             idx_np = kops.mask_to_indices(grid)
-            hit = (jnp.asarray(idx_np),
+            idx3 = np.concatenate([np.zeros((idx_np.shape[0], 1), np.int32),
+                                   idx_np], axis=1)
+            hit = (jnp.asarray(idx_np), jnp.asarray(idx3),
                    jnp.asarray(kops.neighbor_table(idx_np, grid.shape)))
             # masks change rarely (offline re-solves); a small FIFO keeps
             # a long-lived server from pinning every mask ever seen
             while len(self._mask_cache) >= 8:
                 self._mask_cache.pop(next(iter(self._mask_cache)))
             self._mask_cache[key] = hit
+        else:
+            self.mask_cache_hits += 1
         return hit
+
+    def _fleet_tables(self, grids):
+        # never let one fleet-sized key sweep smaller entries out of the
+        # digest memo: keep room for two full fleets' worth of grids
+        self._digest_cap = max(self._digest_cap, 2 * len(grids))
+        key = tuple(self._grid_digest(g) for g in grids)
+        hit = self._fleet_cache.get(key)
+        if hit is None:
+            idx_np, _ = kops.fleet_indices(grids)
+            hit = (jnp.asarray(idx_np),
+                   jnp.asarray(kops.fleet_neighbor_table(grids)))
+            while len(self._fleet_cache) >= 8:
+                self._fleet_cache.pop(next(iter(self._fleet_cache)))
+            self._fleet_cache[key] = hit
+        else:
+            self.fleet_cache_hits += 1
+        return hit
+
+    # -- RoI path -------------------------------------------------------------
+    def _stack_chain(self, x: jax.Array, idx3: jax.Array,
+                     nbr: jax.Array) -> jax.Array:
+        """The fused launch chain over stacked frames: entry kernel, then
+        the layer-stack megakernel.  2 dispatches for any layer count
+        > 1, 1 for a single-layer net."""
+        t = self.cfg.tile
+        packed = kops.roi_conv_entry(x, self.weights[0], idx3, t, t)
+        if len(self.weights) > 1:
+            packed = kops.roi_conv_stack(packed, self.weights[1:], nbr)
+        return packed
 
     def roi_forward(self, x: jax.Array, grid: np.ndarray) -> jax.Array:
         """x: (H, W, 3); grid: bool tile mask at self.cfg.tile granularity.
         Returns the full-frame head map with non-RoI regions zero.
 
-        Stay-packed execution: ONE gather (fused into the first conv), N
-        packed-resident conv layers, ONE scatter — no full-frame
-        materialization between layers."""
+        Stay-packed, constant-dispatch execution: ONE entry kernel (the
+        gather fused into the first conv), ONE layer-stack megakernel for
+        every remaining layer, ONE scatter — 3 dispatches total,
+        independent of the layer count."""
+        idx, idx3, nbr = self._mask_tables(grid)
+        if idx.shape[0] == 0:             # empty mask: nothing to launch
+            return jnp.zeros(x.shape[:2] + (self.head.shape[-1],), x.dtype)
+        packed = self._stack_chain(x[None], idx3, nbr)
+        base = jnp.zeros(x.shape[:2] + (packed.shape[-1],), packed.dtype)
+        full = kops.sbnet_scatter(packed, idx, base)   # the scatter
+        return full @ self.head
+
+    def roi_forward_layers(self, x: jax.Array, grid: np.ndarray
+                           ) -> jax.Array:
+        """The per-layer packed chain (one ``roi_conv_packed`` dispatch
+        per layer after the fused gather) — kept as the bit-identical A/B
+        baseline for the megakernel; K×(N+1)-dispatch regime."""
         t = self.cfg.tile
-        idx, nbr = self._mask_tables(grid)
+        idx, _, nbr = self._mask_tables(grid)
         packed = None
         for li, w in enumerate(self.weights):
             if li == 0:
@@ -105,41 +189,51 @@ class RoIDetector:
                 packed = kops.roi_conv_packed(packed, w, nbr)
             packed = jax.nn.relu(packed)
         base = jnp.zeros(x.shape[:2] + (packed.shape[-1],), packed.dtype)
-        full = kops.sbnet_scatter(packed, idx, base)   # the scatter
+        full = kops.sbnet_scatter(packed, idx, base)
         return full @ self.head
 
-    # -- fleet (multi-camera group) path --------------------------------------
-    def _fleet_tables(self, grids):
-        key = b"".join(np.packbits(np.asarray(g, bool)).tobytes()
-                       + bytes(str(g.shape), "ascii") for g in grids)
-        hit = self._fleet_cache.get(key)
-        if hit is None:
-            idx_np, _ = kops.fleet_indices(grids)
-            hit = (jnp.asarray(idx_np),
-                   jnp.asarray(kops.fleet_neighbor_table(grids)))
-            while len(self._fleet_cache) >= 8:
-                self._fleet_cache.pop(next(iter(self._fleet_cache)))
-            self._fleet_cache[key] = hit
-        return hit
-
-    def fleet_forward(self, frames: List[jax.Array],
-                      grids: List[np.ndarray]) -> List[jax.Array]:
-        """One camera group, one launch per stage: frames (one (H, W, 3)
-        per camera, any sizes) are stacked on a common zero canvas and the
-        whole group's active tiles run as ONE fused gather+conv, ONE
-        roi_conv_packed per remaining layer (cross-camera neighbor table —
-        halos cannot leak between cameras), and ONE scatter.  Returns the
-        per-camera full-frame head maps, each bit-compatible with
-        ``roi_forward(frame, grid)`` on that camera alone."""
+    # -- fleet (multi-camera group / whole-fleet) path ------------------------
+    def _stack_frames(self, frames, grids):
         t = self.cfg.tile
         canvas_h = max(max(f.shape[0] for f in frames),
                        max(g.shape[0] * t for g in grids))
         canvas_w = max(max(f.shape[1] for f in frames),
                        max(g.shape[1] * t for g in grids))
-        x = jnp.stack([jnp.pad(f, ((0, canvas_h - f.shape[0]),
-                                   (0, canvas_w - f.shape[1]), (0, 0)))
-                       for f in frames])
+        return jnp.stack([jnp.pad(f, ((0, canvas_h - f.shape[0]),
+                                      (0, canvas_w - f.shape[1]), (0, 0)))
+                          for f in frames]), canvas_h, canvas_w
+
+    def fleet_forward(self, frames: List[jax.Array],
+                      grids: List[np.ndarray]) -> List[jax.Array]:
+        """Any number of cameras, ≤3 dispatches total: frames (one
+        (H, W, 3) per camera, any sizes) are stacked on a common zero
+        canvas and the whole set's active tiles run as ONE fused
+        gather+conv entry, ONE layer-stack megakernel (cross-camera
+        neighbor table — halos cannot leak between cameras), and ONE
+        scatter.  Returns the per-camera full-frame head maps, each
+        bit-compatible with ``roi_forward(frame, grid)`` on that camera
+        alone.  Cameras with empty masks get all-zero head maps and cost
+        no launches of their own."""
         idx, nbr = self._fleet_tables(grids)
+        if idx.shape[0] == 0:             # whole set empty: no launches
+            return [jnp.zeros(f.shape[:2] + (self.head.shape[-1],),
+                              f.dtype) for f in frames]
+        x, canvas_h, canvas_w = self._stack_frames(frames, grids)
+        packed = self._stack_chain(x, idx, nbr)
+        base = jnp.zeros((len(frames), canvas_h, canvas_w,
+                          packed.shape[-1]), packed.dtype)
+        full = kops.sbnet_scatter_fleet(packed, idx, base)
+        heads = full @ self.head
+        return [heads[c, :f.shape[0], :f.shape[1]]
+                for c, f in enumerate(frames)]
+
+    def fleet_forward_layers(self, frames: List[jax.Array],
+                             grids: List[np.ndarray]) -> List[jax.Array]:
+        """Per-layer fleet chain (1 + (N-1) + 1 dispatches per call) —
+        the bit-identical A/B baseline for the fused path."""
+        t = self.cfg.tile
+        idx, nbr = self._fleet_tables(grids)
+        x, canvas_h, canvas_w = self._stack_frames(frames, grids)
         packed = None
         for li, w in enumerate(self.weights):
             if li == 0:
@@ -153,6 +247,29 @@ class RoIDetector:
         heads = full @ self.head
         return [heads[c, :f.shape[0], :f.shape[1]]
                 for c, f in enumerate(frames)]
+
+    def superlaunch_forward(self, frames: Dict[int, List[jax.Array]],
+                            grids: Dict[int, List[np.ndarray]]
+                            ) -> Dict[int, List[jax.Array]]:
+        """The cross-group super-launch: EVERY camera of EVERY group in
+        one fleet-flat launch chain — ≤3 dispatches for the whole fleet,
+        independent of group count and layer count.  Group boundaries are
+        just camera boundaries in the flat (flat_cam, ty, tx) index
+        space, so per-camera slot offsets keep halos leak-free across
+        cameras and groups alike (``_fleet_tables`` builds and caches the
+        flat tables; ``ops.superlaunch_tables`` is the equivalent
+        standalone builder).  Returns {gid: per-camera head maps}, each
+        bit-identical to ``fleet_forward(frames[gid], grids[gid])`` on
+        that group alone."""
+        gids = list(frames)
+        flat_frames = [f for g in gids for f in frames[g]]
+        flat_grids = [gr for g in gids for gr in grids[g]]
+        heads = self.fleet_forward(flat_frames, flat_grids)
+        out, pos = {}, 0
+        for g in gids:
+            out[g] = heads[pos:pos + len(frames[g])]
+            pos += len(frames[g])
+        return out
 
     def forward(self, x: jax.Array, grid: Optional[np.ndarray]) -> jax.Array:
         if grid is None or grid.mean() >= self.cfg.switch_density:

@@ -158,8 +158,9 @@ def test_fleet_4x5_end_to_end():
                           200, 300)
         assert m.accuracy >= base.accuracy
 
-    # kernel-level steps: per group, ONE fused gather+conv + one packed
-    # conv per remaining layer + ONE scatter, asserted inside the step
+    # kernel-level steps: ONE cross-group super-launch for the WHOLE
+    # fleet — entry + layer-stack megakernel + scatter, ≤3 dispatches
+    # regardless of the group count, asserted inside the step
     det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     t = det.cfg.tile
@@ -168,15 +169,15 @@ def test_fleet_4x5_end_to_end():
     for gs in grids.values():          # ensure non-empty masks
         for gg in gs:
             gg[1, 1] = True
-    n_layers = det.num_conv_layers
     for step in range(2):
         frames = {g.gid: [jnp.asarray(
             rng.normal(size=(3 * t, 4 * t, 3)), jnp.float32)
             for _ in range(5)] for g in fleet.groups}
         outs, counts = fleet_inference_step(det, frames, grids)
-        assert counts["roi_conv_fleet"] == fleet.num_groups
-        assert counts["roi_conv_packed"] == fleet.num_groups * (n_layers - 1)
-        assert counts["sbnet_scatter_fleet"] == fleet.num_groups
+        assert counts["roi_conv_entry"] == 1
+        assert counts["roi_conv_stack"] == 1
+        assert counts["sbnet_scatter_fleet"] == 1
+        assert sum(counts.values()) <= 3
         assert set(outs) == set(grids)
 
 
@@ -234,18 +235,19 @@ def test_count_kernels_snapshot_restore():
     with ops.count_kernels() as inner:
         det.roi_forward(x, grid)
     # the region saw exactly one stack, regardless of prior pollution
-    assert inner["roi_conv"] == 1
+    assert inner["roi_conv_entry"] == 1
     assert inner["sbnet_scatter"] == 1
-    assert inner["roi_conv_packed"] == det.num_conv_layers - 1
+    assert inner["roi_conv_stack"] == 1
     # and the global counter now reflects outer + inner work
-    assert ops.KERNEL_COUNTS["roi_conv"] == polluted["roi_conv"] + 1
+    assert ops.KERNEL_COUNTS["roi_conv_entry"] == \
+        polluted["roi_conv_entry"] + 1
     # nesting: inner regions isolate, outer still totals
     with ops.count_kernels() as outer_c:
         det.roi_forward(x, grid)
         with ops.count_kernels() as nested:
             det.roi_forward(x, grid)
-        assert nested["roi_conv"] == 1
-    assert outer_c["roi_conv"] == 2
+        assert nested["roi_conv_entry"] == 1
+    assert outer_c["roi_conv_entry"] == 2
 
 
 # ---------------------------------------------------------------------------

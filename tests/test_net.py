@@ -204,6 +204,96 @@ def test_tile_delta_static_tile_prices_near_zero():
     assert nbytes == (runs * ops.RUN_BITS + 7) // 8
 
 
+def test_tile_delta_halo_bit_exact_vs_reference():
+    rng = np.random.default_rng(13)
+    for th, tw, C, q in [(8, 8, 3, 8.0), (16, 16, 3, 4.0), (8, 16, 1, 16.0)]:
+        H, W = th * 5, tw * 4
+        cur = rng.normal(scale=50, size=(H, W, C)).astype(np.float32)
+        prev = cur + rng.normal(scale=7, size=(H, W, C)).astype(np.float32)
+        prev[:th] = cur[:th]                       # one static tile row
+        grid = rng.random((5, 4)) < 0.8
+        grid[0, 0] = True
+        idx = ops.mask_to_indices(grid)
+        out = np.asarray(ops.tile_delta_halo(
+            jnp.asarray(cur), jnp.asarray(prev), jnp.asarray(idx), th, tw,
+            qstep=q))
+        expect = ref.tile_delta_halo(cur, prev, idx, th, tw, qstep=q)
+        np.testing.assert_array_equal(out, expect)
+
+
+def test_tile_delta_halo_static_ring_prices_run_tokens_only():
+    """A fully static ring prices exactly 4 zero-run tokens (one per
+    strip: top row, bottom row, left col, right col)."""
+    cur = np.random.default_rng(14).normal(
+        scale=60, size=(16, 16, 3)).astype(np.float32)
+    idx = np.array([[0, 0]], np.int32)
+    out = np.asarray(ops.tile_delta_halo(jnp.asarray(cur),
+                                         jnp.asarray(cur),
+                                         jnp.asarray(idx), 16, 16))
+    nbytes, nnz, runs, sabs = out[0, :4]
+    assert nnz == 0 and sabs == 0
+    assert runs == 4
+    assert nbytes == (runs * ops.RUN_BITS + 7) // 8
+    # a moving interior leaves the halo ring estimate untouched
+    moved = cur.copy()
+    moved[1:-1, 1:-1] += 100.0
+    out2 = np.asarray(ops.tile_delta_halo(jnp.asarray(moved),
+                                          jnp.asarray(cur),
+                                          jnp.asarray(idx), 16, 16))
+    np.testing.assert_array_equal(out2, out)
+
+
+def test_tile_halo_static_fraction_feeds_controller():
+    from repro.net import tile_halo_static_fraction
+    rng = np.random.default_rng(15)
+    t = 16
+    cur = rng.normal(scale=60, size=(4 * t, 4 * t, 3)).astype(np.float32)
+    prev = cur.copy()
+    prev[:2 * t] += rng.normal(scale=30,
+                               size=(2 * t, 4 * t, 3)).astype(np.float32)
+    grid = np.ones((4, 4), bool)
+    with ops.count_kernels() as c:
+        frac = tile_static_fraction(jnp.asarray(cur), jnp.asarray(prev),
+                                    grid, t)
+        hfrac = tile_halo_static_fraction(jnp.asarray(cur),
+                                          jnp.asarray(prev), grid, t)
+    assert c["tile_delta"] == 1 and c["tile_delta_halo"] == 1
+    assert frac == pytest.approx(0.5)
+    assert hfrac == pytest.approx(0.5)   # bottom-half rings static too
+
+
+def test_rate_control_sheds_halo_before_body(scene, fullframe):
+    """The shed mass decomposes into halo-first tiers: with no sheddable
+    body the whole shed comes from halo rings; adding static body mass
+    sheds MORE total but the halo tier is consumed first, and the tiers
+    telescope to shed_bytes exactly."""
+    link = LinkConfig(congestion=default_congestion_trace(20.0))
+    halo_only = OnlineConfig(transport="simulated", net=NetConfig(
+        link=link, rate_control=RateControlConfig(enabled=True)))
+    ts_h = online_system_metrics(scene.cameras, fullframe, halo_only,
+                                 10.0, 200)[7]
+    assert ts_h.shed_bytes > 0
+    assert ts_h.shed_halo_bytes == pytest.approx(ts_h.shed_bytes)
+    assert ts_h.shed_body_bytes == 0.0
+    both = OnlineConfig(transport="simulated", net=NetConfig(
+        link=link, rate_control=RateControlConfig(enabled=True,
+                                                  static_fraction=0.4)))
+    ts_b = online_system_metrics(scene.cameras, fullframe, both,
+                                 10.0, 200)[7]
+    assert ts_b.shed_halo_bytes + ts_b.shed_body_bytes == \
+        pytest.approx(ts_b.shed_bytes)
+    assert ts_b.shed_body_bytes > 0
+    assert ts_b.shed_halo_bytes >= ts_h.shed_halo_bytes * 0.5
+    # halo_static_fraction gates the halo tier
+    gated = OnlineConfig(transport="simulated", net=NetConfig(
+        link=link, rate_control=RateControlConfig(
+            enabled=True, halo_static_fraction=0.0, static_fraction=0.4)))
+    ts_g = online_system_metrics(scene.cameras, fullframe, gated,
+                                 10.0, 200)[7]
+    assert ts_g.shed_halo_bytes == 0.0
+    assert ts_g.shed_body_bytes == pytest.approx(ts_g.shed_bytes)
+
+
 def test_tile_static_fraction_feeds_controller():
     rng = np.random.default_rng(6)
     t = 16
@@ -287,15 +377,14 @@ def test_deadline_group_former_single_launch_per_release():
               for _ in range(3)]
     former = DeadlineGroupFormer(det, expected_cams=[0, 1, 2],
                                  deadline_s=0.5)
-    n_layers = det.num_conv_layers
     with ops.count_kernels() as c:
         assert former.offer(0.00, 0, frames[0], grids[0]) is None
         assert former.offer(0.10, 1, frames[1], grids[1]) is None
         rel = former.poll(0.60)          # deadline fires without camera 2
     assert rel is not None and rel.deadline_hit
     assert rel.cams == [0, 1] and rel.straggler_cams == []
-    assert c["roi_conv_fleet"] == 1
-    assert c["roi_conv_packed"] == n_layers - 1
+    assert c["roi_conv_entry"] == 1
+    assert c["roi_conv_stack"] == 1      # every remaining layer, fused
     assert c["sbnet_scatter_fleet"] == 1
     with ops.count_kernels() as c2:
         rel2 = former.offer(0.70, 2, frames[2], grids[2])
@@ -304,7 +393,7 @@ def test_deadline_group_former_single_launch_per_release():
     assert rel2 is not None
     assert rel2.cams == [2] and rel2.straggler_cams == [2]
     assert former.straggler_count == 1
-    assert c2["roi_conv_fleet"] == 1     # stragglers still one launch chain
+    assert c2["roi_conv_entry"] == 1     # stragglers still one launch chain
     # a straggler catch-up launch must NOT mark the punctual cameras
     # late: the next complete cycle reports zero stragglers
     for cam in (0, 1, 2):
@@ -373,9 +462,9 @@ def test_simulated_transport_with_empty_mask_and_keep(scene):
 
 
 def test_deadline_group_former_never_drops_superseded_frames():
-    """A camera offering its next segment while the batch is pending
-    forces the batch out (superseded release) instead of silently
-    dropping the older frame."""
+    """Legacy (fold_stragglers=False): a camera offering its next segment
+    while the batch is pending forces the batch out (superseded release)
+    instead of silently dropping the older frame."""
     det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(2))
     rng = np.random.default_rng(11)
     t = det.cfg.tile
@@ -384,7 +473,7 @@ def test_deadline_group_former_never_drops_superseded_frames():
     mk = lambda: jnp.asarray(rng.normal(size=(2 * t, 2 * t, 3)),
                              jnp.float32)
     former = DeadlineGroupFormer(det, expected_cams=[0, 1],
-                                 deadline_s=10.0)
+                                 deadline_s=10.0, fold_stragglers=False)
     f0a, f0b = mk(), mk()
     assert former.offer(0.0, 0, f0a, grid) is None
     rel = former.offer(0.2, 0, f0b, grid)      # same camera, next segment
@@ -396,3 +485,43 @@ def test_deadline_group_former_never_drops_superseded_frames():
     rel2 = former.offer(0.3, 1, mk(), grid)    # group completes normally
     assert rel2 is not None and not rel2.superseded
     assert rel2.cams == [0, 1]
+
+
+def test_straggler_fold_reclaims_launch():
+    """Default folding: a straggler segment whose camera moved on rides
+    the NEXT release's packed super-launch as an extra entry — no
+    superseded force-out, no solo late launch, one launch chain
+    reclaimed, and no frame is ever dropped."""
+    det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(2))
+    rng = np.random.default_rng(12)
+    t = det.cfg.tile
+    grids = [rng.random((3, 4)) < 0.5 for _ in range(2)]
+    for g in grids:
+        g[1, 1] = True
+    mk = lambda: jnp.asarray(rng.normal(size=(3 * t, 4 * t, 3)),
+                             jnp.float32)
+    former = DeadlineGroupFormer(det, expected_cams=[0, 1],
+                                 deadline_s=10.0)
+    f0a, f0b, f1 = mk(), mk(), mk()
+    assert former.offer(0.0, 0, f0a, grids[0]) is None
+    # same camera, next segment: with folding this does NOT force the
+    # batch out — both segments queue for the next release
+    assert former.offer(0.2, 0, f0b, grids[0]) is None
+    assert former.reclaimed_launches == 1
+    with ops.count_kernels() as c:
+        rel = former.offer(0.3, 1, f1, grids[1])   # group completes
+    assert rel is not None and not rel.superseded
+    assert rel.cams == [0, 1]
+    # all three segments (two of camera 0) served by ONE launch chain
+    assert c["roi_conv_entry"] == 1 and c["roi_conv_stack"] == 1 \
+        and c["sbnet_scatter_fleet"] == 1
+    assert rel.folded_frames == 1
+    np.testing.assert_allclose(np.asarray(rel.folded_outputs[0][0]),
+                               np.asarray(det.roi_forward(f0a, grids[0])),
+                               atol=1e-5)      # the older folded segment
+    np.testing.assert_allclose(np.asarray(rel.outputs[0]),
+                               np.asarray(det.roi_forward(f0b, grids[0])),
+                               atol=1e-5)      # the newest holds the slot
+    np.testing.assert_allclose(np.asarray(rel.outputs[1]),
+                               np.asarray(det.roi_forward(f1, grids[1])),
+                               atol=1e-5)

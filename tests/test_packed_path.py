@@ -152,11 +152,12 @@ def test_roi_forward_one_gather_one_scatter():
     ops.KERNEL_COUNTS.clear()
     roi = det.roi_forward(x, grid)
     counts = dict(ops.KERNEL_COUNTS)
-    n_layers = det.num_conv_layers
-    assert counts.get("roi_conv", 0) == 1            # the (fused) gather
-    assert counts.get("roi_conv_packed", 0) == n_layers - 1
+    assert counts.get("roi_conv_entry", 0) == 1      # the (fused) gather
+    assert counts.get("roi_conv_stack", 0) == 1      # ALL remaining layers
     assert counts.get("sbnet_scatter", 0) == 1       # the scatter
     assert counts.get("sbnet_gather", 0) == 0        # no per-layer re-slice
+    assert counts.get("roi_conv_packed", 0) == 0     # no per-layer launches
+    assert sum(counts.values()) <= 3                 # constant dispatches
     # packed output matches the dense path on interior tiles to <= 1e-4
     dense = det.dense_forward(x)
     t = det.cfg.tile

@@ -17,7 +17,7 @@ import os
 import time
 
 BENCHES = ["reid", "compression", "ablations", "sensitivity", "reducto",
-           "kernels", "fleet", "net", "stack", "roofline"]
+           "kernels", "fleet", "net", "stack", "reuse", "roofline"]
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -188,6 +188,66 @@ def stack_quick():
     print(f"\nstack smoke OK in {time.time() - t0:.1f}s -> {out}")
 
 
+def reuse_quick():
+    """CI smoke for temporal delta-gated inference: per-step convolved
+    tiles bounded by the dilated changed set (checked against an
+    independent grid-morphology oracle), ≥40% conv-tile reduction on the
+    default mostly-static trace with BIT-identical outputs at threshold
+    0, all-static steps dispatching only gate + composite scatter, the
+    conv chain keeping its ≤3-dispatch ceiling, the reuse step's wall
+    clock at or below full recompute, and the VMEM-calibrated block
+    recorded — merges a "reuse" panel into BENCH_kernels.json."""
+    from benchmarks import bench_reuse
+    t0 = time.time()
+    payload = bench_reuse.run(verbose=True, quick=True)
+
+    # compute-tile fraction ≤ changed fraction + dilation bound: per
+    # step the compact set must never exceed the receptive-field
+    # dilation of the changed set (oracle-computed), and the LAUNCHED
+    # count (compact set + power-of-two bucket padding) stays within the
+    # bucket factor of it
+    for got, launched, bound in zip(payload["computed_per_step"],
+                                    payload["launched_per_step"],
+                                    payload["dilation_bound_per_step"]):
+        assert got <= bound, \
+            f"computed {got} tiles > dilation bound {bound}"
+        assert launched <= max(2 * bound, 1), \
+            f"launched {launched} tiles > 2x dilation bound {bound}"
+    assert payload["compute_tile_fraction"] <= \
+        payload["changed_tile_fraction"] + \
+        2 * max(payload["dilation_bound_per_step"]) / max(
+            payload["active_tiles"], 1)
+    # the acceptance number: ≥40% fewer convolved tiles on the default
+    # mostly-static trace, with bit-identical detector outputs
+    assert payload["conv_tile_reduction"] >= 0.40, \
+        f"reuse must cut convolved tiles >= 40% " \
+        f"(got {payload['conv_tile_reduction']:.1%})"
+    assert payload["reuse_vs_full_max_abs_diff"] == 0.0, \
+        "threshold-0 reuse must be bit-identical to full recompute"
+    # dispatch structure: all-static = gate + scatter; changed steps keep
+    # the ≤3-dispatch conv ceiling next to the one shared gate dispatch
+    assert payload["static_step_dispatches"] == {
+        "tile_delta_gate": 1, "sbnet_scatter_fleet": 1}, payload
+    ch = payload["changed_step_dispatches"]
+    assert ch["tile_delta_gate"] == 1 and ch["roi_conv_entry"] == 1
+    assert sum(v for k, v in ch.items() if k != "tile_delta_gate") <= 3
+    # 15% slack absorbs scheduler noise on shared CI runners (same
+    # policy as the stack smoke) without hiding a real regression
+    assert payload["reuse_step_wall_s"] <= \
+        1.15 * payload["full_step_wall_s"], \
+        f"reuse path must not be slower than full recompute " \
+        f"({payload['reuse_step_wall_s']:.3f}s vs " \
+        f"{payload['full_step_wall_s']:.3f}s)"
+    assert payload["chosen_block"] >= 1
+    assert payload["cache_invalidations"] == 0
+
+    out = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+    merged = _merge_bench_json(out, {"reuse": payload})
+    with open(out, "w") as f:
+        json.dump(merged, f, indent=1, default=float)
+    print(f"\nreuse smoke OK in {time.time() - t0:.1f}s -> {out}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -209,6 +269,12 @@ def main():
                          "bit-exact + wall-clock vs per-layer chain, "
                          "rim-DMA structure, straggler fold) merged "
                          "into BENCH_kernels.json")
+    ap.add_argument("--reuse", action="store_true",
+                    help="CI smoke: temporal delta-gated inference "
+                         "(convolved tiles ≤ dilated changed set, ≥40% "
+                         "reduction on the mostly-static trace, bit-"
+                         "exact at threshold 0, gate+scatter-only static "
+                         "steps) merged into BENCH_kernels.json")
     args = ap.parse_args()
     if args.quick:
         quick()
@@ -218,7 +284,9 @@ def main():
         net_quick()
     if args.stack:
         stack_quick()
-    if args.quick or args.fleet or args.net or args.stack:
+    if args.reuse:
+        reuse_quick()
+    if args.quick or args.fleet or args.net or args.stack or args.reuse:
         return
     selected = args.only.split(",") if args.only else BENCHES
 

@@ -11,8 +11,8 @@ from repro.fleet.topology import (FleetConfig, FleetGroup, FleetScene,
                                   GroupSpec, TRAFFIC_PROFILES, build_fleet,
                                   cross_group_leakage)
 from repro.fleet.runtime import (FleetOfflineResult, FleetOnlineMetrics,
-                                 fleet_inference_step, run_fleet_offline,
-                                 run_fleet_online)
+                                 fleet_inference_step, fleet_reuse_step,
+                                 run_fleet_offline, run_fleet_online)
 from repro.fleet.drift import (AdaptiveRunResult, DriftAdapter, DriftConfig,
                                DriftEvent, ShrinkEvent,
                                run_adaptive_online)
@@ -21,7 +21,7 @@ __all__ = [
     "FleetConfig", "FleetGroup", "FleetScene", "GroupSpec",
     "TRAFFIC_PROFILES", "build_fleet", "cross_group_leakage",
     "FleetOfflineResult", "FleetOnlineMetrics", "fleet_inference_step",
-    "run_fleet_offline", "run_fleet_online",
+    "fleet_reuse_step", "run_fleet_offline", "run_fleet_online",
     "AdaptiveRunResult", "DriftAdapter", "DriftConfig", "DriftEvent",
     "ShrinkEvent", "run_adaptive_online",
 ]

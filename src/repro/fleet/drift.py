@@ -122,6 +122,24 @@ class DriftAdapter:
         self._last_resolve_t = -10 ** 9
         self._last_shrink_t = -10 ** 9
         self._breach_start: Optional[int] = None
+        # mask-update listeners: called with the adapter after every
+        # deployed-mask mutation (grow re-solve or adopted shrink).  The
+        # serving layer's temporal-reuse caches register their
+        # ``invalidate`` here so a re-solve can never serve stale packed
+        # activations (the caches' content keys would miss anyway — the
+        # listener makes the invalidation explicit and countable).
+        self._mask_listeners: List = []
+
+    def add_mask_listener(self, fn) -> None:
+        """Register ``fn(adapter)`` to run after every mask mutation
+        (``PackedActivationCache.invalidate`` ignores the argument:
+        ``adapter.add_mask_listener(lambda _: cache.invalidate())``, or
+        pass any callable accepting one positional argument)."""
+        self._mask_listeners.append(fn)
+
+    def _notify_mask_update(self) -> None:
+        for fn in self._mask_listeners:
+            fn(self)
 
     # -- monitoring --------------------------------------------------------
     @property
@@ -208,6 +226,7 @@ class DriftAdapter:
         # the window measured the OLD mask; start the next measurement clean
         self._window.clear()
         self.residual_counts.clear()
+        self._notify_mask_update()
 
     # -- scheduled shrink (full offline re-solve at low-traffic windows) ---
     @property
@@ -271,6 +290,7 @@ class DriftAdapter:
         self._window.clear()
         self.residual_counts.clear()
         self._breach_start = None
+        self._notify_mask_update()
         return True
 
 

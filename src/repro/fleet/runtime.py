@@ -29,7 +29,11 @@ Three jobs:
   layers, one scatter — ≤3 Pallas dispatches per fleet step,
   independent of the group count K and layer count N (the old chain
   paid K×(N+1)).  The dispatch ceiling is asserted via
-  ``ops.count_kernels`` on every step.
+  ``ops.count_kernels`` on every step.  ``fleet_reuse_step`` is the
+  delta-gated variant: the same chain compacted to the CHANGED tiles
+  (one shared ``tile_delta_gate`` pricing dispatch; unchanged tiles
+  composite from the persistent packed-activation cache), keeping the
+  conv ceiling while making compute proportional to scene motion.
 """
 from __future__ import annotations
 
@@ -273,3 +277,54 @@ def fleet_inference_step(det, frames: Dict[int, List],
     assert sum(total.values()) <= 3, \
         f"fleet step must stay within 3 dispatches: {dict(total)}"
     return outs, total
+
+
+def fleet_reuse_step(det, frames: Dict[int, List],
+                     grids: Dict[int, List[np.ndarray]], cache,
+                     threshold: float = 0.0, qstep: float = 8.0):
+    """One delta-gated fleet step: compute proportional to CHANGED tiles.
+
+    Like ``fleet_inference_step`` but through
+    ``RoIDetector.superlaunch_forward_reuse``: one shared
+    ``tile_delta_gate`` dispatch prices every active tile's haloed input
+    window against ``cache`` (a ``serving.detector.PackedActivationCache``
+    — the SAME stats feed the edge rate controller via
+    ``net.encoder.static_fraction_from_stats``, so there is no second
+    delta dispatch per step), the surviving compact set runs the blocked
+    entry + stack chain, and one blocked composite scatter merges cached
+    + fresh tiles.  Returns ({gid: head maps}, dispatch Counter,
+    ReuseStats).  Asserts — every step — the delta-gated dispatch
+    structure:
+
+    * the conv chain keeps the super-launch's ≤3-dispatch ceiling
+      (entry ≤1, stack ≤1, composite scatter = 1);
+    * exactly one gate dispatch on warm steps, none on cold steps (a
+      cold step IS the plain super-launch: cache re-seed);
+    * an all-static frame dispatches only gate + composite scatter;
+    * an all-empty fleet launches nothing."""
+    with kops.count_kernels() as c:
+        outs, stats = det.superlaunch_forward_reuse(frames, grids, cache,
+                                                    threshold, qstep)
+    total: collections.Counter = collections.Counter(c)
+    n_tiles = sum(int(np.count_nonzero(np.asarray(g, bool)))
+                  for gs in grids.values() for g in gs)
+    if n_tiles == 0:
+        expected = {}
+    elif stats.cold:
+        expected = {"roi_conv_entry": 1,
+                    "roi_conv_stack": 1 if det.num_conv_layers > 1 else 0,
+                    "sbnet_scatter_fleet": 1}
+    elif stats.computed == 0:
+        expected = {"tile_delta_gate": 1, "sbnet_scatter_fleet": 1}
+    else:
+        expected = {"tile_delta_gate": 1, "roi_conv_entry": 1,
+                    "roi_conv_stack": 1 if det.num_conv_layers > 1 else 0,
+                    "sbnet_scatter_fleet": 1}
+    expected = {k: v for k, v in expected.items() if v}
+    observed = {k: total[k] for k in expected}
+    assert observed == expected and not set(total) - set(expected), \
+        f"delta-gated dispatch structure broken: {dict(total)}"
+    conv = sum(v for k, v in total.items() if k != "tile_delta_gate")
+    assert conv <= 3, \
+        f"reuse step must keep the ≤3-dispatch conv ceiling: {dict(total)}"
+    return outs, total, stats

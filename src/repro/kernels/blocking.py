@@ -1,0 +1,32 @@
+"""Shared tile-block arithmetic for the blocked kernel walks.
+
+Every blocked walk (``roi_conv_entry``, ``sbnet_scatter_fleet``,
+``tile_delta_gate``) splits its ragged n-tile index space the same way:
+as many grid steps as the VMEM cap demands, then equal-size blocks —
+minimal padding (vs up to 2x duplicate tiles when n is just past a block
+multiple) — with the pad rows repeating the LAST real row so duplicate
+work is inert (entry/gate: duplicate outputs sliced off; scatter:
+idempotent rewrites of the last tile).  One implementation keeps the
+"bit-identical to the per-tile walk" contract from diverging per kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def balanced_split(n: int, block: int) -> "tuple[int, int, int]":
+    """(num_blocks, tile_block, padded_n) for an n-tile walk capped at
+    ``block`` tiles per grid step.  n == 0 yields (1, 1, 0)."""
+    nb = -(-max(n, 1) // max(block, 1))
+    tb = -(-max(n, 1) // nb)
+    return nb, tb, (nb * tb if n else 0)
+
+
+def pad_repeat_last(arr: jax.Array, n_pad: int) -> jax.Array:
+    """Pad ``arr`` to ``n_pad`` leading rows by repeating its last row."""
+    n = arr.shape[0]
+    if n_pad <= n:
+        return arr
+    return jnp.concatenate(
+        [arr, jnp.broadcast_to(arr[-1:], (n_pad - n,) + arr.shape[1:])])

@@ -31,8 +31,11 @@ from repro.kernels.roi_conv import (NEIGHBOR_OFFSETS, roi_conv as _roi_conv,
                                     roi_conv_stack as _roi_conv_stack)
 from repro.kernels.sbnet import sbnet_gather as _gather, \
     sbnet_scatter as _scatter, sbnet_scatter_fleet as _scatter_fleet
-from repro.kernels.tile_delta import (COEF_BITS, RUN_BITS, STATS_WIDTH,
+from repro.kernels.tile_delta import (COEF_BITS, GATE_BODY_BYTES,
+                                      GATE_WIN_BYTES, GATE_WIN_EXACT,
+                                      RUN_BITS, STATS_WIDTH,
                                       tile_delta as _tile_delta,
+                                      tile_delta_gate as _tile_delta_gate,
                                       tile_delta_halo as _tile_delta_halo)
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
@@ -157,6 +160,100 @@ def superlaunch_tables(grids_per_group):
 
 
 # ---------------------------------------------------------------------------
+# temporal reuse: changed-set dilation + compaction (host-side, static)
+# ---------------------------------------------------------------------------
+
+def dilate_changed(changed: np.ndarray, nbr: np.ndarray) -> np.ndarray:
+    """One morphological dilation of a per-tile bool set through the
+    (n, 8) neighbor table: a tile joins the set when any of its in-table
+    neighbors is in it.  The table never references another camera's
+    slots (``fleet_neighbor_table`` offsets are per camera), so dilation
+    respects camera — and therefore group — boundaries by construction."""
+    changed = np.asarray(changed, bool)
+    if changed.size == 0:
+        return changed
+    nbr = np.asarray(nbr)
+    safe = np.clip(nbr, 0, changed.size - 1)
+    return changed | (changed[safe] & (nbr >= 0)).any(axis=1)
+
+
+def reuse_sets(raw_changed: np.ndarray, nbr: np.ndarray,
+               n_layers: int) -> "tuple[np.ndarray, np.ndarray]":
+    """The delta gate's receptive-field bookkeeping.  ``raw_changed``
+    marks tiles whose ENTRY-LAYER INPUT (the haloed window) changed.
+    Returns (changed_out, compute) bool masks:
+
+    * ``changed_out`` — tiles whose FINAL-layer output may differ: the
+      raw set dilated once per packed layer (each packed layer reads a
+      1-tile halo, so change spreads one ring per layer; a reused tile
+      is only bit-safe if its halo donors are static at every depth).
+    * ``compute`` — the tiles the compact launch must convolve:
+      ``changed_out`` dilated once more per packed layer.  The margin
+      absorbs the zero-halo error of compaction: a compact neighbor
+      table zero-halos active tiles outside the set, which corrupts the
+      launch's OUTER rings only — after N-1 packed layers the corruption
+      has walked N-1 tiles inward, so every ``changed_out`` tile (≥ N-1
+      tiles from the compute boundary by construction) is bit-exact.
+      Margin tiles are computed and DISCARDED (the cache keeps their
+      old, still-valid values)."""
+    changed = np.asarray(raw_changed, bool)
+    for _ in range(max(n_layers - 1, 0)):
+        changed = dilate_changed(changed, nbr)
+    compute = changed
+    for _ in range(max(n_layers - 1, 0)):
+        compute = dilate_changed(compute, nbr)
+    return changed, compute
+
+
+def compact_tables(idx: np.ndarray, nbr: np.ndarray, keep: np.ndarray
+                   ) -> "tuple[np.ndarray, np.ndarray]":
+    """Compact the superlaunch tables to the kept tiles: returns
+    (idx[keep], remapped (k, 8) neighbor table).  Kept neighbors are
+    renumbered to compact slots; dropped or inactive neighbors become -1
+    (zero halo) — the compaction the reuse margin is sized for."""
+    idx = np.asarray(idx)
+    nbr = np.asarray(nbr)
+    keep = np.asarray(keep, bool)
+    n = idx.shape[0]
+    pos = np.full(n, -1, np.int64)
+    pos[keep] = np.arange(int(keep.sum()))
+    cnbr = np.where(nbr >= 0, pos[np.clip(nbr, 0, max(n - 1, 0))],
+                    -1).astype(np.int32)
+    return idx[keep].astype(np.int32), cnbr[keep]
+
+
+def choose_block(th: int, tw: int, c: int, n_layers: int,
+                 vmem_bytes: int = 16 * 2 ** 20,
+                 dtype_bytes: int = 4) -> int:
+    """Size the entry/stack/scatter ``block`` (tiles per grid step) from
+    a VMEM budget instead of the hardcoded interpret-mode 128.
+
+    Per resident tile the stack kernel's conv phase holds the assembled
+    (th+2, tw+2, C) window, the center in/out activations, the four rim
+    strips it reads and the four edge strips it stores; the weight plane
+    is (3, 3, C, C) ×2 for the pipeline's layer-(l+1) prefetch (layer
+    count does not change residency — weights are block-indexed by
+    layer — but a 1-layer net has no stack weights at all).  The block
+    is the largest power of two whose double-buffered footprint fits,
+    floored at 1 so degenerate budgets still launch."""
+    c = max(int(c), 1)
+    weights = (2 if n_layers > 1 else 1) * 9 * c * c * dtype_bytes
+    per_tile = ((th + 2) * (tw + 2)          # assembled haloed window
+                + 2 * th * tw                # center in + out
+                + 2 * (tw + 2) + 2 * th      # rim strips read
+                + 2 * tw + 2 * th)           # edge strips stored
+    per_tile *= c * dtype_bytes
+    budget = int(vmem_bytes) - weights
+    if budget < 2 * per_tile:
+        return 1
+    tb = budget // (2 * per_tile)            # double-buffered stages
+    block = 1
+    while block * 2 <= tb and block < 1024:
+        block *= 2
+    return block
+
+
+# ---------------------------------------------------------------------------
 # jit'd kernel entry points (private) + counting public wrappers
 # ---------------------------------------------------------------------------
 
@@ -224,19 +321,25 @@ def roi_conv_fleet(x: jax.Array, w: jax.Array, idx: jax.Array, th: int,
     return _roi_conv_fleet_jit(x, w, idx, th, tw, interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("th", "tw", "interpret"))
-def _roi_conv_entry_jit(x, w, idx, th, tw, interpret=INTERPRET):
-    return _roi_conv_entry(x, w, idx, th, tw, interpret=interpret)
+@functools.partial(jax.jit, static_argnames=("th", "tw", "block",
+                                             "interpret"))
+def _roi_conv_entry_jit(x, w, idx, th, tw, block=1, interpret=INTERPRET):
+    return _roi_conv_entry(x, w, idx, th, tw, block=block,
+                           interpret=interpret)
 
 
 def roi_conv_entry(x: jax.Array, w: jax.Array, idx: jax.Array, th: int,
-                   tw: int, interpret: bool = INTERPRET) -> jax.Array:
+                   tw: int, block: int = 1,
+                   interpret: bool = INTERPRET) -> jax.Array:
     """Fleet-flat fused gather+conv+relu over any number of cameras (and
     groups): (C, H, W, Cin) stacked frames + (n, 3) (flat_cam, ty, tx)
     coords -> relu'd packed (n, th, tw, Cout) — the fused backbone's
-    entry layer, feeding ``roi_conv_stack``."""
+    entry layer, feeding ``roi_conv_stack``.  ``block`` > 1 blocks the
+    tile walk (``choose_block`` sizes it against VMEM): ``block`` haloed
+    windows gathered per grid step, one GEMM per tap per block,
+    bit-identical to the per-tile walk."""
     KERNEL_COUNTS["roi_conv_entry"] += 1
-    return _roi_conv_entry_jit(x, w, idx, th, tw, interpret)
+    return _roi_conv_entry_jit(x, w, idx, th, tw, int(block), interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
@@ -257,17 +360,24 @@ def roi_conv_stack(packed: jax.Array, ws, nbr: jax.Array,
                                interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _sbnet_scatter_fleet_jit(packed, idx, base, interpret=INTERPRET):
-    return _scatter_fleet(packed, idx, base, interpret=interpret)
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _sbnet_scatter_fleet_jit(packed, idx, base, block=1,
+                             interpret=INTERPRET):
+    return _scatter_fleet(packed, idx, base, block=block,
+                          interpret=interpret)
 
 
 def sbnet_scatter_fleet(packed: jax.Array, idx: jax.Array, base: jax.Array,
+                        block: int = 1,
                         interpret: bool = INTERPRET) -> jax.Array:
     """Cross-camera scatter: packed group tiles -> (C, H, W, Cout) stacked
-    frames in ONE launch; untouched regions keep ``base`` values."""
+    frames in ONE launch; untouched regions keep ``base`` values.
+    ``block`` > 1 blocks the tile walk: ``block`` packed tiles arrive per
+    grid step as one contiguous load, bit-identical to the per-tile
+    walk."""
     KERNEL_COUNTS["sbnet_scatter_fleet"] += 1
-    return _sbnet_scatter_fleet_jit(packed, idx, base, interpret)
+    return _sbnet_scatter_fleet_jit(packed, idx, base, int(block),
+                                    interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("th", "tw", "qstep",
@@ -290,6 +400,56 @@ def tile_delta(cur: jax.Array, prev: jax.Array, idx: jax.Array, th: int,
     KERNEL_COUNTS["tile_delta"] += 1
     return _tile_delta_jit(cur, prev, idx, th, tw, float(qstep),
                            int(coef_bits), int(run_bits), interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("th", "tw", "qstep",
+                                             "coef_bits", "run_bits",
+                                             "block", "interpret"))
+def _tile_delta_gate_jit(cur_p, ref_win, idx, th, tw, qstep, coef_bits,
+                         run_bits, block=1, interpret=INTERPRET):
+    return _tile_delta_gate(cur_p, ref_win, idx, th, tw, qstep, coef_bits,
+                            run_bits, block=block, interpret=interpret)
+
+
+def tile_delta_gate(cur_p: jax.Array, ref_win: jax.Array, idx: jax.Array,
+                    th: int, tw: int, qstep: float = 8.0,
+                    coef_bits: int = COEF_BITS, run_bits: int = RUN_BITS,
+                    block: int = 1, interpret: bool = INTERPRET):
+    """The reuse gate's shared delta dispatch: (C, H+2, W+2, Cin)
+    zero-padded stacked fleet frames + (n, th+2, tw+2, Cin) PACKED
+    per-tile reference windows + (n, 3) (cam, ty, tx) coords ->
+    (stats (n, STATS_WIDTH) int32, windows (n, th+2, tw+2, Cin)).
+    Stats cols 0..3 are the BODY stats (identical to ``tile_delta`` when
+    the references hold the previous frame, feeding the rate
+    controller), col GATE_WIN_EXACT the exact bitwise change count of
+    the haloed entry window, col GATE_WIN_BYTES its quantized byte
+    estimate (bit-exact vs ``ref.tile_delta_gate``); ``windows`` holds
+    the CURRENT haloed windows for on-device reference advancement.
+    ONE launch per fleet step serves both the reuse gate and the
+    encoder's static-tile calibration.  ``block`` > 1 blocks the
+    pricing walk like the blocked entry kernel."""
+    KERNEL_COUNTS["tile_delta_gate"] += 1
+    return _tile_delta_gate_jit(cur_p, ref_win, idx, th, tw, float(qstep),
+                                int(coef_bits), int(run_bits),
+                                int(block), interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("th", "tw"))
+def gather_windows(xp: jax.Array, idx: jax.Array, th: int,
+                   tw: int) -> jax.Array:
+    """Gather the packed (n, th+2, tw+2, Cin) haloed windows of the
+    active tiles from a zero-padded (C, H+2, W+2, Cin) stacked canvas —
+    the seed of the gate's per-tile reference windows (pure jnp table
+    plumbing, not a counted kernel dispatch; warm steps advance
+    references from the gate's own windows output instead)."""
+    cin = xp.shape[-1]
+
+    def take(row):
+        return jax.lax.dynamic_slice(
+            xp, (row[0], row[1] * th, row[2] * tw, 0),
+            (1, th + 2, tw + 2, cin))[0]
+
+    return jax.vmap(take)(idx)
 
 
 @functools.partial(jax.jit, static_argnames=("th", "tw", "qstep",
@@ -399,11 +559,14 @@ def attention_visit_bound(positions: np.ndarray, block_q: int = 128,
 
 
 __all__ = ["mask_to_indices", "neighbor_table", "fleet_indices",
-           "fleet_neighbor_table", "superlaunch_tables", "sbnet_gather",
+           "fleet_neighbor_table", "superlaunch_tables", "dilate_changed",
+           "reuse_sets", "compact_tables", "choose_block", "sbnet_gather",
            "sbnet_scatter", "sbnet_scatter_fleet", "roi_conv",
            "roi_conv_entry", "roi_conv_fleet", "roi_conv_packed",
            "roi_conv_stack", "roi_conv_batched", "tile_delta",
-           "tile_delta_halo", "STATS_WIDTH", "pack_tokens",
+           "tile_delta_gate", "gather_windows", "tile_delta_halo",
+           "GATE_BODY_BYTES",
+           "GATE_WIN_BYTES", "GATE_WIN_EXACT", "STATS_WIDTH", "pack_tokens",
            "unpack_tokens", "roi_attention", "attention_visit_bound",
            "block_min_positions", "KERNEL_COUNTS", "count_kernels",
            "PAD_POS", "ref"]

@@ -150,6 +150,49 @@ def tile_delta(cur, prev, idx, th: int, tw: int, qstep: float = 8.0,
     return out
 
 
+def tile_delta_gate(cur, prev, idx, th: int, tw: int, qstep: float = 8.0,
+                    coef_bits: int = 6, run_bits: int = 10):
+    """Numpy oracle for ``kernels/tile_delta.tile_delta_gate``: per active
+    tile of a stacked fleet, the BODY delta stats (cols 0..3, identical
+    to ``tile_delta`` on that camera) plus the HALOED-WINDOW stats the
+    temporal reuse gate thresholds — col 4 the exact bitwise change count
+    of the (th+2, tw+2, C) window, col 5 its quantized byte estimate.
+
+    cur, prev: UNPADDED (C, H, W, Cin) stacked frames (the oracle applies
+    the same zero padding the kernel's callers do); idx: (n, 3) int32
+    (cam, ty, tx).  Bit-exact contract."""
+    import numpy as np
+    cur = np.asarray(cur, np.float32)
+    prev = np.asarray(prev, np.float32)
+    idx = np.asarray(idx)
+    pad = ((0, 0), (1, 1), (1, 1), (0, 0))
+    cur_p = np.pad(cur, pad)
+    prev_p = np.pad(prev, pad)
+
+    def stats(c, p):
+        rows = c.shape[0]
+        q = np.round((c - p) / np.float32(qstep)).astype(np.int32)
+        z2 = (q == 0).reshape(rows, -1)
+        nnz = int((~z2).sum())
+        left = np.concatenate([np.zeros((rows, 1), bool), z2[:, :-1]],
+                              axis=1)
+        runs = int((z2 & ~left).sum())
+        return ((nnz * coef_bits + runs * run_bits + 7) // 8, nnz, runs,
+                int(np.abs(q).sum()))
+
+    out = np.zeros((idx.shape[0], 8), np.int32)
+    for i, (cam, ty, tx) in enumerate(idx):
+        cw = cur_p[cam, ty * th:ty * th + th + 2,
+                   tx * tw:tx * tw + tw + 2, :]
+        pw = prev_p[cam, ty * th:ty * th + th + 2,
+                    tx * tw:tx * tw + tw + 2, :]
+        b = stats(cw[1:1 + th, 1:1 + tw], pw[1:1 + th, 1:1 + tw])
+        w = stats(cw, pw)
+        out[i] = [b[0], b[1], b[2], b[3], int((cw != pw).sum()), w[0],
+                  0, 0]
+    return out
+
+
 def tile_delta_halo(cur, prev, idx, th: int, tw: int, qstep: float = 8.0,
                     coef_bits: int = 6, run_bits: int = 10):
     """Numpy oracle for ``kernels/tile_delta.tile_delta_halo``: delta

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.blocking import balanced_split, pad_repeat_last
+
 # pltpu.TPUMemorySpace was renamed MemorySpace across jax versions
 _MEMSPACE = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
 
@@ -248,17 +250,83 @@ def assemble_rims(packed: jax.Array, nbr: jax.Array):
     return rt, rb, rl, rr
 
 
+def _roi_conv_entry_block_kernel(idx_ref, x_ref, w_ref, o_ref, *, th: int,
+                                 tw: int, tb: int):
+    """Blocked entry walk: one grid step gathers ``tb`` haloed windows
+    (each a dynamic-start static-size block DMA off the stacked frames)
+    and convolves them as ONE (tb*th*tw, Cin) GEMM per tap.  Output rows
+    are independent dot products, so every tile's values are bitwise
+    identical to the per-tile walk (``_roi_conv_fleet_kernel``)."""
+    b = pl.program_id(0)
+    cout = o_ref.shape[-1]
+    wins = []
+    for j in range(tb):
+        cam = idx_ref[b * tb + j, 0]
+        ty = idx_ref[b * tb + j, 1]
+        tx = idx_ref[b * tb + j, 2]
+        wins.append(pl.load(
+            x_ref, (pl.ds(cam, 1), pl.ds(ty * th, th + 2),
+                    pl.ds(tx * tw, tw + 2), slice(None)))[0])
+    win = jnp.stack(wins)                       # (tb, th+2, tw+2, cin)
+    cin = win.shape[-1]
+    acc = jnp.zeros((tb * th * tw, cout), jnp.float32)
+    for dy in range(3):
+        for dx in range(3):
+            patch = win[:, dy:dy + th, dx:dx + tw, :].reshape(
+                tb * th * tw, cin)
+            acc += patch.astype(jnp.float32) @ w_ref[dy, dx].astype(
+                jnp.float32)
+    o = jnp.maximum(acc, 0.0).reshape(tb, th, tw, cout)
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
 def roi_conv_entry(x: jax.Array, w: jax.Array, idx: jax.Array, th: int,
-                   tw: int, *, interpret: bool = True) -> jax.Array:
+                   tw: int, *, block: int = 1,
+                   interpret: bool = True) -> jax.Array:
     """The fused backbone's entry layer: gather + 3x3 conv + ReLU in ONE
     launch for any number of cameras (and camera groups — the (n, 3)
     (flat_cam, ty, tx) index space is oblivious to how cameras are
     grouped).  x: (C, H, W, Cin) stacked frames; w: (3, 3, Cin, Cout);
     idx: (n, 3).  Returns relu'd packed (n, th, tw, Cout) — relu is
     idempotent, so callers may re-apply it bit-identically.  The packed
-    output feeds ``roi_conv_stack`` for every remaining layer."""
-    return _fleet_conv_call(x, w, idx, th, tw, fuse_relu=True,
-                            interpret=interpret)
+    output feeds ``roi_conv_stack`` for every remaining layer.
+
+    ``block`` > 1 blocks the tile walk like the stack kernel: grid =
+    (tile_block,), each step gathering ``block`` haloed windows and
+    running (block*th*tw, Cin) GEMMs — fewer grid steps and larger
+    coalesced gather DMAs, bit-identical to the per-tile walk (size it
+    with ``ops.choose_block``).  The index list is padded up with
+    repeats of its last row; the duplicate rows' outputs land past ``n``
+    and are sliced off."""
+    n = idx.shape[0]
+    if block <= 1 or n == 0:
+        return _fleet_conv_call(x, w, idx, th, tw, fuse_relu=True,
+                                interpret=interpret)
+    C, H, W, Cin = x.shape
+    Cout = w.shape[-1]
+    nb, tb, n_pad = balanced_split(n, block)
+    idx_p = pad_repeat_last(idx, n_pad)
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    kernel = functools.partial(_roi_conv_entry_block_kernel, th=th, tw=tw,
+                               tb=tb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_pad // tb,),
+        in_specs=[
+            pl.BlockSpec(memory_space=_MEMSPACE.ANY),
+            pl.BlockSpec((3, 3, Cin, Cout),
+                         lambda b, idx_ref: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, th, tw, Cout),
+                               lambda b, idx_ref: (b, 0, 0, 0)),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_pad, th, tw, Cout), x.dtype),
+        interpret=interpret,
+    )(idx_p, xp, w)
+    return out[:n]
 
 
 def _roi_conv_stack_kernel(nbr_ref, p0_ref, rt0, rb0, rl0, rr0, w_ref,

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.blocking import balanced_split, pad_repeat_last
+
 # pltpu.TPUMemorySpace was renamed MemorySpace across jax versions
 _MEMSPACE = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
 
@@ -85,14 +87,65 @@ def sbnet_scatter(packed: jax.Array, idx: jax.Array, base: jax.Array,
     )(idx, packed, base)
 
 
+def _scatter_fleet_block_kernel(idx_ref, p_ref, b_ref, o_ref, *, th: int,
+                                tw: int, tb: int):
+    """Blocked scatter walk: one grid step receives a whole (tb, th, tw,
+    C) packed block as ONE contiguous DMA (the read-side analogue of the
+    stack kernel's contiguous-store rim scheme) and fans it out with
+    ``tb`` per-tile dynamic stores.  Padding rows repeat the last real
+    (idx, tile) pair, so their stores rewrite identical bytes — no trash
+    plane, no masked stores."""
+    b = pl.program_id(0)
+    blk = p_ref[...]                             # (tb, th, tw, C)
+    for j in range(tb):
+        cam = idx_ref[b * tb + j, 0]
+        ty = idx_ref[b * tb + j, 1]
+        tx = idx_ref[b * tb + j, 2]
+        pl.store(o_ref, (pl.ds(cam, 1), pl.ds(ty * th, th),
+                         pl.ds(tx * tw, tw), slice(None)),
+                 blk[j][None])
+
+
 def sbnet_scatter_fleet(packed: jax.Array, idx: jax.Array, base: jax.Array,
-                        *, interpret: bool = True) -> jax.Array:
+                        *, block: int = 1,
+                        interpret: bool = True) -> jax.Array:
     """Cross-camera scatter: ONE launch materializes a whole camera group.
 
     packed: (n, th, tw, C); idx: (n, 3) int32 (cam, ty, tx); base:
     (num_cams, H, W, C) stacked frames.  Writes tile i into camera
-    idx[i, 0]'s plane; untouched regions keep base values."""
+    idx[i, 0]'s plane; untouched regions keep base values.
+
+    ``block`` > 1 blocks the tile walk (grid = (tile_block,)): each step
+    pulls ``block`` packed tiles in one contiguous load and issues their
+    stores back-to-back — same per-tile write pattern, 1/block the grid
+    steps.  Both index list and packed tensor are padded with repeats of
+    their last row, so padding stores are idempotent rewrites of the last
+    real tile (bit-identical to the per-tile walk by construction)."""
     n, th, tw, C = packed.shape
+    if block > 1 and n > 0:
+        nb, tb, n_pad = balanced_split(n, block)
+        idx = pad_repeat_last(idx, n_pad)
+        packed = pad_repeat_last(packed, n_pad)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_pad // tb,),
+            in_specs=[
+                pl.BlockSpec((tb, th, tw, C),
+                             lambda b, idx_ref: (b, 0, 0, 0)),
+                # aliased seed only — ANY avoids a whole-canvas DMA/step
+                pl.BlockSpec(memory_space=_MEMSPACE.ANY),
+            ],
+            out_specs=pl.BlockSpec(memory_space=_MEMSPACE.ANY),
+        )
+        kernel = functools.partial(_scatter_fleet_block_kernel, th=th,
+                                   tw=tw, tb=tb)
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct(base.shape, base.dtype),
+            input_output_aliases={2: 0},   # (idx, packed, base) -> out
+            interpret=interpret,
+        )(idx, packed, base)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(n,),

@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.blocking import balanced_split, pad_repeat_last
+
 # pltpu.TPUMemorySpace was renamed MemorySpace across jax versions
 _MEMSPACE = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
 
@@ -43,6 +45,18 @@ COEF_BITS = 6
 RUN_BITS = 10
 
 STATS_WIDTH = 8          # output lane padding; cols 0..3 are live
+
+# ``tile_delta_gate`` stats-row columns.  Cols 0..3 are the BODY stats and
+# match ``tile_delta`` / ``ref.tile_delta`` bit for bit (so the rate
+# controller can threshold the shared dispatch exactly as before); cols
+# 4..5 are the HALOED-WINDOW stats the temporal reuse gate thresholds.
+GATE_BODY_BYTES = 0
+GATE_BODY_NNZ = 1
+GATE_BODY_RUNS = 2
+GATE_BODY_SABS = 3
+GATE_WIN_EXACT = 4       # exact count of (th+2, tw+2, C) positions that
+#                          differ bitwise — the threshold-0 gate signal
+GATE_WIN_BYTES = 5       # quantized zero-run byte estimate of the window
 
 
 def _tile_stats(cur: jax.Array, prev: jax.Array, qstep: float,
@@ -105,6 +119,133 @@ def tile_delta(cur: jax.Array, prev: jax.Array, idx: jax.Array, th: int,
         out_shape=jax.ShapeDtypeStruct((n, STATS_WIDTH), jnp.int32),
         interpret=interpret,
     )(idx, cur, prev)
+
+
+# ---------------------------------------------------------------------------
+# reuse-gate delta pricing (haloed input windows on the stacked fleet)
+# ---------------------------------------------------------------------------
+#
+# The temporal reuse gate (serving/detector.fleet_forward_reuse) must know
+# whether a tile's ENTRY-LAYER INPUT changed — that is the (th+2, tw+2)
+# haloed window the fused gather+conv reads, not just the (th, tw) body:
+# a pixel flip in an *inactive* neighbor tile changes an active tile's
+# conv output through the 1-px halo, and only the window view sees it.
+# One kernel prices both views per tile so the rate controller (body
+# stats, cols 0..3, bit-compatible with ``tile_delta``) and the reuse
+# gate (window stats, cols 4..5) share a single dispatch per fleet step.
+# The current frame arrives zero-PADDED (C, H+2, W+2, Cin) so every
+# window load is a static-size in-bounds slice (pad-ring deltas are 0-0;
+# the numpy reference ``ref.tile_delta_gate`` mirrors the padding); the
+# comparison side is a PACKED (n, th+2, tw+2, Cin) per-tile reference —
+# each tile's window content as of ITS last refresh — and the kernel
+# additionally emits the current windows so callers advance refreshed
+# tiles' references with one on-device row update.
+
+
+def _batched_stats(cur, prev, qstep: float, coef_bits: int,
+                   run_bits: int):
+    """(tb, rows, cols, C) window-pair block -> per-tile (bytes, nnz,
+    runs) int32 vectors, the same integer math as ``_tile_stats`` with
+    the tile axis batched (one VPU pass for the whole block instead of
+    ``tb`` unrolled scans)."""
+    tb, rows = cur.shape[0], cur.shape[1]
+    q = jnp.round((cur.astype(jnp.float32) - prev.astype(jnp.float32))
+                  / qstep).astype(jnp.int32)
+    z2 = (q == 0).reshape(tb, rows, -1)
+    nnz = jnp.sum((~z2).astype(jnp.int32), axis=(1, 2))
+    left = jnp.concatenate(
+        [jnp.zeros((tb, rows, 1), bool), z2[:, :, :-1]], axis=2)
+    runs = jnp.sum((z2 & ~left).astype(jnp.int32), axis=(1, 2))
+    nbytes = (nnz * coef_bits + runs * run_bits + 7) // 8
+    return nbytes, nnz, runs, jnp.sum(jnp.abs(q), axis=(1, 2, 3))
+
+
+def _tile_delta_gate_kernel(idx_ref, cur_ref, ref_ref, o_ref, w_ref, *,
+                            th: int, tw: int, tb: int, qstep: float,
+                            coef_bits: int, run_bits: int):
+    b = pl.program_id(0)
+    curs = []
+    for j in range(tb):
+        cam = idx_ref[b * tb + j, 0]
+        ty = idx_ref[b * tb + j, 1]
+        tx = idx_ref[b * tb + j, 2]
+        # the haloed (th+2, tw+2, C) window: on the padded plane the
+        # window of tile (ty, tx) starts at (ty*th, tx*tw)
+        sel = (pl.ds(cam, 1), pl.ds(ty * th, th + 2),
+               pl.ds(tx * tw, tw + 2), slice(None))
+        curs.append(pl.load(cur_ref, sel)[0])
+    cur = jnp.stack(curs)                    # (tb, th+2, tw+2, C)
+    prev = ref_ref[...]                      # the block's PACKED refs
+    body = _batched_stats(cur[:, 1:1 + th, 1:1 + tw],
+                          prev[:, 1:1 + th, 1:1 + tw], qstep, coef_bits,
+                          run_bits)
+    # window stats: quantized byte estimate (rows = th+2 scan rows, same
+    # row-independent run rule as the body) + the EXACT bitwise change
+    # count the threshold-0 gate keys on (quantization rounds small
+    # deltas to zero; bit-identity needs the raw comparison)
+    win_bytes, _, _, _ = _batched_stats(cur, prev, qstep, coef_bits,
+                                        run_bits)
+    exact = jnp.sum((cur != prev).astype(jnp.int32), axis=(1, 2, 3))
+    out = jnp.zeros((tb, STATS_WIDTH), jnp.int32)
+    out = out.at[:, 0].set(body[0]).at[:, 1].set(body[1]) \
+             .at[:, 2].set(body[2]).at[:, 3].set(body[3]) \
+             .at[:, GATE_WIN_EXACT].set(exact) \
+             .at[:, GATE_WIN_BYTES].set(win_bytes)
+    o_ref[...] = out
+    w_ref[...] = cur                         # current windows, packed
+
+
+def tile_delta_gate(cur_p: jax.Array, ref_win: jax.Array, idx: jax.Array,
+                    th: int, tw: int, qstep: float = 8.0,
+                    coef_bits: int = COEF_BITS, run_bits: int = RUN_BITS,
+                    *, block: int = 1, interpret: bool = True):
+    """cur_p: (C, H+2, W+2, Cin) zero-padded stacked fleet frames;
+    ref_win: (n, th+2, tw+2, Cin) PACKED per-tile reference windows (each
+    tile's haloed window content as of that tile's last refresh — packed
+    rows, not a canvas, so one tile's reference can never alias a
+    neighbor's through the window overlap); idx: (n, 3) int32
+    (cam, ty, tx) coords.  Returns (stats, windows): stats (n,
+    STATS_WIDTH) int32 rows — cols 0..3 the BODY delta stats (equal to
+    ``tile_delta`` when the references hold the previous frame), col 4
+    the exact bitwise change count of the haloed window, col 5 its
+    quantized byte estimate — and windows (n, th+2, tw+2, Cin), the
+    CURRENT haloed windows, so callers advance references with a pure
+    on-device ``.at[rows].set(windows[rows])`` (no second gather, no
+    host round-trip).  Bit-exact vs ``ref.tile_delta_gate``.  ``block``
+    > 1 blocks the walk exactly like the blocked entry kernel."""
+    n = idx.shape[0]
+    nb, tb, n_pad = balanced_split(n, block)
+    idx = pad_repeat_last(idx, n_pad)
+    ref_win = pad_repeat_last(ref_win, n_pad)
+    Cin = cur_p.shape[-1]
+    kernel = functools.partial(_tile_delta_gate_kernel, th=th, tw=tw,
+                               tb=tb, qstep=qstep, coef_bits=coef_bits,
+                               run_bits=run_bits)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_pad // tb,),
+        in_specs=[
+            pl.BlockSpec(memory_space=_MEMSPACE.ANY),
+            pl.BlockSpec((tb, th + 2, tw + 2, Cin),
+                         lambda b, idx_ref: (b, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, STATS_WIDTH), lambda b, idx_ref: (b, 0)),
+            pl.BlockSpec((tb, th + 2, tw + 2, Cin),
+                         lambda b, idx_ref: (b, 0, 0, 0)),
+        ],
+    )
+    stats, wins = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, STATS_WIDTH), jnp.int32),
+            jax.ShapeDtypeStruct((n_pad, th + 2, tw + 2, Cin),
+                                 cur_p.dtype),
+        ],
+        interpret=interpret,
+    )(idx, cur_p, ref_win)
+    return stats[:n], wins[:n]
 
 
 # ---------------------------------------------------------------------------

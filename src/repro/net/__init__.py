@@ -17,6 +17,7 @@ from repro.net.encoder import (CameraCoefficients, RateControlConfig,
                                activity, camera_coefficients,
                                rate_controlled_departures,
                                segment_byte_matrices, sent_matrix,
+                               static_fraction_from_stats,
                                tile_halo_static_fraction,
                                tile_static_fraction, zero_safe_div)
 from repro.net.batcher import (DeadlineGroupFormer, NetConfig, Release,
@@ -28,8 +29,8 @@ __all__ = [
     "default_congestion_trace", "fifo_departures", "queue_wait",
     "CameraCoefficients", "RateControlConfig", "activity",
     "camera_coefficients", "rate_controlled_departures",
-    "segment_byte_matrices", "sent_matrix", "tile_halo_static_fraction",
-    "tile_static_fraction", "zero_safe_div",
+    "segment_byte_matrices", "sent_matrix", "static_fraction_from_stats",
+    "tile_halo_static_fraction", "tile_static_fraction", "zero_safe_div",
     "DeadlineGroupFormer", "NetConfig", "Release", "TransportStats",
     "merge_transport", "simulate_transport",
 ]

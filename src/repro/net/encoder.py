@@ -201,23 +201,47 @@ def rate_controlled_departures(arrivals: np.ndarray, body: np.ndarray,
 # on-device static-tile estimation (the tile_delta kernel's consumer)
 # ---------------------------------------------------------------------------
 
+def static_fraction_from_stats(stats, n_channels: int, tile: int,
+                               static_ratio: float = 0.10) -> float:
+    """Body-byte static fraction from PRECOMPUTED delta stats rows —
+    the zero-dispatch half of the shared-pricing contract.  ``stats`` is
+    any (n, STATS_WIDTH) row block whose col 0 is the body byte estimate:
+    ``tile_delta`` output, or the fleet step's ``tile_delta_gate`` output
+    (``ReuseStats.gate_stats``, whose body cols are bit-identical), or a
+    per-camera slice of either.  No kernel launch happens here, so the
+    reuse gate and the rate controller share ONE delta dispatch per
+    step."""
+    stats = np.asarray(stats)
+    if stats.shape[0] == 0:
+        return 0.0
+    from repro.kernels import ops as kops
+    dense_bytes = tile * tile * n_channels * kops.COEF_BITS / 8.0
+    return float(np.mean(stats[:, 0] <= static_ratio * dense_bytes))
+
+
 def tile_static_fraction(cur, prev, grid: np.ndarray, tile: int,
-                         qstep: float = 8.0, static_ratio: float = 0.10
-                         ) -> float:
+                         qstep: float = 8.0, static_ratio: float = 0.10,
+                         stats=None) -> float:
     """Fraction of a camera's RoI tiles whose quantized temporal delta
     prices below ``static_ratio`` of the dense tile cost — the
     ``static_fraction`` feed for the rate controller.  One ``tile_delta``
-    kernel launch per call (observable in ``ops.KERNEL_COUNTS``).
+    kernel launch per call (observable in ``ops.KERNEL_COUNTS``) —
+    UNLESS ``stats`` carries precomputed rows (e.g. the fleet reuse
+    gate's shared ``tile_delta_gate`` output), in which case no kernel
+    is dispatched at all.
 
     The kernel import is local so the rest of this module (and the core
     pipeline that prices through it) stays numpy-only at import time."""
+    C = np.asarray(cur).shape[-1]
+    if stats is not None:
+        return static_fraction_from_stats(stats, C, tile,
+                                          static_ratio=static_ratio)
     from repro.kernels import ops as kops
     idx = kops.mask_to_indices(np.asarray(grid, bool))
     if idx.shape[0] == 0:
         return 0.0
     stats = np.asarray(kops.tile_delta(cur, prev, idx, tile, tile,
                                        qstep=qstep))
-    C = np.asarray(cur).shape[-1]
     dense_bytes = tile * tile * C * kops.COEF_BITS / 8.0
     return float(np.mean(stats[:, 0] <= static_ratio * dense_bytes))
 

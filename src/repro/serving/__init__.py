@@ -1,4 +1,6 @@
 from repro.serving.engine import ServingEngine, Request, RoIPrefillResult
-from repro.serving.detector import RoIDetector
+from repro.serving.detector import (PackedActivationCache, ReuseStats,
+                                    RoIDetector)
 
-__all__ = ["ServingEngine", "Request", "RoIPrefillResult", "RoIDetector"]
+__all__ = ["ServingEngine", "Request", "RoIPrefillResult", "RoIDetector",
+           "PackedActivationCache", "ReuseStats"]

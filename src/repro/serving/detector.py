@@ -15,6 +15,13 @@ old SBNet formulation paid a full-frame scatter + HBM re-slice per layer;
 the per-layer packed chain still exists as ``roi_forward_layers`` /
 ``fleet_forward_layers`` (the bit-identical A/B baseline).
 
+``fleet_forward_reuse`` adds the TEMPORAL axis: one ``tile_delta_gate``
+pricing dispatch thresholds each active tile's haloed entry window
+against the previous frame, the changed set is dilated per layer
+(``ops.reuse_sets``) and compacted into the launch tables, and unchanged
+tiles composite from a persistent ``PackedActivationCache`` — compute
+proportional to scene motion, bit-identical at threshold 0.
+
 Dense fallback (the paper loads both models and routes large-RoI frames to
 dense YOLO) selected by the density switch.
 
@@ -46,6 +53,90 @@ class DetectorConfig:
     tile: int = 16                            # feature-map tile (TPU block)
     num_anchors: int = 2
     switch_density: float = 0.70
+    # VMEM budget the entry/stack/scatter tile-block is sized against
+    # (ops.choose_block); 16 MiB = one TPU core's VMEM.
+    vmem_budget_bytes: int = 16 * 2 ** 20
+
+
+@dataclass
+class ReuseStats:
+    """Per-step accounting of the delta-gated (temporal reuse) path."""
+    total_tiles: int               # active tiles across the fleet
+    raw_changed: int               # tiles whose haloed input window changed
+    changed_out: int               # ... dilated once per packed layer (the
+    #                                tiles whose final output may differ)
+    computed: int                  # compact-set tiles (changed_out + the
+    #                                zero-halo margin) — the semantic
+    #                                quantity the dilation bound describes;
+    #                                0 = all-static, scatter-only step
+    launched: int                  # tiles the launch ACTUALLY convolved:
+    #                                ``computed`` padded to its power-of-
+    #                                two shape bucket (inert rows are real
+    #                                GEMM work — honest perf accounting
+    #                                uses this one)
+    cold: bool                     # cache miss: full recompute, no gate
+    # the step's shared tile_delta_gate stats rows ((n, STATS_WIDTH)
+    # int32 in fleet packing order, None on a cold step) — hand these to
+    # net/encoder.static_fraction_from_stats so the rate controller
+    # prices static tiles WITHOUT a second delta dispatch.  At threshold
+    # 0 the references hold the previous frame, so the body cols are
+    # exactly ``tile_delta(cur, prev)``; under a LOSSY threshold they
+    # are deltas vs each tile's LAST-REFRESH content instead — the same
+    # change measure the reuse decision itself uses (a tile priced
+    # static is one whose content still matches what its cached
+    # activations were built from; content oscillating back to that
+    # reference prices low even if it moved in between)
+    gate_stats: Optional[np.ndarray] = None
+
+
+class PackedActivationCache:
+    """Per-fleet persistent packed-activation cache for temporal reuse.
+
+    Holds the final conv layer's packed (n, th, tw, C_last) activations
+    for EVERY active tile of the fleet, plus PACKED per-tile reference
+    windows (``ref_win``, (n, th+2, tw+2, 3)) the delta gate compares
+    against.  References are packed rows, not a canvas, so each tile's
+    reference is exactly its haloed window content as of ITS last
+    refresh — one tile's advance can never alias a neighbor's reference
+    through the window overlap.  At threshold 0 every row advances each
+    step (equivalent to previous-frame comparison: unchanged windows are
+    bitwise equal to their reference); under a lossy threshold only
+    refreshed tiles' rows advance, so each tile's sub-threshold drift
+    ACCUMULATES against its own reference and trips the gate once it
+    crosses the threshold instead of creeping into the cache
+    unboundedly.  Content-keyed on the fleet's grid digests and canvas
+    shape, so any mask change — a drift re-solve, a shrink adoption, a
+    different camera set — misses the key and forces a full recompute;
+    ``invalidate`` is the explicit hook ``fleet/drift.DriftAdapter``
+    mask listeners call for the same effect (belt and braces: the
+    digest key alone already invalidates)."""
+
+    def __init__(self):
+        self.key: Optional[tuple] = None
+        self.packed: Optional[jax.Array] = None   # (n, th, tw, C_last)
+        self.ref_win: Optional[jax.Array] = None  # (n, th+2, tw+2, 3)
+        self.idx_np: Optional[np.ndarray] = None  # (n, 3) static tables
+        self.nbr_np: Optional[np.ndarray] = None  # (n, 8)
+        self.invalidations = 0
+        self.steps = 0
+        self.cold_steps = 0
+        self.launched_tiles = 0
+        self.total_tiles = 0
+
+    def invalidate(self) -> None:
+        """Drop all cached state; the next reuse step recomputes fully."""
+        self.key = None
+        self.packed = None
+        self.ref_win = None
+        self.idx_np = None
+        self.nbr_np = None
+        self.invalidations += 1
+
+    @property
+    def compute_fraction(self) -> float:
+        """Lifetime convolved-tile fraction vs full recompute (padding
+        rows included — they are real launched GEMM work)."""
+        return self.launched_tiles / max(self.total_tiles, 1)
 
 
 class RoIDetector:
@@ -82,6 +173,22 @@ class RoIDetector:
         self.grid_hash_computes = 0       # digest serializations performed
         self.mask_cache_hits = 0
         self.fleet_cache_hits = 0
+        # tile-block for the blocked walks, sized against the VMEM budget
+        # (closes the "calibrate block vs VMEM" item; the old hardcoded
+        # interpret-mode default was 128)
+        self.block = kops.choose_block(
+            cfg.tile, cfg.tile, max(chans), len(cfg.channels),
+            cfg.vmem_budget_bytes)
+        # entry/scatter block: on hardware the blocked walks are the
+        # point (larger coalesced DMAs, fewer grid steps), but under the
+        # interpreter their in-kernel load/store loops lose to the
+        # per-tile BlockSpec pipeline — keep entry/scatter per-tile
+        # there so the PR-4 super-launch wall clock does not regress.
+        # The stack megakernel keeps its block everywhere (it always had
+        # one), and the gate stays blocked in both modes: its batched
+        # stats make one grid step per block a measured win even
+        # interpreted.
+        self.chain_block = 1 if kops.INTERPRET else self.block
 
     # -- dense path ----------------------------------------------------------
     def dense_forward(self, x: jax.Array) -> jax.Array:
@@ -152,9 +259,11 @@ class RoIDetector:
         the layer-stack megakernel.  2 dispatches for any layer count
         > 1, 1 for a single-layer net."""
         t = self.cfg.tile
-        packed = kops.roi_conv_entry(x, self.weights[0], idx3, t, t)
+        packed = kops.roi_conv_entry(x, self.weights[0], idx3, t, t,
+                                     block=self.chain_block)
         if len(self.weights) > 1:
-            packed = kops.roi_conv_stack(packed, self.weights[1:], nbr)
+            packed = kops.roi_conv_stack(packed, self.weights[1:], nbr,
+                                         block=self.block)
         return packed
 
     def roi_forward(self, x: jax.Array, grid: np.ndarray) -> jax.Array:
@@ -222,7 +331,8 @@ class RoIDetector:
         packed = self._stack_chain(x, idx, nbr)
         base = jnp.zeros((len(frames), canvas_h, canvas_w,
                           packed.shape[-1]), packed.dtype)
-        full = kops.sbnet_scatter_fleet(packed, idx, base)
+        full = kops.sbnet_scatter_fleet(packed, idx, base,
+                                        block=self.chain_block)
         heads = full @ self.head
         return [heads[c, :f.shape[0], :f.shape[1]]
                 for c, f in enumerate(frames)]
@@ -270,6 +380,147 @@ class RoIDetector:
             out[g] = heads[pos:pos + len(frames[g])]
             pos += len(frames[g])
         return out
+
+    # -- temporal reuse (delta-gated) path ------------------------------------
+    def fleet_forward_reuse(self, frames: List[jax.Array],
+                            grids: List[np.ndarray],
+                            cache: PackedActivationCache,
+                            threshold: float = 0.0,
+                            qstep: float = 8.0
+                            ) -> Tuple[List[jax.Array], ReuseStats]:
+        """``fleet_forward`` with compute proportional to CHANGED tiles.
+
+        One shared ``tile_delta_gate`` dispatch prices every active
+        tile's haloed entry window against the cached previous frame; a
+        tile is *changed* when its window byte estimate exceeds
+        ``threshold`` (at threshold <= 0 the exact bitwise change count
+        gates instead, making reuse BIT-IDENTICAL to full recompute).
+        The changed set is dilated once per packed layer into the
+        changed-OUTPUT set, once more per layer into the compute margin
+        (``ops.reuse_sets``), compacted into the superlaunch tables
+        (``ops.compact_tables``) and run through the blocked entry +
+        stack chain; unchanged tiles serve their final activations from
+        ``cache``, and one blocked ``sbnet_scatter_fleet`` composites
+        cached + fresh tiles.  An all-static frame dispatches only the
+        gate and the composite scatter; a cache miss (first frame, mask
+        re-solve, canvas change) recomputes fully and seeds the cache.
+        """
+        t = self.cfg.tile
+        idx, nbr = self._fleet_tables(grids)
+        n = int(idx.shape[0])
+        if n == 0:                        # whole fleet empty: no launches
+            return ([jnp.zeros(f.shape[:2] + (self.head.shape[-1],),
+                               f.dtype) for f in frames],
+                    ReuseStats(0, 0, 0, 0, 0, cold=False))
+        x, canvas_h, canvas_w = self._stack_frames(frames, grids)
+        xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+        key = (tuple(self._grid_digest(g) for g in grids),
+               len(frames), canvas_h, canvas_w)
+        n_layers = self.num_conv_layers
+        cache.steps += 1
+        cache.total_tiles += n
+        cold = (cache.key != key or cache.packed is None
+                or cache.ref_win is None)
+        if cold:
+            # miss: mask/canvas changed (or first frame) — recompute all
+            # tiles through the fused chain and seed the cache tables
+            cache.key = key
+            cache.packed = self._stack_chain(x, idx, nbr)
+            cache.ref_win = kops.gather_windows(xp, idx, t, t)
+            cache.idx_np = np.asarray(idx)
+            cache.nbr_np = np.asarray(nbr)
+            cache.cold_steps += 1
+            cache.launched_tiles += n
+            stats = ReuseStats(n, n, n, n, n, cold=True)
+        else:
+            gate, windows = kops.tile_delta_gate(
+                xp, cache.ref_win, idx, t, t, qstep=qstep,
+                block=self.block)
+            s = np.asarray(gate)
+            if threshold <= 0:
+                # exact gate: quantization rounds small deltas to zero
+                # and even an all-zero delta prices its run tokens, so
+                # bit-identity keys on the raw bitwise comparison
+                raw = s[:, kops.GATE_WIN_EXACT] > 0
+            else:
+                raw = s[:, kops.GATE_WIN_BYTES] > threshold
+            changed, compute = kops.reuse_sets(raw, cache.nbr_np,
+                                               n_layers)
+            n_changed = int(changed.sum())
+            if n_changed:
+                cidx, cnbr = kops.compact_tables(cache.idx_np,
+                                                 cache.nbr_np, compute)
+                k = cidx.shape[0]
+                # pad the ragged compact set up to the next power of two
+                # with inert repeats (idx) / -1 neighbors, so the jit
+                # caches key on log-many bucketed shapes, not every |E|
+                # (waste < 2x; the padding rows are real GEMM work and
+                # are accounted as ``launched``)
+                k_pad = 1
+                while k_pad < k:
+                    k_pad *= 2
+                if k_pad > k:
+                    cidx = np.concatenate(
+                        [cidx, np.broadcast_to(cidx[-1:],
+                                               (k_pad - k, 3))])
+                    cnbr = np.concatenate(
+                        [cnbr, np.full((k_pad - k, 8), -1, np.int32)])
+                fresh = self._stack_chain(x, jnp.asarray(cidx),
+                                          jnp.asarray(cnbr))
+                # only the changed-OUTPUT rows graduate to the cache —
+                # margin rows absorbed the zero-halo error and their
+                # cached values are still exact
+                slots = np.nonzero(compute)[0]
+                upd = changed[slots]
+                cache.packed = cache.packed.at[
+                    jnp.asarray(slots[upd])].set(
+                    fresh[jnp.asarray(np.nonzero(upd)[0])])
+                cache.launched_tiles += k_pad
+                stats = ReuseStats(n, int(raw.sum()), n_changed, k,
+                                   k_pad, cold=False, gate_stats=s)
+                # advance the references of the REFRESHED tiles from the
+                # gate's own windows output — on device, row-for-row, no
+                # overlap with any other tile's reference.  Threshold 0
+                # advances every row (bitwise identity on unchanged
+                # windows = previous-frame semantics, one assignment)
+                if threshold <= 0:
+                    cache.ref_win = windows
+                else:
+                    rows = jnp.asarray(np.nonzero(changed)[0])
+                    cache.ref_win = cache.ref_win.at[rows].set(
+                        windows[rows])
+            else:
+                if threshold <= 0:
+                    cache.ref_win = windows
+                stats = ReuseStats(n, int(raw.sum()), 0, 0, 0,
+                                   cold=False, gate_stats=s)
+        base = jnp.zeros((len(frames), canvas_h, canvas_w,
+                          cache.packed.shape[-1]), cache.packed.dtype)
+        full = kops.sbnet_scatter_fleet(cache.packed, idx, base,
+                                        block=self.chain_block)
+        heads = full @ self.head
+        return ([heads[c, :f.shape[0], :f.shape[1]]
+                 for c, f in enumerate(frames)], stats)
+
+    def superlaunch_forward_reuse(self, frames: Dict[int, List[jax.Array]],
+                                  grids: Dict[int, List[np.ndarray]],
+                                  cache: PackedActivationCache,
+                                  threshold: float = 0.0,
+                                  qstep: float = 8.0):
+        """Delta-gated cross-group super-launch: every camera of every
+        group in one compact launch chain (see ``superlaunch_forward``
+        for the flattening contract).  Returns ({gid: head maps},
+        ReuseStats)."""
+        gids = list(frames)
+        flat_frames = [f for g in gids for f in frames[g]]
+        flat_grids = [gr for g in gids for gr in grids[g]]
+        heads, stats = self.fleet_forward_reuse(flat_frames, flat_grids,
+                                                cache, threshold, qstep)
+        out, pos = {}, 0
+        for g in gids:
+            out[g] = heads[pos:pos + len(frames[g])]
+            pos += len(frames[g])
+        return out, stats
 
     def forward(self, x: jax.Array, grid: Optional[np.ndarray]) -> jax.Array:
         if grid is None or grid.mean() >= self.cfg.switch_density:

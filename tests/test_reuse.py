@@ -1,0 +1,469 @@
+"""Temporal delta-gated inference: the reuse gate kernel, changed-set
+dilation, compact super-launches, the persistent packed-activation cache,
+and the blocked entry/scatter walks.
+
+The contract everywhere is BIT-identity with full recompute at threshold
+0: the reuse path changes which tiles are convolved, never the math of
+any tile whose value is used.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fleet import fleet_reuse_step
+from repro.kernels import ops, ref
+from repro.serving.detector import (DetectorConfig, PackedActivationCache,
+                                    RoIDetector)
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _fleet_pack(rng, shapes, density=0.5):
+    grids = [rng.random(s) < density for s in shapes]
+    for g in grids:
+        g[min(1, g.shape[0] - 1), min(1, g.shape[1] - 1)] = True
+    idx, _ = ops.fleet_indices(grids)
+    nbr = ops.fleet_neighbor_table(grids)
+    return grids, idx, nbr
+
+
+# ---------------------------------------------------------------------------
+# the gate kernel: bit-exact window + body pricing in one dispatch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("qstep", [8.0, 2.0, 16.0])
+def test_tile_delta_gate_bit_exact_vs_reference(qstep):
+    rng = _rng(1)
+    th = tw = 8
+    grids, idx, _ = _fleet_pack(rng, [(4, 5), (3, 3)])
+    cur = rng.normal(size=(2, 4 * th, 5 * tw, 3)).astype(np.float32)
+    prev = cur + (rng.random(cur.shape) < 0.02) * \
+        rng.normal(size=cur.shape).astype(np.float32) * 20
+    prev = prev.astype(np.float32)
+    pad = ((0, 0), (1, 1), (1, 1), (0, 0))
+    cur_p = jnp.asarray(np.pad(cur, pad))
+    ref_win = ops.gather_windows(jnp.asarray(np.pad(prev, pad)),
+                                 jnp.asarray(idx), th, tw)
+    stats, wins = ops.tile_delta_gate(cur_p, ref_win, jnp.asarray(idx),
+                                      th, tw, qstep=qstep)
+    expect = ref.tile_delta_gate(cur, prev, idx, th, tw, qstep=qstep)
+    np.testing.assert_array_equal(np.asarray(stats), expect)
+    # the windows output IS the current packed windows (the reference
+    # advance source)
+    np.testing.assert_array_equal(
+        np.asarray(wins),
+        np.asarray(ops.gather_windows(cur_p, jnp.asarray(idx), th, tw)))
+
+
+def test_tile_delta_gate_body_cols_match_tile_delta():
+    """Cols 0..3 of the gate stats equal ``tile_delta`` on the unpadded
+    per-camera frame — the rate controller can threshold the shared
+    dispatch with unchanged semantics."""
+    rng = _rng(2)
+    th = tw = 8
+    grids, idx, _ = _fleet_pack(rng, [(3, 4), (4, 3)])
+    cur = rng.normal(size=(2, 4 * th, 4 * tw, 3)).astype(np.float32)
+    prev = (cur + rng.normal(size=cur.shape) * 5).astype(np.float32)
+    gate = ref.tile_delta_gate(cur, prev, idx, th, tw)
+    for c, g in enumerate(grids):
+        ii = ops.mask_to_indices(g)
+        body = ref.tile_delta(cur[c], prev[c], ii, th, tw)
+        np.testing.assert_array_equal(gate[idx[:, 0] == c][:, :4],
+                                      body[:, :4])
+
+
+def test_tile_delta_gate_sees_inactive_neighbor_halo_change():
+    """A pixel flip in an INACTIVE tile adjacent to an active tile must
+    register through the active tile's haloed window — the body view
+    alone would miss it and the entry conv would serve a stale tile."""
+    th = tw = 8
+    grid = np.zeros((3, 3), bool)
+    grid[1, 1] = True                      # single active tile
+    idx, _ = ops.fleet_indices([grid])
+    cur = np.zeros((1, 3 * th, 3 * tw, 2), np.float32)
+    prev = cur.copy()
+    prev[0, th - 1, tw + 3, 0] = 7.0       # inactive N tile, bottom row
+    pad = ((0, 0), (1, 1), (1, 1), (0, 0))
+    ref_win = ops.gather_windows(jnp.asarray(np.pad(prev, pad)),
+                                 jnp.asarray(idx), th, tw)
+    out, _ = ops.tile_delta_gate(jnp.asarray(np.pad(cur, pad)), ref_win,
+                                 jnp.asarray(idx), th, tw)
+    out = np.asarray(out)
+    assert out[0, ops.GATE_WIN_EXACT] == 1     # window sees it
+    assert out[0, 1] == 0                      # body nnz does not
+
+
+# ---------------------------------------------------------------------------
+# changed-set dilation + compaction
+# ---------------------------------------------------------------------------
+
+def test_dilate_changed_matches_grid_morphology():
+    """Neighbor-table dilation == 3x3 morphological dilation on the tile
+    grid, restricted to active tiles (the only tiles that exist)."""
+    rng = _rng(3)
+    grid = rng.random((9, 11)) < 0.6
+    grid[4, 5] = True
+    idx = ops.mask_to_indices(grid)
+    nbr = ops.neighbor_table(idx, grid.shape)
+    raw = rng.random(idx.shape[0]) < 0.1
+    got = ops.dilate_changed(raw, nbr)
+    g = np.zeros(grid.shape, bool)
+    g[idx[raw][:, 0], idx[raw][:, 1]] = True
+    gp = np.pad(g, 1)
+    dil = np.zeros_like(g)
+    for dy in (0, 1, 2):
+        for dx in (0, 1, 2):
+            dil |= gp[dy:dy + g.shape[0], dx:dx + g.shape[1]]
+    np.testing.assert_array_equal(got, dil[idx[:, 0], idx[:, 1]])
+
+
+def test_reuse_sets_growth_and_nesting():
+    rng = _rng(4)
+    grid = rng.random((10, 10)) < 0.7
+    grid[5, 5] = True
+    idx = ops.mask_to_indices(grid)
+    nbr = ops.neighbor_table(idx, grid.shape)
+    raw = np.zeros(idx.shape[0], bool)
+    raw[np.nonzero((idx[:, 0] == 5) & (idx[:, 1] == 5))[0]] = True
+    changed, compute = ops.reuse_sets(raw, nbr, n_layers=3)
+    assert (raw <= changed).all() and (changed <= compute).all()
+    # changed = raw dilated N-1 times, compute = changed dilated N-1 more
+    d = raw
+    for _ in range(2):
+        d = ops.dilate_changed(d, nbr)
+    np.testing.assert_array_equal(changed, d)
+    for _ in range(2):
+        d = ops.dilate_changed(d, nbr)
+    np.testing.assert_array_equal(compute, d)
+    # a 1-layer net needs no dilation at all (entry reads the frame)
+    c1, e1 = ops.reuse_sets(raw, nbr, n_layers=1)
+    np.testing.assert_array_equal(c1, raw)
+    np.testing.assert_array_equal(e1, raw)
+
+
+def test_compact_tables_remap_and_zero_halo():
+    rng = _rng(5)
+    grids, idx, nbr = _fleet_pack(rng, [(4, 4), (3, 5)])
+    n = idx.shape[0]
+    keep = rng.random(n) < 0.5
+    keep[0] = True
+    cidx, cnbr = ops.compact_tables(idx, nbr, keep)
+    k = int(keep.sum())
+    assert cidx.shape == (k, 3) and cnbr.shape == (k, 8)
+    np.testing.assert_array_equal(cidx, idx[keep])
+    kept_slots = np.nonzero(keep)[0]
+    for r, slot in enumerate(kept_slots):
+        for j in range(8):
+            src = nbr[slot, j]
+            if src < 0 or not keep[src]:
+                assert cnbr[r, j] == -1      # dropped donor -> zero halo
+            else:
+                assert kept_slots[cnbr[r, j]] == src
+
+
+# ---------------------------------------------------------------------------
+# choose_block: VMEM-budgeted tile-block sizing
+# ---------------------------------------------------------------------------
+
+def test_choose_block_default_budget_and_floors():
+    # the 16 MiB default recovers the calibrated interpret-mode 128 for
+    # the YOLO-lite shapes — the old hardcoded constant, now derived
+    assert ops.choose_block(16, 16, 16, 3) == 128
+    assert ops.choose_block(16, 16, 16, 3, vmem_bytes=1024) == 1
+    last = 0
+    for mb in (1, 2, 4, 8, 16, 32):
+        b = ops.choose_block(16, 16, 16, 3, vmem_bytes=mb << 20)
+        assert b >= max(last, 1)
+        last = b
+    # wider channels shrink the block
+    assert ops.choose_block(16, 16, 64, 3) < ops.choose_block(16, 16, 8, 3)
+    # detector wires it through
+    det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(0))
+    assert det.block == 128
+    det_small = RoIDetector(DetectorConfig(vmem_budget_bytes=1 << 20),
+                            jax.random.PRNGKey(0))
+    assert 1 <= det_small.block < det.block
+
+
+# ---------------------------------------------------------------------------
+# blocked entry + blocked scatter: bit-identical to the per-tile walks
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block", [2, 3, 16, 256])
+def test_blocked_entry_bitwise_vs_per_tile(block):
+    rng = _rng(6)
+    th = tw = 8
+    grids, idx, _ = _fleet_pack(rng, [(4, 5), (3, 3)])
+    x = jnp.asarray(rng.normal(size=(2, 4 * th, 5 * tw, 3)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 3, 6)) * 0.3, jnp.float32)
+    base = ops.roi_conv_entry(x, w, jnp.asarray(idx), th, tw, block=1)
+    out = ops.roi_conv_entry(x, w, jnp.asarray(idx), th, tw, block=block)
+    assert (np.asarray(out) == np.asarray(base)).all()
+
+
+@pytest.mark.parametrize("block", [2, 5, 64])
+def test_blocked_scatter_bitwise_vs_per_tile(block):
+    """Including the repeat-last padding contract: duplicate stores must
+    rewrite identical bytes, never corrupt a neighbor."""
+    rng = _rng(7)
+    th = tw = 8
+    grids, idx, _ = _fleet_pack(rng, [(4, 5), (3, 3)])
+    n = idx.shape[0]
+    packed = jnp.asarray(rng.normal(size=(n, th, tw, 6)), jnp.float32)
+    base = jnp.asarray(rng.normal(size=(2, 4 * th, 5 * tw, 6)),
+                       jnp.float32)
+    legacy = ops.sbnet_scatter_fleet(packed, jnp.asarray(idx), base,
+                                     block=1)
+    out = ops.sbnet_scatter_fleet(packed, jnp.asarray(idx), base,
+                                  block=block)
+    assert (np.asarray(out) == np.asarray(legacy)).all()
+
+
+# ---------------------------------------------------------------------------
+# the delta-gated fleet step: bit-identity, dispatch structure, leaks
+# ---------------------------------------------------------------------------
+
+def _mk_fleet(rng, det, group_shapes, density=0.5):
+    t = det.cfg.tile
+    frames, grids = {}, {}
+    for gid, shapes in enumerate(group_shapes):
+        grids[gid] = [rng.random(s) < density for s in shapes]
+        for g in grids[gid]:
+            g[min(1, g.shape[0] - 1), min(1, g.shape[1] - 1)] = True
+        frames[gid] = [np.asarray(rng.normal(size=(gy * t, gx * t, 3)),
+                                  np.float32) for gy, gx in shapes]
+    return frames, grids
+
+
+def _as_jnp(frames):
+    return {g: [jnp.asarray(f) for f in fs] for g, fs in frames.items()}
+
+
+def test_reuse_threshold0_bitwise_on_ragged_fleet_trace():
+    """The acceptance contract: over a trace of sparse changes on a
+    ragged multi-group fleet, every step's outputs are bit-identical to
+    ``fleet_forward_layers`` full recompute, while convolving only the
+    dilated changed sets."""
+    det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(0))
+    rng = _rng(8)
+    frames, grids = _mk_fleet(rng, det,
+                              [[(4, 5), (3, 4)], [(2, 3)], [(5, 3),
+                                                            (3, 3)]])
+    grids[1][0][:] = False
+    grids[1][0][0, 0] = True               # single-tile group
+    cache = PackedActivationCache()
+    cur = frames
+    computed = []
+    for step in range(5):
+        outs, counts, st = fleet_reuse_step(det, _as_jnp(cur), grids,
+                                            cache)
+        for gid in grids:
+            legacy = det.fleet_forward_layers(
+                [jnp.asarray(f) for f in cur[gid]], grids[gid])
+            for a, b in zip(outs[gid], legacy):
+                assert (np.asarray(a) == np.asarray(b)).all(), \
+                    f"step {step} group {gid} diverged from full recompute"
+        computed.append(st.computed)
+        # next frame: flip a couple of pixels in one camera of one group
+        cur = {g: [f.copy() for f in fs] for g, fs in cur.items()}
+        gid = int(rng.integers(len(grids)))
+        cam = int(rng.integers(len(cur[gid])))
+        f = cur[gid][cam]
+        f[int(rng.integers(f.shape[0])), int(rng.integers(f.shape[1])),
+          :] += 9.0
+    assert st.total_tiles > 0
+    assert computed[0] == st.total_tiles       # cold step = full
+    assert all(c < st.total_tiles for c in computed[1:]), computed
+    assert cache.compute_fraction < 1.0
+
+
+def test_all_static_frame_dispatches_scatter_only():
+    det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(0))
+    rng = _rng(9)
+    frames, grids = _mk_fleet(rng, det, [[(3, 4), (4, 3)]])
+    cache = PackedActivationCache()
+    fleet_reuse_step(det, _as_jnp(frames), grids, cache)   # cold seed
+    outs, counts, st = fleet_reuse_step(det, _as_jnp(frames), grids,
+                                        cache)
+    assert st.computed == 0 and st.raw_changed == 0
+    assert dict(counts) == {"tile_delta_gate": 1,
+                            "sbnet_scatter_fleet": 1}
+    # and a third static step stays that way
+    outs, counts, st = fleet_reuse_step(det, _as_jnp(frames), grids,
+                                        cache)
+    assert dict(counts) == {"tile_delta_gate": 1,
+                            "sbnet_scatter_fleet": 1}
+
+
+def test_dilation_never_leaks_across_cameras_or_groups():
+    """A changed tile on a camera's edge must not pull any other
+    camera's tiles into the compute set (the neighbor table has no
+    cross-camera slots), and outputs stay bit-exact everywhere."""
+    det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(1))
+    rng = _rng(10)
+    t = det.cfg.tile
+    # two groups; every tile active so adjacency would leak if it could
+    frames, grids = _mk_fleet(rng, det, [[(3, 4), (3, 4)], [(4, 3)]],
+                              density=2.0)
+    cache = PackedActivationCache()
+    fleet_reuse_step(det, _as_jnp(frames), grids, cache)
+    # flip a pixel in camera 0's bottom-right corner tile (grid edge)
+    cur = {g: [f.copy() for f in fs] for g, fs in frames.items()}
+    cur[0][0][3 * t - 1, 4 * t - 1, 0] += 11.0
+    outs, counts, st = fleet_reuse_step(det, _as_jnp(cur), grids, cache)
+    assert st.computed > 0
+    # the compute set stayed inside flat camera 0
+    n0 = int(np.count_nonzero(grids[0][0]))
+    assert st.computed <= n0, "dilation leaked past the changed camera"
+    for gid in grids:
+        legacy = det.fleet_forward_layers(
+            [jnp.asarray(f) for f in cur[gid]], grids[gid])
+        for a, b in zip(outs[gid], legacy):
+            assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_reuse_positive_threshold_reuses_more():
+    """A lossy threshold can only shrink the compute set; the gate stats
+    stay available for the rate controller either way."""
+    det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(0))
+    rng = _rng(11)
+    frames, grids = _mk_fleet(rng, det, [[(4, 5)]])
+    small = {0: [frames[0][0] + (rng.random(frames[0][0].shape) < 0.001
+                                 ).astype(np.float32) * 0.5]}
+    cache0 = PackedActivationCache()
+    fleet_reuse_step(det, _as_jnp(frames), grids, cache0)
+    _, _, st0 = fleet_reuse_step(det, _as_jnp(small), grids, cache0,
+                                 threshold=0.0)
+    cache1 = PackedActivationCache()
+    fleet_reuse_step(det, _as_jnp(frames), grids, cache1)
+    _, _, st1 = fleet_reuse_step(det, _as_jnp(small), grids, cache1,
+                                 threshold=10 ** 6)
+    assert st1.computed <= st0.computed
+    assert st1.computed == 0                   # huge threshold: all reused
+    assert st0.gate_stats is not None and st1.gate_stats is not None
+
+
+def test_gate_stats_shared_with_rate_controller_single_dispatch():
+    """The satellite contract: one delta dispatch per step serves both
+    the reuse gate and the encoder's static-tile calibration — no
+    ``tile_delta`` launch rides along."""
+    from repro.net import static_fraction_from_stats, tile_static_fraction
+    det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(0))
+    rng = _rng(12)
+    t = det.cfg.tile
+    frames, grids = _mk_fleet(rng, det, [[(3, 4), (4, 4)]])
+    cache = PackedActivationCache()
+    fleet_reuse_step(det, _as_jnp(frames), grids, cache)
+    cur = {0: [f.copy() for f in frames[0]]}
+    cur[0][0][5, 5, :] += 30.0
+    with ops.count_kernels() as c:
+        outs, counts, st = fleet_reuse_step(det, _as_jnp(cur), grids,
+                                            cache)
+        frac = static_fraction_from_stats(st.gate_stats, 3, t)
+        # per-camera slices work too (fleet packing is camera-major)
+        idx = cache.idx_np
+        frac0 = static_fraction_from_stats(st.gate_stats[idx[:, 0] == 0],
+                                           3, t)
+    assert c["tile_delta_gate"] == 1
+    assert c.get("tile_delta", 0) == 0
+    assert 0.0 <= frac0 <= 1.0 and frac > 0.5  # mostly-static frame
+    # the stats= passthrough of tile_static_fraction skips the kernel
+    with ops.count_kernels() as c2:
+        f2 = tile_static_fraction(np.asarray(cur[0][0]),
+                                  np.asarray(frames[0][0]), grids[0][0],
+                                  t, stats=st.gate_stats[idx[:, 0] == 0])
+    assert sum(c2.values()) == 0 and f2 == frac0
+
+
+# ---------------------------------------------------------------------------
+# cache lifecycle: ring bound, invalidation, drift re-solve
+# ---------------------------------------------------------------------------
+
+def test_cache_invalidate_recomputes_and_reference_advances():
+    det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(0))
+    rng = _rng(13)
+    frames, grids = _mk_fleet(rng, det, [[(3, 3)]])
+    cache = PackedActivationCache()
+    for _ in range(4):
+        fleet_reuse_step(det, _as_jnp(frames), grids, cache)
+    assert cache.cold_steps == 1 and cache.ref_win is not None
+    cache.invalidate()
+    assert cache.packed is None and cache.invalidations == 1
+    assert cache.ref_win is None
+    _, counts, st = fleet_reuse_step(det, _as_jnp(frames), grids, cache)
+    assert st.cold and st.computed == st.total_tiles
+    assert counts.get("tile_delta_gate", 0) == 0
+
+
+def test_lossy_threshold_drift_accumulates_against_reference():
+    """Under a lossy threshold the gate's reference only advances at
+    refreshed tiles, so sub-threshold per-step drift ACCUMULATES and
+    eventually trips the gate — it cannot creep into the cache
+    unboundedly one sub-threshold step at a time."""
+    det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(0))
+    rng = _rng(16)
+    frames, grids = _mk_fleet(rng, det, [[(3, 3)]])
+    thr = 40.0                                  # bytes, lossy gate
+    cache = PackedActivationCache()
+    fleet_reuse_step(det, _as_jnp(frames), grids, cache, threshold=thr)
+    cur = frames
+    tripped = 0
+    for step in range(12):
+        # one tile drifts a little every step; each single-step delta
+        # prices under the threshold, the accumulated delta does not
+        cur = {0: [cur[0][0].copy()]}
+        cur[0][0][20:24, 20:24, :] += 2.0
+        _, _, st = fleet_reuse_step(det, _as_jnp(cur), grids, cache,
+                                    threshold=thr)
+        tripped += st.raw_changed
+    assert tripped >= 1, \
+        "accumulated sub-threshold drift never tripped the lossy gate"
+
+
+def test_mask_change_misses_content_key():
+    """A changed grid (what a drift re-solve produces) must force a full
+    recompute even without an explicit invalidate call."""
+    det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(0))
+    rng = _rng(14)
+    frames, grids = _mk_fleet(rng, det, [[(3, 4)]])
+    cache = PackedActivationCache()
+    fleet_reuse_step(det, _as_jnp(frames), grids, cache)
+    _, _, st = fleet_reuse_step(det, _as_jnp(frames), grids, cache)
+    assert not st.cold
+    grown = {0: [grids[0][0].copy()]}
+    grown[0][0][0, 3] = not grown[0][0][0, 3]
+    _, _, st = fleet_reuse_step(det, _as_jnp(frames), grown, cache)
+    assert st.cold and st.computed == st.total_tiles
+
+
+def test_drift_resolve_invalidates_cache_and_next_step_recomputes():
+    """The drift adapter's mask listeners invalidate registered caches on
+    every re-solve, so the step after a mask mutation recomputes fully
+    (belt and braces on top of the content key, and countable)."""
+    from repro.core.pipeline import OfflineConfig, run_offline
+    from repro.core.scene import SceneConfig, generate_scene
+    from repro.fleet.drift import DriftAdapter
+    scene = generate_scene(SceneConfig(duration_s=25, seed=5))
+    off = run_offline(scene, OfflineConfig(profile_frames=150,
+                                           solver="greedy"))
+    adapter = DriftAdapter(scene, off)
+    det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(0))
+    cache = PackedActivationCache()
+    adapter.add_mask_listener(lambda _: cache.invalidate())
+    # the cache serves a (small, synthetic) fleet; the adapter maintains
+    # the masks — the listener is the coupling under test
+    rng = _rng(15)
+    frames, grids = _mk_fleet(rng, det, [[(3, 3), (3, 4)]])
+    fleet_reuse_step(det, _as_jnp(frames), grids, cache)
+    _, _, st = fleet_reuse_step(det, _as_jnp(frames), grids, cache)
+    assert not st.cold
+    # a warm re-solve (empty residual window here: the mask itself does
+    # not grow, but cam_grids are regenerated) must notify the listeners
+    adapter._resolve(t=999)
+    assert len(adapter.events) == 1
+    assert cache.invalidations == 1 and cache.packed is None
+    _, _, st = fleet_reuse_step(det, _as_jnp(frames), grids, cache)
+    assert st.cold and st.computed == st.total_tiles

@@ -17,7 +17,8 @@ import os
 import time
 
 BENCHES = ["reid", "compression", "ablations", "sensitivity", "reducto",
-           "kernels", "fleet", "net", "stack", "reuse", "roofline"]
+           "kernels", "fleet", "net", "stack", "reuse", "shard",
+           "roofline"]
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -248,6 +249,59 @@ def reuse_quick():
     print(f"\nreuse smoke OK in {time.time() - t0:.1f}s -> {out}")
 
 
+def shard_quick():
+    """CI smoke for city-scale sharded serving: the mesh=(1,) sharded
+    step bit-identical to the single-device super-launch with the
+    per-shard 1-gate + ≤3-conv dispatch ceiling, the async pipeline
+    overlapping host planning with device compute, the 2-shard
+    simulated-mesh wall at or below the single-device wall, an LPT
+    shard plan within the greedy balance bound, and the per-camera
+    gate-threshold schedule holding the head-map accuracy floor —
+    merges a "shard" panel (with the groups x mesh scaling curve) into
+    BENCH_kernels.json."""
+    from benchmarks import bench_shard
+    t0 = time.time()
+    payload = bench_shard.run(verbose=True, quick=True)
+
+    # bit-exactness: the shard axis must be pure partitioning — no
+    # numeric difference vs the single-device reuse path, ever
+    assert payload["bit_exact"], \
+        f"sharded step diverged from single-device " \
+        f"(max |diff| {payload['sharded_vs_single_max_abs_diff']})"
+    # per-shard dispatch ceiling (SPMD: one counted dispatch is the
+    # per-shard launch): 1 gate + ≤3 conv dispatches every step
+    assert payload["dispatch_ceiling_ok"], payload["per_step_dispatches"]
+    for c in payload["per_step_dispatches"]:
+        assert c.get("tile_delta_gate", 0) == 1, c
+        assert sum(v for k, v in c.items() if k != "tile_delta_gate") <= 3
+    # the async pipeline must actually hide host planning time
+    assert payload["overlap_fraction"] > 0, payload["overlap_fraction"]
+    assert payload["overlap_fraction_2shard"] > 0, payload
+    # acceptance number: sharded wall ≤ single-device wall at 2 shards
+    assert payload["sharded_wall_2shard_s"] <= \
+        payload["single_device_wall_s"], \
+        f"2-shard wall must not exceed single-device " \
+        f"({payload['sharded_wall_2shard_s']:.3f}s vs " \
+        f"{payload['single_device_wall_s']:.3f}s, " \
+        f"speedup {payload['speedup_2shard']:.2f}x)"
+    # LPT plan balance: max shard load within 2x of the mean on this
+    # many-small-groups case (greedy bound is mean + max-group)
+    assert payload["shard_plan_imbalance_2shard"] <= 2.0, payload
+    # per-camera gate-threshold schedule: shed cameras stop relaunching
+    # tiny deltas, yet ≥99% of head entries stay within 1e-2 of exact
+    assert payload["threshold_sheds_suppressed"], \
+        "scheduled thresholds must suppress shed-camera relaunches"
+    assert payload["threshold_accuracy_floor"] >= 0.99, \
+        f"gate-threshold schedule broke the accuracy floor " \
+        f"(got {payload['threshold_accuracy_floor']:.4f})"
+
+    out = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+    merged = _merge_bench_json(out, {"shard": payload})
+    with open(out, "w") as f:
+        json.dump(merged, f, indent=1, default=float)
+    print(f"\nshard smoke OK in {time.time() - t0:.1f}s -> {out}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -275,6 +329,12 @@ def main():
                          "reduction on the mostly-static trace, bit-"
                          "exact at threshold 0, gate+scatter-only static "
                          "steps) merged into BENCH_kernels.json")
+    ap.add_argument("--shard", action="store_true",
+                    help="CI smoke: sharded fleet serving (mesh=(1,) "
+                         "bit-exact, per-shard dispatch ceiling, async "
+                         "pipeline overlap > 0, 2-shard wall ≤ single-"
+                         "device, threshold-schedule accuracy floor) "
+                         "merged into BENCH_kernels.json")
     args = ap.parse_args()
     if args.quick:
         quick()
@@ -286,7 +346,10 @@ def main():
         stack_quick()
     if args.reuse:
         reuse_quick()
-    if args.quick or args.fleet or args.net or args.stack or args.reuse:
+    if args.shard:
+        shard_quick()
+    if (args.quick or args.fleet or args.net or args.stack or args.reuse
+            or args.shard):
         return
     selected = args.only.split(",") if args.only else BENCHES
 

@@ -218,3 +218,31 @@ def make_dist(mesh: Optional[Mesh], auto_moe: bool = False,
 
 def named(mesh: Mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# fleet-serving shardings (the sharded super-launch state)
+# ---------------------------------------------------------------------------
+
+def fleet_state_pspec() -> P:
+    """PartitionSpec of every sharded fleet-state array: leading axis is
+    the shard axis (stacked per-shard tables / activations / reference
+    windows), everything else replicated-free per shard.  One spec fits
+    all of them because ``fleet/sharded.py`` stacks per-shard state as
+    (S, ...) with identical padded shapes."""
+    from repro.launch.mesh import FLEET_AXIS
+    return P(FLEET_AXIS)
+
+
+def fleet_state_sharding(mesh: Mesh) -> NamedSharding:
+    """NamedSharding placing (S, ...) stacked fleet state one-shard-per-
+    device on a ``make_fleet_mesh`` mesh."""
+    return NamedSharding(mesh, fleet_state_pspec())
+
+
+def put_fleet_state(mesh: Mesh, tree):
+    """device_put a pytree of (S, ...) stacked arrays onto the fleet
+    mesh, shard axis split across devices (host tables go through here
+    each step — the double-buffered table slots of the async pipeline)."""
+    sh = fleet_state_sharding(mesh)
+    return jax.tree.map(lambda a: jax.device_put(a, sh), tree)

@@ -5,23 +5,31 @@ Sits between the offline solver (`repro.core`) and the serving stack
 independent camera groups with per-group traffic profiles; `runtime` runs
 the fleet online phase as one vectorized evaluation plus one packed conv
 launch chain per group per step; `drift` keeps the deployed RoI masks
-tracking traffic shifts with warm-started incremental re-solves.
+tracking traffic shifts with warm-started incremental re-solves; `sharded`
+partitions camera groups over a device mesh (one shard_map super-launch,
+zero hot-path collectives) with an async host/device dispatch pipeline.
 """
 from repro.fleet.topology import (FleetConfig, FleetGroup, FleetScene,
                                   GroupSpec, TRAFFIC_PROFILES, build_fleet,
                                   cross_group_leakage)
 from repro.fleet.runtime import (FleetOfflineResult, FleetOnlineMetrics,
                                  fleet_inference_step, fleet_reuse_step,
-                                 run_fleet_offline, run_fleet_online)
+                                 run_fleet_offline, run_fleet_online,
+                                 sharded_fleet_step)
 from repro.fleet.drift import (AdaptiveRunResult, DriftAdapter, DriftConfig,
                                DriftEvent, ShrinkEvent,
-                               run_adaptive_online)
+                               run_adaptive_online,
+                               wire_shard_invalidation)
+from repro.fleet.sharded import (AsyncShardedPipeline, ShardedReuseStats,
+                                 ShardedSuperlaunch)
 
 __all__ = [
     "FleetConfig", "FleetGroup", "FleetScene", "GroupSpec",
     "TRAFFIC_PROFILES", "build_fleet", "cross_group_leakage",
     "FleetOfflineResult", "FleetOnlineMetrics", "fleet_inference_step",
     "fleet_reuse_step", "run_fleet_offline", "run_fleet_online",
+    "sharded_fleet_step",
     "AdaptiveRunResult", "DriftAdapter", "DriftConfig", "DriftEvent",
-    "ShrinkEvent", "run_adaptive_online",
+    "ShrinkEvent", "run_adaptive_online", "wire_shard_invalidation",
+    "AsyncShardedPipeline", "ShardedReuseStats", "ShardedSuperlaunch",
 ]

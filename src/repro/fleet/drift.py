@@ -342,3 +342,26 @@ def run_adaptive_online(scene: Scene, offline: OfflineResult,
             adapter.maybe_shrink(t, scene)
     return AdaptiveRunResult(adapter, np.asarray(frame_t),
                              np.asarray(apps), np.asarray(covs))
+
+
+def wire_shard_invalidation(adapters: Dict[int, DriftAdapter], cache,
+                            runtime=None) -> None:
+    """Fan drift re-solves out to the SHARDED serving cache: each group's
+    ``DriftAdapter`` gets a mask listener that cold-marks ONLY the shard
+    owning that group (``ShardedActivationCache.invalidate_group``) — the
+    other shards keep serving warm packed activations through the
+    re-solve.  With ``runtime`` (a ``fleet.sharded.ShardedSuperlaunch``)
+    given, the listener also rebuilds the owning shard's flat tables from
+    the adapter's re-solved grids (``rebuild_group`` preserves the other
+    shards' cache rows even when the shared row bucket grows).
+
+    adapters: {gid: DriftAdapter} for the groups the sharded runtime
+    serves (a subset is fine — unwired groups simply never invalidate)."""
+    for gid, ad in adapters.items():
+        def _on_update(a, gid=gid):
+            cache.invalidate_group(gid)
+            if runtime is not None:
+                runtime.rebuild_group(
+                    gid, [a.cam_grids[c.cam_id] for c in a.cameras],
+                    cache=cache)
+        ad.add_mask_listener(_on_update)

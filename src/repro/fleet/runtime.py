@@ -328,3 +328,36 @@ def fleet_reuse_step(det, frames: Dict[int, List],
     assert conv <= 3, \
         f"reuse step must keep the ≤3-dispatch conv ceiling: {dict(total)}"
     return outs, total, stats
+
+
+def sharded_fleet_step(runtime, frames: Dict[int, List], cache,
+                       threshold=0.0):
+    """One delta-gated step of a ``fleet.sharded.ShardedSuperlaunch``,
+    with the same every-step dispatch-structure assertion as
+    ``fleet_reuse_step`` — the sharded program is ONE SPMD launch per
+    kernel, so the per-SHARD ceiling and the fleet-wide dispatch count
+    coincide: 1 gate + the ≤3-dispatch conv chain on changed steps, gate
+    + scatter on all-static steps, nothing on an all-empty fleet.  (The
+    sharded path gates on cold steps too — SPMD uniformity: cold and
+    warm shards share one program.)  Returns ({gid: head maps},
+    dispatch Counter, ShardedReuseStats)."""
+    with kops.count_kernels() as c:
+        outs, stats = runtime.step_reuse(frames, cache, threshold)
+    total: collections.Counter = collections.Counter(c)
+    if stats.total_tiles == 0:
+        expected = {}
+    elif stats.k_max == 0:
+        expected = {"tile_delta_gate": 1, "sbnet_scatter_fleet": 1}
+    else:
+        expected = {"tile_delta_gate": 1, "roi_conv_entry": 1,
+                    "roi_conv_stack":
+                        1 if runtime.det.num_conv_layers > 1 else 0,
+                    "sbnet_scatter_fleet": 1}
+    expected = {k: v for k, v in expected.items() if v}
+    observed = {k: total[k] for k in expected}
+    assert observed == expected and not set(total) - set(expected), \
+        f"sharded dispatch structure broken: {dict(total)}"
+    conv = sum(v for k, v in total.items() if k != "tile_delta_gate")
+    assert conv <= 3, \
+        f"sharded step must keep the ≤3-dispatch conv ceiling: {dict(total)}"
+    return outs, total, stats

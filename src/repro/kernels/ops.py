@@ -14,8 +14,10 @@ from __future__ import annotations
 
 import collections
 import contextlib
+import contextvars
 import functools
 import os
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -41,31 +43,56 @@ from repro.kernels.tile_delta import (COEF_BITS, GATE_BODY_BYTES,
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 # kernel-dispatch counter: wrapper name -> number of pallas_call launches
-# issued from Python.  Reset with KERNEL_COUNTS.clear() around a region of
-# interest; each launch is counted once regardless of jit caching.
+# issued from Python.  Process-lifetime totals; each launch is counted once
+# regardless of jit caching.  Reset with KERNEL_COUNTS.clear() around a
+# region of interest, or — the concurrency-safe way — open a
+# ``count_kernels()`` region: regions live on a contextvar stack, so a
+# dispatch issued from another thread or async task can NEVER leak into a
+# region it is not lexically inside (the sharded fleet runtime and the
+# async dispatch pipeline rely on this; the bare global is kept for the
+# single-threaded consumers that predate them).
 KERNEL_COUNTS: collections.Counter = collections.Counter()
+
+_COUNT_LOCK = threading.Lock()
+# per-context stack of open count_kernels() regions.  contextvars give
+# thread- AND task-local isolation: a region opened on the main thread is
+# invisible to dispatches made from a pipeline worker thread, and vice
+# versa — which is exactly the trust property dispatch-ceiling assertions
+# need under concurrent shard/async execution.
+_COUNT_STACK: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_kernel_count_stack", default=())
+
+
+def record_dispatch(name: str, n: int = 1) -> None:
+    """Count ``n`` kernel launches under ``name``: bumps the process-wide
+    ``KERNEL_COUNTS`` and every ``count_kernels()`` region open in THIS
+    context.  Every public wrapper below calls this; runtimes that launch
+    raw kernels themselves (the shard_map'd fleet step dispatches one SPMD
+    program that runs the kernel once on every shard) call it directly so
+    dispatch-structure assertions see their launches too."""
+    with _COUNT_LOCK:
+        KERNEL_COUNTS[name] += n
+        for region in _COUNT_STACK.get():
+            region[name] += n
 
 
 @contextlib.contextmanager
 def count_kernels():
     """Isolated dispatch-count region: ``with count_kernels() as c: ...``.
 
-    Snapshots ``KERNEL_COUNTS`` on entry, clears it for the region, and on
-    exit (a) fills ``c`` with the region's dispatch counts and (b) restores
-    the global counter to snapshot + region — so an enclosing region (an
-    outer test, the fleet runtime's own assertion window) still observes
-    every dispatch, while the region's assertion cannot be corrupted by
-    counts that leaked in from earlier work.  Nests cleanly.  ``c`` is
-    populated at exit; inspect it after the ``with`` block."""
-    outer = collections.Counter(KERNEL_COUNTS)
-    KERNEL_COUNTS.clear()
+    ``c`` accumulates exactly the dispatches issued from inside the
+    region *in this thread/async context* — counts from earlier work, or
+    from other threads dispatching concurrently, cannot corrupt it.  The
+    global ``KERNEL_COUNTS`` keeps accumulating independently (it is
+    never cleared or restored here), and an enclosing region still
+    observes every inner dispatch, so nesting composes.  ``c`` is live
+    during the region and final at exit."""
     region: collections.Counter = collections.Counter()
+    token = _COUNT_STACK.set(_COUNT_STACK.get() + (region,))
     try:
         yield region
     finally:
-        region.update(KERNEL_COUNTS)
-        KERNEL_COUNTS.clear()
-        KERNEL_COUNTS.update(outer + region)
+        _COUNT_STACK.reset(token)
 
 
 def mask_to_indices(grid: np.ndarray) -> np.ndarray:
@@ -157,6 +184,74 @@ def superlaunch_tables(grids_per_group):
     cam_starts = np.cumsum([0] + [len(gs) for gs in grids_per_group]) \
         .astype(np.int64)
     return idx, nbr, tile_offsets, cam_starts
+
+
+# ---------------------------------------------------------------------------
+# shard planning: group -> device-shard assignment (placement-free)
+# ---------------------------------------------------------------------------
+
+class ShardPlan:
+    """Placement-free assignment of camera groups to mesh shards.
+
+    ``superlaunch_tables`` stays device-agnostic (flat tables over any
+    group subset); the plan is the SEPARATE object that says which groups
+    land on which shard.  Balanced by ACTIVE-TILE count, not group count
+    — one busy intersection cannot straggle a shard behind the others —
+    via longest-processing-time greedy (sort groups by tile count
+    descending, place each on the least-loaded shard), which carries the
+    classic LPT bound: max shard load <= mean load + max single-group
+    load.  Groups keep their offered order WITHIN a shard, so per-shard
+    flat tables are ``superlaunch_tables`` of an order-preserving
+    subsequence."""
+
+    def __init__(self, assignment: np.ndarray, tile_counts: np.ndarray,
+                 n_shards: int):
+        self.assignment = np.asarray(assignment, np.int64)   # (K,)
+        self.tile_counts = np.asarray(tile_counts, np.int64)  # (K,)
+        self.n_shards = int(n_shards)
+
+    @property
+    def n_groups(self) -> int:
+        return int(self.assignment.shape[0])
+
+    def shard_groups(self, s: int) -> "list[int]":
+        """Group positions assigned to shard ``s``, in offered order."""
+        return [int(i) for i in np.nonzero(self.assignment == s)[0]]
+
+    @property
+    def shard_tiles(self) -> np.ndarray:
+        """(S,) active tiles per shard."""
+        out = np.zeros(self.n_shards, np.int64)
+        np.add.at(out, self.assignment, self.tile_counts)
+        return out
+
+    @property
+    def imbalance(self) -> float:
+        """max/mean shard tile load (1.0 = perfectly balanced)."""
+        loads = self.shard_tiles
+        mean = float(loads.mean()) if loads.size else 0.0
+        return float(loads.max()) / mean if mean > 0 else 1.0
+
+
+def shard_plan(grids_per_group, n_shards: int) -> ShardPlan:
+    """Plan the group -> shard assignment for a sharded super-launch.
+
+    grids_per_group: sequence of per-group camera-grid lists (the same
+    argument ``superlaunch_tables`` takes).  Deterministic: ties broken
+    by group position."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    tiles = np.array([sum(int(np.count_nonzero(np.asarray(g, bool)))
+                          for g in gs) for gs in grids_per_group],
+                     np.int64)
+    order = np.argsort(-tiles, kind="stable")       # LPT: biggest first
+    loads = np.zeros(n_shards, np.int64)
+    assignment = np.zeros(tiles.shape[0], np.int64)
+    for gi in order:
+        s = int(np.argmin(loads))                   # least-loaded shard
+        assignment[gi] = s
+        loads[s] += tiles[gi]
+    return ShardPlan(assignment, tiles, n_shards)
 
 
 # ---------------------------------------------------------------------------
@@ -265,7 +360,7 @@ def _sbnet_gather_jit(x, idx, th, tw, interpret=INTERPRET):
 def sbnet_gather(x: jax.Array, idx: jax.Array, th: int, tw: int,
                  interpret: bool = INTERPRET) -> jax.Array:
     """(H, W, C) + (n, 2) tile coords -> packed (n, th, tw, C)."""
-    KERNEL_COUNTS["sbnet_gather"] += 1
+    record_dispatch("sbnet_gather")
     return _sbnet_gather_jit(x, idx, th, tw, interpret)
 
 
@@ -277,7 +372,7 @@ def _sbnet_scatter_jit(packed, idx, base, interpret=INTERPRET):
 def sbnet_scatter(packed: jax.Array, idx: jax.Array, base: jax.Array,
                   interpret: bool = INTERPRET) -> jax.Array:
     """Packed tiles -> full map, untouched regions keep ``base`` values."""
-    KERNEL_COUNTS["sbnet_scatter"] += 1
+    record_dispatch("sbnet_scatter")
     return _sbnet_scatter_jit(packed, idx, base, interpret)
 
 
@@ -289,7 +384,7 @@ def _roi_conv_jit(x, w, idx, th, tw, interpret=INTERPRET):
 def roi_conv(x: jax.Array, w: jax.Array, idx: jax.Array, th: int, tw: int,
              interpret: bool = INTERPRET) -> jax.Array:
     """Fused gather+3x3 conv on active tiles -> packed (n, th, tw, Cout)."""
-    KERNEL_COUNTS["roi_conv"] += 1
+    record_dispatch("roi_conv")
     return _roi_conv_jit(x, w, idx, th, tw, interpret)
 
 
@@ -303,7 +398,7 @@ def roi_conv_packed(packed: jax.Array, w: jax.Array, nbr: jax.Array,
     """Packed-resident conv layer: (n, th, tw, Cin) -> (n, th, tw, Cout)
     with halos pulled from neighbor tiles (``neighbor_table``); no
     full-frame materialization between layers."""
-    KERNEL_COUNTS["roi_conv_packed"] += 1
+    record_dispatch("roi_conv_packed")
     return _roi_conv_packed_jit(packed, w, nbr, interpret)
 
 
@@ -317,7 +412,7 @@ def roi_conv_fleet(x: jax.Array, w: jax.Array, idx: jax.Array, th: int,
     """Cross-camera fused gather+conv: (C, H, W, Cin) stacked frames +
     (n, 3) (cam, ty, tx) coords -> packed (n, th, tw, Cout) for the whole
     camera group in ONE launch (see ``fleet_indices``)."""
-    KERNEL_COUNTS["roi_conv_fleet"] += 1
+    record_dispatch("roi_conv_fleet")
     return _roi_conv_fleet_jit(x, w, idx, th, tw, interpret)
 
 
@@ -338,7 +433,7 @@ def roi_conv_entry(x: jax.Array, w: jax.Array, idx: jax.Array, th: int,
     tile walk (``choose_block`` sizes it against VMEM): ``block`` haloed
     windows gathered per grid step, one GEMM per tap per block,
     bit-identical to the per-tile walk."""
-    KERNEL_COUNTS["roi_conv_entry"] += 1
+    record_dispatch("roi_conv_entry")
     return _roi_conv_entry_jit(x, w, idx, th, tw, int(block), interpret)
 
 
@@ -355,7 +450,7 @@ def roi_conv_stack(packed: jax.Array, ws, nbr: jax.Array,
     (conv + relu per layer, double-buffered activations + coalesced rim
     halos, weight prefetch for layer l+1 during layer l) in ONE dispatch
     — bit-identical to N-1 ``roi_conv_packed`` + relu rounds."""
-    KERNEL_COUNTS["roi_conv_stack"] += 1
+    record_dispatch("roi_conv_stack")
     return _roi_conv_stack_jit(packed, tuple(ws), nbr, int(block),
                                interpret)
 
@@ -375,7 +470,7 @@ def sbnet_scatter_fleet(packed: jax.Array, idx: jax.Array, base: jax.Array,
     ``block`` > 1 blocks the tile walk: ``block`` packed tiles arrive per
     grid step as one contiguous load, bit-identical to the per-tile
     walk."""
-    KERNEL_COUNTS["sbnet_scatter_fleet"] += 1
+    record_dispatch("sbnet_scatter_fleet")
     return _sbnet_scatter_fleet_jit(packed, idx, base, int(block),
                                     interpret)
 
@@ -397,7 +492,7 @@ def tile_delta(cur: jax.Array, prev: jax.Array, idx: jax.Array, th: int,
     (H, W, C) frame pair + (n, 2) tile coords -> (n, STATS_WIDTH) int32
     rows of [byte_estimate, nnz, zero_runs, sum|q|, 0...] (bit-exact vs
     ``ref.tile_delta``)."""
-    KERNEL_COUNTS["tile_delta"] += 1
+    record_dispatch("tile_delta")
     return _tile_delta_jit(cur, prev, idx, th, tw, float(qstep),
                            int(coef_bits), int(run_bits), interpret)
 
@@ -428,7 +523,7 @@ def tile_delta_gate(cur_p: jax.Array, ref_win: jax.Array, idx: jax.Array,
     ONE launch per fleet step serves both the reuse gate and the
     encoder's static-tile calibration.  ``block`` > 1 blocks the
     pricing walk like the blocked entry kernel."""
-    KERNEL_COUNTS["tile_delta_gate"] += 1
+    record_dispatch("tile_delta_gate")
     return _tile_delta_gate_jit(cur_p, ref_win, idx, th, tw, float(qstep),
                                 int(coef_bits), int(run_bits),
                                 int(block), interpret)
@@ -470,7 +565,7 @@ def tile_delta_halo(cur: jax.Array, prev: jax.Array, idx: jax.Array,
     independently): (n, STATS_WIDTH) int32 rows, bit-exact vs
     ``ref.tile_delta_halo``.  Feeds halo-first shedding in the edge rate
     controller."""
-    KERNEL_COUNTS["tile_delta_halo"] += 1
+    record_dispatch("tile_delta_halo")
     return _tile_delta_halo_jit(cur, prev, idx, th, tw, float(qstep),
                                 int(coef_bits), int(run_bits), interpret)
 
@@ -478,7 +573,7 @@ def tile_delta_halo(cur: jax.Array, prev: jax.Array, idx: jax.Array,
 def roi_conv_batched(x: jax.Array, w: jax.Array, idx: jax.Array,
                      th: int, tw: int) -> jax.Array:
     """(B, H, W, Cin) -> (B, n, th, tw, Cout), shared active set."""
-    KERNEL_COUNTS["roi_conv"] += 1
+    record_dispatch("roi_conv")
     return jax.vmap(lambda xi: _roi_conv_jit(xi, w, idx, th, tw))(x)
 
 
@@ -534,7 +629,7 @@ def roi_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     ``causal_skip`` bounds the k-block walk at the causal frontier (exact:
     outputs on real rows are unchanged); ``return_stats`` additionally
     returns the (H, S // block_q) visited-k-block counts."""
-    KERNEL_COUNTS["roi_attention"] += 1
+    record_dispatch("roi_attention")
     return _roi_attention_jit(q, k, v, positions, block_q, block_k,
                               causal_skip, return_stats, interpret)
 
@@ -559,7 +654,8 @@ def attention_visit_bound(positions: np.ndarray, block_q: int = 128,
 
 
 __all__ = ["mask_to_indices", "neighbor_table", "fleet_indices",
-           "fleet_neighbor_table", "superlaunch_tables", "dilate_changed",
+           "fleet_neighbor_table", "superlaunch_tables", "ShardPlan",
+           "shard_plan", "record_dispatch", "dilate_changed",
            "reuse_sets", "compact_tables", "choose_block", "sbnet_gather",
            "sbnet_scatter", "sbnet_scatter_fleet", "roi_conv",
            "roi_conv_entry", "roi_conv_fleet", "roi_conv_packed",

@@ -27,6 +27,29 @@ def make_debug_mesh(data: int = 2, model: int = 2, pod: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+# fleet-serving mesh axis: camera groups shard over it (zero cross-group
+# leakage by construction makes this axis embarrassingly parallel — the
+# sharded super-launch has NO collectives on its hot path)
+FLEET_AXIS = "shard"
+
+
+def make_fleet_mesh(n_shards: int = 0):
+    """1-D mesh over the ``"shard"`` axis for the sharded fleet runtime.
+
+    ``n_shards`` = 0 uses every visible device.  On CPU hosts simulate
+    multiple devices by exporting
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` BEFORE jax
+    initializes (the tests/benches do this via subprocesses)."""
+    avail = len(jax.devices())
+    n = n_shards or avail
+    if n > avail:
+        raise ValueError(
+            f"make_fleet_mesh({n_shards}): only {avail} device(s) visible; "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"before jax initializes to simulate more on CPU")
+    return jax.make_mesh((n,), (FLEET_AXIS,))
+
+
 # v5e hardware constants for the roofline (per chip)
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # bytes/s

@@ -15,6 +15,7 @@ from repro.net.links import (CongestionEpisode, LinkConfig,
                              fifo_departures, queue_wait)
 from repro.net.encoder import (CameraCoefficients, RateControlConfig,
                                activity, camera_coefficients,
+                               gate_threshold_schedule,
                                rate_controlled_departures,
                                segment_byte_matrices, sent_matrix,
                                static_fraction_from_stats,
@@ -28,7 +29,8 @@ __all__ = [
     "CongestionEpisode", "LinkConfig", "bandwidth_traces",
     "default_congestion_trace", "fifo_departures", "queue_wait",
     "CameraCoefficients", "RateControlConfig", "activity",
-    "camera_coefficients", "rate_controlled_departures",
+    "camera_coefficients", "gate_threshold_schedule",
+    "rate_controlled_departures",
     "segment_byte_matrices", "sent_matrix", "static_fraction_from_stats",
     "tile_halo_static_fraction", "tile_static_fraction", "zero_safe_div",
     "DeadlineGroupFormer", "NetConfig", "Release", "TransportStats",

@@ -306,11 +306,36 @@ class DeadlineGroupFormer:
     the legacy force-out (``superseded``) behavior."""
 
     def __init__(self, det, expected_cams: Sequence[int],
-                 deadline_s: float, fold_stragglers: bool = True):
+                 deadline_s: float, fold_stragglers: bool = True,
+                 reuse_cache=None, threshold: float = 0.0,
+                 fold_gate: str = "capture"):
+        if fold_gate not in ("capture", "current"):
+            raise ValueError(f"fold_gate must be 'capture' or 'current', "
+                             f"got {fold_gate!r}")
         self.det = det
         self.expected = list(expected_cams)
         self.deadline_s = deadline_s
         self.fold_stragglers = fold_stragglers
+        # temporal-reuse mode: with a ``PackedActivationCache``, every
+        # release runs as CAPTURE-ORDER WAVES of full-group
+        # ``fleet_forward_reuse`` steps (one wave per queued segment
+        # depth; absent cameras re-submit their retained last frame,
+        # which is bit-static and costs only its share of the gate).
+        # ``fold_gate`` picks what a FOLDED late segment is gated
+        # against: "capture" replays waves oldest-first, so each segment
+        # deltas against the reference as of its own capture segment
+        # (one segment of motion); "current" replays newest-first, so
+        # late segments delta against the already-advanced current
+        # reference — motion is priced twice and the fold launches
+        # strictly more tiles (``reuse_launched_tiles`` makes the
+        # comparison measurable).
+        self.reuse_cache = reuse_cache
+        self.threshold = threshold
+        self.fold_gate = fold_gate
+        self._retained: Dict[int, Tuple[Any, Any]] = {}  # cam -> (f, g)
+        self.reuse_launched_tiles = 0
+        self.reuse_total_tiles = 0
+        self.reuse_waves = 0
         self._pending: Dict[int, List[Tuple[float, Any, Any]]] = {}
         self._late: set = set()        # cams whose batch left without them
         self.releases: List[Release] = []
@@ -353,23 +378,82 @@ class DeadlineGroupFormer:
             return self._release(now, deadline_hit=True)
         return None
 
+    def _reuse_ready(self) -> bool:
+        return self.reuse_cache is not None and all(
+            c in self._retained or self._pending.get(c)
+            for c in self.expected)
+
+    def _release_reuse(self) -> Tuple[Dict[int, Any], Dict[int, List[Any]]]:
+        """Replay the queued segments as waves of FULL-GROUP delta-gated
+        steps.  Wave w holds each camera's w-th queued segment; a camera
+        with fewer segments re-submits its last retained frame (bit-
+        static — its tiles cost only the shared gate).  Wave order is
+        the fold-gating policy: "capture" goes oldest-first (each
+        segment gated against the reference as of its capture segment),
+        "current" goes newest-first (folded late segments gated against
+        the already-advanced reference)."""
+        per_cam = {c: list(self._pending[c]) for c in self._pending}
+        n_waves = max(len(q) for q in per_cam.values())
+        order = range(n_waves) if self.fold_gate == "capture" \
+            else range(n_waves - 1, -1, -1)
+        filler = dict(self._retained)
+        for c, q in per_cam.items():          # never-seen cams bootstrap
+            filler.setdefault(c, (q[0][1], q[0][2]))
+        heads_by: Dict[Tuple[int, int], Any] = {}
+        for w in order:
+            frames, grids = [], []
+            for c in self.expected:
+                q = per_cam.get(c)
+                if q and w < len(q):
+                    _, f, g = q[w]
+                    if self.fold_gate == "capture":
+                        filler[c] = (f, g)
+                else:
+                    f, g = filler[c]
+                frames.append(f)
+                grids.append(g)
+            heads, stats = self.det.fleet_forward_reuse(
+                frames, grids, self.reuse_cache, self.threshold)
+            self.reuse_launched_tiles += stats.launched
+            self.reuse_total_tiles += stats.total_tiles
+            self.reuse_waves += 1
+            for i, c in enumerate(self.expected):
+                q = per_cam.get(c)
+                if q and w < len(q):
+                    heads_by[(c, w)] = heads[i]
+        outputs: Dict[int, Any] = {}
+        folded: Dict[int, List[Any]] = {}
+        for c, q in per_cam.items():          # fold bookkeeping: capture
+            for w in range(len(q)):           # order, newest wins
+                if c in outputs:
+                    folded.setdefault(c, []).append(outputs[c])
+                outputs[c] = heads_by[(c, w)]
+            self._retained[c] = (q[-1][1], q[-1][2])
+        return outputs, folded
+
     def _release(self, now: float, deadline_hit: bool,
                  superseded: bool = False) -> Release:
         cams = sorted(self._pending)
-        entries = [(c, t, f, g) for c in cams
-                   for (t, f, g) in self._pending[c]]
-        frames = [f for _, _, f, _ in entries]
-        grids = [g for _, _, _, g in entries]
-        # ONE packed launch chain for every queued segment of every
-        # camera — folded straggler segments are just extra entries in
-        # the same fleet-flat index space
-        outs = self.det.fleet_forward(frames, grids)
-        outputs: Dict[int, Any] = {}
-        folded: Dict[int, List[Any]] = {}
-        for (c, _, _, _), o in zip(entries, outs):
-            if c in outputs:
-                folded.setdefault(c, []).append(outputs[c])
-            outputs[c] = o                 # newest segment wins the slot
+        if self._reuse_ready():
+            outputs, folded = self._release_reuse()
+        else:
+            entries = [(c, t, f, g) for c in cams
+                       for (t, f, g) in self._pending[c]]
+            frames = [f for _, _, f, _ in entries]
+            grids = [g for _, _, _, g in entries]
+            # ONE packed launch chain for every queued segment of every
+            # camera — folded straggler segments are just extra entries
+            # in the same fleet-flat index space
+            outs = self.det.fleet_forward(frames, grids)
+            outputs = {}
+            folded = {}
+            for (c, _, _, _), o in zip(entries, outs):
+                if c in outputs:
+                    folded.setdefault(c, []).append(outputs[c])
+                outputs[c] = o             # newest segment wins the slot
+            for c in cams:                 # retained state feeds a later
+                t, f, g = self._pending[c][-1]   # switch to reuse mode
+                self._retained[c] = (f, g)
         stragglers = [c for c in cams if c in self._late]
         if set(cams) <= self._late:
             # a pure catch-up launch of the PREVIOUS cycle's stragglers:

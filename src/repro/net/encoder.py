@@ -219,6 +219,32 @@ def static_fraction_from_stats(stats, n_channels: int, tile: int,
     return float(np.mean(stats[:, 0] <= static_ratio * dense_bytes))
 
 
+def gate_threshold_schedule(quality, tile: int, n_channels: int,
+                            base_threshold: float = 0.0,
+                            gain: float = 0.05) -> np.ndarray:
+    """Per-camera ``tile_delta_gate`` thresholds from the rate
+    controller's quality trace — the server-side half of shedding: a
+    camera the uplink is ALREADY degrading (quality < 1) gets a raised
+    reuse-gate byte threshold, so near-static tiles on congested cameras
+    stop re-convolving before pristine cameras give up any freshness.
+
+    quality: (C,) or (C, S) from ``rate_controlled_departures`` (a
+    (C, S) trace is reduced with min over segments — the worst observed
+    congestion governs).  Returns (C,) thresholds in BYTES against the
+    gate's quantized window estimate (``GATE_WIN_BYTES``):
+    ``base + gain * (1 - quality) * dense_tile_bytes``.  An unshedded
+    camera (quality 1.0) keeps ``base_threshold`` — at the default 0.0
+    that is the EXACT gate, so the schedule can only relax cameras the
+    controller already sheds; the reuse bench asserts the resulting
+    head-map accuracy floor."""
+    from repro.kernels import ops as kops
+    q = np.asarray(quality, np.float64)
+    if q.ndim == 2:
+        q = q.min(axis=1)
+    dense_bytes = tile * tile * n_channels * kops.COEF_BITS / 8.0
+    return base_threshold + gain * (1.0 - q) * dense_bytes
+
+
 def tile_static_fraction(cur, prev, grid: np.ndarray, tile: int,
                          qstep: float = 8.0, static_ratio: float = 0.10,
                          stats=None) -> float:

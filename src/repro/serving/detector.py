@@ -89,6 +89,43 @@ class ReuseStats:
     gate_stats: Optional[np.ndarray] = None
 
 
+def gate_changed_rows(stats, threshold, cam_of_row) -> np.ndarray:
+    """Host-side gate thresholding shared by the single-device and the
+    sharded reuse paths: (n, STATS_WIDTH) ``tile_delta_gate`` stats rows
+    -> (n,) bool raw-changed mask.
+
+    ``threshold`` is a scalar, or a PER-CAMERA array indexed by
+    ``cam_of_row`` (the idx table's camera column) — the rate
+    controller's per-camera gate-threshold schedule
+    (``net.encoder.gate_threshold_schedule``) raises thresholds on
+    cameras it is already shedding without touching the rest.  A
+    threshold <= 0 selects the exact bitwise change count for that
+    camera's rows (bit-identical reuse); a positive threshold gates on
+    the quantized window byte estimate."""
+    s = np.asarray(stats)
+    thr = np.asarray(threshold, np.float64)
+    if thr.ndim == 0:
+        if float(thr) <= 0:
+            return s[:, kops.GATE_WIN_EXACT] > 0
+        return s[:, kops.GATE_WIN_BYTES] > float(thr)
+    per_row = thr[np.asarray(cam_of_row)]
+    return np.where(per_row <= 0, s[:, kops.GATE_WIN_EXACT] > 0,
+                    s[:, kops.GATE_WIN_BYTES] > per_row)
+
+
+def ref_advance_rows(threshold, cam_of_row, changed) -> Optional[np.ndarray]:
+    """Which reference-window rows advance to the current content this
+    step: ``None`` = every row (the scalar threshold <= 0 fast path — one
+    wholesale assignment, previous-frame semantics), else a (n,) bool
+    mask — exact-gated cameras' rows always advance, lossy-gated cameras
+    advance only refreshed rows so sub-threshold drift accumulates
+    against each tile's own reference (see PackedActivationCache)."""
+    thr = np.asarray(threshold, np.float64)
+    if thr.ndim == 0:
+        return None if float(thr) <= 0 else np.asarray(changed, bool)
+    return (thr[np.asarray(cam_of_row)] <= 0) | np.asarray(changed, bool)
+
+
 class PackedActivationCache:
     """Per-fleet persistent packed-activation cache for temporal reuse.
 
@@ -130,6 +167,66 @@ class PackedActivationCache:
         self.ref_win = None
         self.idx_np = None
         self.nbr_np = None
+        self.invalidations += 1
+
+    @property
+    def compute_fraction(self) -> float:
+        """Lifetime convolved-tile fraction vs full recompute (padding
+        rows included — they are real launched GEMM work)."""
+        return self.launched_tiles / max(self.total_tiles, 1)
+
+
+class ShardedActivationCache:
+    """The ``PackedActivationCache`` sharded along the group axis.
+
+    State for ``fleet/sharded.ShardedSuperlaunch``: the packed final-
+    layer activations and per-tile reference windows live as (S, n_max,
+    ...) STACKED arrays, shard axis split over the fleet mesh
+    (``distributed.shardings.fleet_state_sharding``), padded rows
+    pointing at a sacrificial camera slot so SPMD shapes stay uniform
+    across ragged shards.  Validity is PER SHARD: a drift re-solve on
+    one group invalidates only the owning shard (``invalidate_group``,
+    fan-out wired by ``fleet/drift.wire_shard_invalidation``), and the
+    next sharded step recomputes that shard's rows while every other
+    shard keeps serving warm — the single-device cache would have gone
+    fleet-wide cold on the same event.  Mixed cold/warm shards run in
+    the SAME SPMD program: a cold shard's rows are simply all marked
+    raw-changed on the host side."""
+
+    def __init__(self, plan: "kops.ShardPlan", gids=None):
+        self.plan = plan
+        self.gids = list(gids) if gids is not None else None
+        self.valid = np.zeros(plan.n_shards, bool)
+        self.packed = None      # (S, n_max, th, tw, C_last) mesh-sharded
+        self.ref_win = None     # (S, n_max, th+2, tw+2, 3) mesh-sharded
+        self.invalidations = 0
+        self.shard_invalidations = np.zeros(plan.n_shards, np.int64)
+        self.steps = 0
+        self.cold_steps = 0          # steps with >= 1 cold shard
+        self.launched_tiles = 0
+        self.total_tiles = 0
+
+    def owner_shard(self, group) -> int:
+        """Shard owning ``group`` (a gid when the cache was built with
+        ``gids``, else a plan position)."""
+        pos = self.gids.index(group) if self.gids is not None else int(group)
+        return int(self.plan.assignment[pos])
+
+    def invalidate_group(self, group) -> None:
+        """Mark ONLY the shard owning ``group`` cold; every other
+        shard's cached rows stay valid and keep serving."""
+        s = self.owner_shard(group)
+        self.valid[s] = False
+        self.shard_invalidations[s] += 1
+        self.invalidations += 1
+
+    def invalidate(self, _adapter=None) -> None:
+        """Fleet-wide drop (the PackedActivationCache-compatible hook);
+        accepts and ignores a DriftAdapter argument so it can be
+        registered as a mask listener directly."""
+        self.valid[:] = False
+        self.packed = None
+        self.ref_win = None
         self.invalidations += 1
 
     @property
@@ -395,6 +492,11 @@ class RoIDetector:
         tile is *changed* when its window byte estimate exceeds
         ``threshold`` (at threshold <= 0 the exact bitwise change count
         gates instead, making reuse BIT-IDENTICAL to full recompute).
+        ``threshold`` may also be a PER-CAMERA array (one entry per
+        flattened camera, see ``gate_changed_rows``) — the rate
+        controller's gate-threshold schedule raises thresholds only on
+        cameras it is already shedding, and cameras left at <= 0 keep
+        exact-gated bit-identity.
         The changed set is dilated once per packed layer into the
         changed-OUTPUT set, once more per layer into the compute margin
         (``ops.reuse_sets``), compacted into the superlaunch tables
@@ -437,13 +539,11 @@ class RoIDetector:
                 xp, cache.ref_win, idx, t, t, qstep=qstep,
                 block=self.block)
             s = np.asarray(gate)
-            if threshold <= 0:
-                # exact gate: quantization rounds small deltas to zero
-                # and even an all-zero delta prices its run tokens, so
-                # bit-identity keys on the raw bitwise comparison
-                raw = s[:, kops.GATE_WIN_EXACT] > 0
-            else:
-                raw = s[:, kops.GATE_WIN_BYTES] > threshold
+            # exact gate (threshold <= 0, possibly per camera):
+            # quantization rounds small deltas to zero and even an
+            # all-zero delta prices its run tokens, so bit-identity keys
+            # on the raw bitwise comparison
+            raw = gate_changed_rows(s, threshold, cache.idx_np[:, 0])
             changed, compute = kops.reuse_sets(raw, cache.nbr_np,
                                                n_layers)
             n_changed = int(changed.sum())
@@ -483,15 +583,23 @@ class RoIDetector:
                 # overlap with any other tile's reference.  Threshold 0
                 # advances every row (bitwise identity on unchanged
                 # windows = previous-frame semantics, one assignment)
-                if threshold <= 0:
+                adv = ref_advance_rows(threshold, cache.idx_np[:, 0],
+                                       changed)
+                if adv is None:
                     cache.ref_win = windows
-                else:
-                    rows = jnp.asarray(np.nonzero(changed)[0])
+                elif adv.any():
+                    rows = jnp.asarray(np.nonzero(adv)[0])
                     cache.ref_win = cache.ref_win.at[rows].set(
                         windows[rows])
             else:
-                if threshold <= 0:
+                adv = ref_advance_rows(threshold, cache.idx_np[:, 0],
+                                       np.zeros(n, bool))
+                if adv is None:
                     cache.ref_win = windows
+                elif adv.any():
+                    rows = jnp.asarray(np.nonzero(adv)[0])
+                    cache.ref_win = cache.ref_win.at[rows].set(
+                        windows[rows])
                 stats = ReuseStats(n, int(raw.sum()), 0, 0, 0,
                                    cold=False, gate_stats=s)
         base = jnp.zeros((len(frames), canvas_h, canvas_w,

@@ -54,6 +54,16 @@ class strategies:
         return Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans()")
 
     @staticmethod
+    def lists(elements: Strategy, min_size: int = 0,
+              max_size: int | None = None) -> Strategy:
+        def sample(rng):
+            hi = min_size + 8 if max_size is None else max_size
+            size = min_size if hi == min_size \
+                else int(rng.integers(min_size, hi + 1))
+            return [elements.example(rng) for _ in range(size)]
+        return Strategy(sample, f"lists(min={min_size}, max={max_size})")
+
+    @staticmethod
     def sets(elements: Strategy, min_size: int = 0,
              max_size: int | None = None) -> Strategy:
         def sample(rng):

@@ -1,0 +1,247 @@
+"""Observability benchmark: the telemetry layer must be (near) free.
+
+Four panels:
+
+  1. overhead — the SAME delta-gated fleet trace timed with
+     observability disabled vs enabled (interleaved min-of-reps); the
+     acceptance number is < 2% added wall on a fleet-reuse step, with
+     ZERO added device dispatches (``ops.count_kernels`` Counters are
+     equal bit-for-bit between the two runs).
+  2. bit-compatibility — over the enabled run, the
+     ``kernel_dispatches`` metric family equals the legacy
+     ``ops.count_kernels`` region Counter exactly.
+  3. async timeline — an ``AsyncShardedPipeline`` run on mesh=(1,)
+     exports a Chrome ``trace_event`` JSON (``results/obs_trace.json``,
+     loadable in Perfetto) where step t's ``host_plan`` span visibly
+     overlaps step t-1's ``device_compute`` span; disabled mode records
+     zero spans for the identical workload.
+  4. SLO panel — ``FleetSLOReport`` built from the measured step
+     reports plus one simulated transport window (p50/p99 response
+     delay, deadline hit rate, bytes shed, changed-tile fraction);
+     ``run.py --obs`` merges it into ``BENCH_kernels.json``.
+
+``quick=True`` is the CI smoke shape.
+"""
+from __future__ import annotations
+
+import collections
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_json, table
+from repro import obs
+from repro.fleet.runtime import fleet_reuse_step
+from repro.fleet.sharded import AsyncShardedPipeline, ShardedSuperlaunch
+from repro.kernels import ops
+from repro.launch.mesh import make_fleet_mesh
+from repro.net.batcher import simulate_transport
+from repro.net.encoder import CameraCoefficients
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs import slo as obs_slo
+from repro.obs import trace as obs_trace
+from repro.serving.detector import (DetectorConfig, PackedActivationCache,
+                                    RoIDetector)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _det():
+    return RoIDetector(DetectorConfig(tile=8, channels=(6, 8)),
+                       jax.random.PRNGKey(0))
+
+
+def _case(n_groups=2, cams=2, gshape=(5, 6), density=0.55, seed=0):
+    rng = np.random.default_rng(seed)
+    grids = {}
+    for gid in range(n_groups):
+        gs = [rng.random(gshape) < density for _ in range(cams)]
+        for g in gs:
+            g[1, 1] = True                      # never fully empty
+        grids[gid] = gs
+    return grids
+
+
+def _trace(grids, tile, steps, seed=1, move_cams=2):
+    """Mostly-static trace: per step, ``move_cams`` random cameras get
+    one tile's worth of fresh pixels; every other camera is static."""
+    rng = np.random.default_rng(seed)
+    frames = {g: [np.asarray(rng.normal(size=(gr.shape[0] * tile,
+                                              gr.shape[1] * tile, 3)),
+                             np.float32) for gr in gs]
+              for g, gs in grids.items()}
+    out = [frames]
+    for _ in range(steps - 1):
+        nxt = {g: [f.copy() for f in fs] for g, fs in frames.items()}
+        for _ in range(move_cams):
+            gid = int(rng.integers(len(grids)))
+            cam = int(rng.integers(len(grids[gid])))
+            gr = grids[gid][cam]
+            ys, xs = np.nonzero(gr)
+            j = int(rng.integers(len(ys)))
+            y0, x0 = ys[j] * tile, xs[j] * tile
+            nxt[gid][cam][y0:y0 + tile, x0:x0 + tile] = \
+                rng.normal(size=(tile, tile, 3)).astype(np.float32)
+        out.append(nxt)
+        frames = nxt
+    return out
+
+
+def _run_reuse(det, frames_list, grids, enabled):
+    """One full reuse trace with obs on/off; returns (wall_s, dispatch
+    Counter over all steps, per-step StepReports)."""
+    obs.configure(enabled=enabled, reset=True)
+    cache = PackedActivationCache()
+    total = collections.Counter()
+    reports = []
+    t0 = time.perf_counter()
+    with ops.count_kernels() as region:
+        for i, frames in enumerate(frames_list):
+            s0 = time.perf_counter()
+            _, counts, stats = fleet_reuse_step(det, frames, grids, cache)
+            total += counts
+            reports.append(obs_slo.StepReport.from_reuse(
+                i, time.perf_counter() - s0, counts, stats))
+    wall = time.perf_counter() - t0
+    bitmatch = (obs_metrics.kernel_counts() == dict(region)) if enabled \
+        else None
+    return wall, total, reports, bitmatch
+
+
+def _transport_window():
+    """One synthetic 4-camera transport window (coefficients passed
+    directly, so no scene/offline fixture is needed)."""
+    C = 4
+    coef = CameraCoefficients(body=np.full(C, 3e4), halo=np.full(C, 4e3),
+                              headers=np.full(C, 200.0),
+                              has_mask=np.ones(C, bool))
+    return simulate_transport([None] * C, None, None,
+                              np.full(C, 2.5e5), None,
+                              1.0, 10, 6, 8.0, 40.0, 120.0, 2e8,
+                              coef=coef)
+
+
+def _overlap_windows(doc):
+    """(host_plan, device_compute) step pairs whose spans overlap."""
+    hosts = {e["args"].get("step"): (e["ts"], e["ts"] + e["dur"])
+             for e in doc["traceEvents"]
+             if e.get("ph") == "X" and e["name"] == "host_plan"}
+    devs = {e["args"].get("step"): (e["ts"], e["ts"] + e["dur"])
+            for e in doc["traceEvents"]
+            if e.get("ph") == "X" and e["name"] == "device_compute"}
+    pairs = []
+    for s, (h0, h1) in hosts.items():
+        d = devs.get(s - 1)
+        if d and max(h0, d[0]) < min(h1, d[1]):
+            pairs.append(s)
+    return pairs, len(hosts), len(devs)
+
+
+def run(verbose=True, quick=False):
+    det = _det()
+    grids = _case()
+    steps = 6 if quick else 12
+    reps = 5                      # min-of-reps; CI timing noise insurance
+    frames_list = _trace(grids, det.cfg.tile, steps)
+
+    # warm every jit path once (cold + warm shapes) before timing
+    _run_reuse(det, frames_list, grids, enabled=False)
+
+    # -- panel 1+2: overhead / added dispatches / bit-compatibility ----
+    wall_off, wall_on = float("inf"), float("inf")
+    counts_off = counts_on = None
+    reports = []
+    bitmatch = False
+    for rep in range(reps):       # interleaved min-of-reps, alternating
+        for enabled in ([False, True] if rep % 2 == 0 else [True, False]):
+            w, counts, reps_out, bm = _run_reuse(
+                det, frames_list, grids, enabled)
+            if enabled:
+                wall_on = min(wall_on, w)
+                counts_on, reports, bitmatch = counts, reps_out, bm
+            else:
+                wall_off = min(wall_off, w)
+                counts_off = counts
+    overhead = (wall_on - wall_off) / wall_off
+    added = sum((counts_on - counts_off).values()) \
+        + sum((counts_off - counts_on).values())
+
+    # -- panel 3: async pipeline timeline + disabled-mode zero spans ---
+    rt = ShardedSuperlaunch(det, grids, make_fleet_mesh(1))
+    pipe = AsyncShardedPipeline(rt, rt.make_cache())
+    with obs.enabled():
+        obs.configure(reset=True)
+        for frames in frames_list:
+            pipe.submit(frames)
+        pipe.drain()
+        os.makedirs(os.path.join(REPO, "results"), exist_ok=True)
+        trace_path = os.path.join(REPO, "results", "obs_trace.json")
+        doc = obs_export.chrome_trace(trace_path)
+        enabled_spans = obs_trace.span_count()
+    overlapped, n_host, n_dev = _overlap_windows(doc)
+
+    obs.configure(enabled=False, reset=True)
+    pipe2 = AsyncShardedPipeline(rt, rt.make_cache())
+    for frames in frames_list[:2]:
+        pipe2.submit(frames)
+    pipe2.drain()
+    disabled_spans = obs_trace.span_count()
+
+    # -- panel 4: SLO report (steps + one transport window) ------------
+    with obs.enabled():
+        ts = _transport_window()
+    cache = PackedActivationCache()
+    for frames in frames_list:
+        fleet_reuse_step(det, frames, grids, cache)
+    panel = obs_slo.FleetSLOReport.build(
+        steps=reports, transport=ts, accuracy_floor=1.0,
+        accuracy_mean=1.0, cache=cache, n_windows=6).to_dict()
+    obs.configure(enabled=False, reset=True)
+
+    payload = {
+        "steps": steps,
+        "wall_disabled_s": wall_off,
+        "wall_enabled_s": wall_on,
+        "overhead_frac": overhead,
+        "added_dispatches": int(added),
+        "kernel_counts_bitmatch": bool(bitmatch),
+        "dispatches_per_trace": dict(counts_on),
+        "enabled_span_count": int(enabled_spans),
+        "disabled_span_count": int(disabled_spans),
+        "host_plan_spans": int(n_host),
+        "device_compute_spans": int(n_dev),
+        "overlapped_steps": overlapped,
+        "pipeline_overlap_fraction": float(pipe.overlap_fraction),
+        "trace_path": os.path.relpath(trace_path, REPO),
+        "slo_panel": panel,
+    }
+    if verbose:
+        print(table([
+            ["fleet wall, obs off", f"{wall_off * 1e3:.1f} ms"],
+            ["fleet wall, obs on", f"{wall_on * 1e3:.1f} ms"],
+            ["overhead", f"{overhead:+.2%}"],
+            ["added dispatches", added],
+            ["kernel counts bit-match", bitmatch],
+            ["spans (enabled run)", enabled_spans],
+            ["spans (disabled run)", disabled_spans],
+            ["host/device overlapped steps",
+             f"{len(overlapped)}/{max(n_host - 1, 1)}"],
+            ["pipeline overlap fraction",
+             f"{pipe.overlap_fraction:.2f}"],
+            ["p50 / p99 delay",
+             f"{panel['p50_delay_s']:.3f} / {panel['p99_delay_s']:.3f} s"],
+            ["deadline hit rate", f"{panel['deadline_hit_rate']:.2f}"],
+            ["changed-tile fraction",
+             f"{panel['changed_tile_fraction']:.3f}"],
+        ], ["obs", "value"]))
+        print(f"\nChrome trace -> {trace_path} "
+              f"(open in https://ui.perfetto.dev)")
+    save_json("bench_obs.json", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

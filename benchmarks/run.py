@@ -17,10 +17,62 @@ import os
 import time
 
 BENCHES = ["reid", "compression", "ablations", "sensitivity", "reducto",
-           "kernels", "fleet", "net", "stack", "reuse", "shard",
+           "kernels", "fleet", "net", "stack", "reuse", "shard", "obs",
            "roofline"]
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# headline wall-clock keys lifted from BENCH_kernels.json panels into
+# each BENCH_history.jsonl record (panel, key)
+_HEADLINE_WALLS = [
+    ("stack", "stack_kernel_wall_s"), ("stack", "chain_kernel_wall_s"),
+    ("reuse", "reuse_step_wall_s"), ("reuse", "full_step_wall_s"),
+    ("shard", "sharded_wall_2shard_s"), ("shard", "single_device_wall_s"),
+    ("obs", "wall_enabled_s"), ("obs", "overhead_frac"),
+]
+
+
+def _git_sha() -> str:
+    import subprocess
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except OSError:
+        return "unknown"
+
+
+def append_history(mode: str) -> None:
+    """One timestamped summary line per driver run appended to
+    ``BENCH_history.jsonl``: git SHA, which panels BENCH_kernels.json
+    holds, and the headline walls — the perf trajectory accumulates
+    across commits without diffing full payloads."""
+    bench_path = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+    panels = {}
+    if os.path.exists(bench_path):
+        try:
+            with open(bench_path) as f:
+                panels = json.load(f)
+        except (OSError, ValueError):
+            panels = {}
+    walls = {}
+    for panel, key in _HEADLINE_WALLS:
+        src = panels.get(panel, panels if panel == "kernels" else {})
+        if isinstance(src, dict) and key in src:
+            walls[f"{panel}.{key}"] = src[key]
+    record = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "git_sha": _git_sha(),
+        "mode": mode,
+        "panels": sorted(k for k, v in panels.items()
+                         if isinstance(v, dict)),
+        "headline_walls": walls,
+    }
+    path = os.path.join(REPO_ROOT, "BENCH_history.jsonl")
+    with open(path, "a") as f:
+        f.write(json.dumps(record, default=float) + "\n")
+    print(f"history record ({record['git_sha']}) -> {path}")
 
 
 def quick():
@@ -302,6 +354,54 @@ def shard_quick():
     print(f"\nshard smoke OK in {time.time() - t0:.1f}s -> {out}")
 
 
+def obs_quick():
+    """CI smoke for the observability layer: < 2% wall overhead on the
+    delta-gated fleet trace with ZERO added device dispatches, the
+    ``kernel_dispatches`` metric family bit-matching the legacy
+    ``ops.count_kernels`` Counter, an async-pipeline Chrome trace whose
+    host-plan spans overlap the prior step's device-compute span,
+    disabled mode recording zero spans, and a well-formed SLO panel —
+    merged into BENCH_kernels.json under "obs"."""
+    from benchmarks import bench_obs
+    t0 = time.time()
+    payload = bench_obs.run(verbose=True, quick=True)
+
+    # the telemetry layer must be (near) free: < 2% wall overhead and
+    # not a single extra kernel launch with tracing+metrics enabled
+    assert payload["overhead_frac"] < 0.02, \
+        f"obs overhead must stay < 2% " \
+        f"(got {payload['overhead_frac']:+.2%})"
+    assert payload["added_dispatches"] == 0, payload["dispatches_per_trace"]
+    assert payload["kernel_counts_bitmatch"], \
+        "kernel_dispatches metric family must bit-match ops.KERNEL_COUNTS"
+    # disabled mode is the tier-1 default: literally nothing recorded
+    assert payload["disabled_span_count"] == 0, payload
+    assert payload["enabled_span_count"] > 0, payload
+    # the async host/device overlap must be VISIBLE in the trace: every
+    # steady-state step's host_plan overlaps the prior device_compute
+    assert payload["host_plan_spans"] == payload["steps"]
+    assert payload["device_compute_spans"] == payload["steps"]
+    assert len(payload["overlapped_steps"]) >= payload["steps"] - 1, \
+        f"host_plan/device_compute spans must overlap " \
+        f"(got {payload['overlapped_steps']})"
+    assert payload["pipeline_overlap_fraction"] > 0
+    # SLO panel shape: response delay + deadline + bytes + compute keys
+    panel = payload["slo_panel"]
+    assert panel["p50_delay_s"] > 0 and \
+        panel["p99_delay_s"] >= panel["p50_delay_s"]
+    assert 0.0 <= panel["deadline_hit_rate"] <= 1.0
+    assert panel["bytes_total"] > 0
+    assert 0.0 < panel["changed_tile_fraction"] < 1.0
+    assert panel["n_steps"] == payload["steps"]
+    assert panel["cache"]["steps"] == payload["steps"]
+
+    out = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+    merged = _merge_bench_json(out, {"obs": payload})
+    with open(out, "w") as f:
+        json.dump(merged, f, indent=1, default=float)
+    print(f"\nobs smoke OK in {time.time() - t0:.1f}s -> {out}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -335,21 +435,22 @@ def main():
                          "pipeline overlap > 0, 2-shard wall ≤ single-"
                          "device, threshold-schedule accuracy floor) "
                          "merged into BENCH_kernels.json")
+    ap.add_argument("--obs", action="store_true",
+                    help="CI smoke: observability layer (< 2% overhead, "
+                         "zero added dispatches, kernel-counter bit-"
+                         "match, overlapping async host/device trace "
+                         "spans, disabled-mode zero spans, SLO panel) "
+                         "merged into BENCH_kernels.json")
     args = ap.parse_args()
-    if args.quick:
-        quick()
-    if args.fleet:
-        fleet_quick()
-    if args.net:
-        net_quick()
-    if args.stack:
-        stack_quick()
-    if args.reuse:
-        reuse_quick()
-    if args.shard:
-        shard_quick()
-    if (args.quick or args.fleet or args.net or args.stack or args.reuse
-            or args.shard):
+    smokes = [("quick", args.quick, quick), ("fleet", args.fleet,
+              fleet_quick), ("net", args.net, net_quick),
+              ("stack", args.stack, stack_quick),
+              ("reuse", args.reuse, reuse_quick),
+              ("shard", args.shard, shard_quick),
+              ("obs", args.obs, obs_quick)]
+    ran = [name for name, on, fn in smokes if on and (fn() or True)]
+    if ran:
+        append_history("+".join(ran))
         return
     selected = args.only.split(",") if args.only else BENCHES
 
@@ -362,6 +463,7 @@ def main():
         mod.run()
         print(f"[bench_{name}: {time.time() - t0:.1f}s]")
     print(f"\nall benchmarks done in {time.time() - t00:.1f}s")
+    append_history("full" if args.only is None else args.only)
 
 
 if __name__ == "__main__":

@@ -33,6 +33,7 @@ from repro.core.association import AssociationTable, Region
 from repro.core.pipeline import (OfflineConfig, OfflineResult,
                                  bbox_mask_area, run_offline)
 from repro.core.scene import Scene
+from repro.obs import metrics as obs_metrics, trace as obs_trace
 
 
 @dataclass
@@ -194,6 +195,7 @@ class DriftAdapter:
             return False
         if self._breach_start is None:
             self._breach_start = t
+            obs_metrics.DRIFT_EVENTS.inc(1, event="breach_window")
         if (t - self._breach_start >= self.cfg.confirm_frames
                 and t - self._last_resolve_t >= self.cfg.cooldown_frames):
             self._resolve(t)
@@ -204,23 +206,27 @@ class DriftAdapter:
     def _resolve(self, t: int) -> None:
         wall0 = time.time()
         cov_before = self.coverage()
-        constraints: List[List[Region]] = []
-        keys: List[Tuple[int, int]] = []
-        for tt, obj, regions in self._regions:
-            constraints.append(
-                [Region(c, self.universe.globalize(c, tiles))
-                 for c, tiles in sorted(regions.items())])
-            keys.append((tt, obj))
-        table = AssociationTable(self.universe, constraints, keys)
-        res = setcover.solve_warm(table, self.mask)
-        added = len(res.mask) - len(self.mask)
-        self.mask = set(res.mask)
-        for c in self.cameras:
-            self.cam_grids[c.cam_id] = self.universe.cam_mask_grid(
-                c.cam_id, self.mask)
+        with obs_trace.span("drift_resolve", t=t,
+                            coverage_before=cov_before):
+            constraints: List[List[Region]] = []
+            keys: List[Tuple[int, int]] = []
+            for tt, obj, regions in self._regions:
+                constraints.append(
+                    [Region(c, self.universe.globalize(c, tiles))
+                     for c, tiles in sorted(regions.items())])
+                keys.append((tt, obj))
+            table = AssociationTable(self.universe, constraints, keys)
+            res = setcover.solve_warm(table, self.mask)
+            added = len(res.mask) - len(self.mask)
+            self.mask = set(res.mask)
+            for c in self.cameras:
+                self.cam_grids[c.cam_id] = self.universe.cam_mask_grid(
+                    c.cam_id, self.mask)
+        wall = time.time() - wall0
+        obs_metrics.DRIFT_EVENTS.inc(1, event="resolve")
+        obs_metrics.DRIFT_RESOLVE_WALL.observe(wall)
         self.events.append(DriftEvent(t, cov_before, added,
-                                      len(constraints),
-                                      time.time() - wall0))
+                                      len(constraints), wall))
         self._last_resolve_t = t
         self._breach_start = None
         # the window measured the OLD mask; start the next measurement clean
@@ -264,10 +270,12 @@ class DriftAdapter:
             return False
         wall0 = time.time()
         self._last_shrink_t = t
-        res = run_offline(
-            scene, OfflineConfig(profile_frames=cfg.shrink_profile_frames,
-                                 solver="greedy"),
-            t0_frame=t - cfg.shrink_profile_frames)
+        with obs_trace.span("drift_shrink", t=t):
+            res = run_offline(
+                scene,
+                OfflineConfig(profile_frames=cfg.shrink_profile_frames,
+                              solver="greedy"),
+                t0_frame=t - cfg.shrink_profile_frames)
         candidate = frozenset(res.mask)
         n_constraints = len(res.table.constraints)
         cov_before = self._buffer_coverage(self.mask)
@@ -280,6 +288,8 @@ class DriftAdapter:
                          cov_before, cov_after if adopted else cov_before,
                          n_constraints, adopted, time.time() - wall0)
         self.shrink_events.append(ev)
+        obs_metrics.DRIFT_EVENTS.inc(
+            1, event="shrink_adopted" if adopted else "shrink_rejected")
         if not adopted:
             return False
         self.mask = set(candidate)

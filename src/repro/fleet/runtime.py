@@ -51,6 +51,7 @@ from repro.core.pipeline import (OfflineConfig, OfflineResult, OnlineConfig,
 from repro.fleet.topology import FleetScene
 from repro.kernels import ops as kops
 from repro.net.batcher import TransportStats, merge_transport
+from repro.obs import metrics as obs_metrics, trace as obs_trace
 
 
 # ---------------------------------------------------------------------------
@@ -262,7 +263,7 @@ def fleet_inference_step(det, frames: Dict[int, List],
     megakernel (absent for a 1-layer net), one scatter — ≤3 dispatches
     for the WHOLE FLEET, regardless of group count and layer count.  An
     all-empty fleet (no active tile anywhere) launches nothing."""
-    with kops.count_kernels() as c:
+    with kops.count_kernels() as c, obs_trace.span("fleet_step"):
         outs = det.superlaunch_forward(frames, grids)
     total: collections.Counter = collections.Counter(c)
     n_tiles = sum(int(np.count_nonzero(np.asarray(g, bool)))
@@ -302,9 +303,14 @@ def fleet_reuse_step(det, frames: Dict[int, List],
       cold step IS the plain super-launch: cache re-seed);
     * an all-static frame dispatches only gate + composite scatter;
     * an all-empty fleet launches nothing."""
-    with kops.count_kernels() as c:
+    t0 = time.perf_counter()
+    with kops.count_kernels() as c, \
+            obs_trace.span("fleet_reuse_step", step=cache.steps) as sp:
         outs, stats = det.superlaunch_forward_reuse(frames, grids, cache,
                                                     threshold, qstep)
+        sp.set(computed=stats.computed, cold=stats.cold)
+    obs_metrics.observe_fleet_step(stats, time.perf_counter() - t0,
+                                   path="fleet_reuse")
     total: collections.Counter = collections.Counter(c)
     n_tiles = sum(int(np.count_nonzero(np.asarray(g, bool)))
                   for gs in grids.values() for g in gs)
@@ -341,8 +347,13 @@ def sharded_fleet_step(runtime, frames: Dict[int, List], cache,
     sharded path gates on cold steps too — SPMD uniformity: cold and
     warm shards share one program.)  Returns ({gid: head maps},
     dispatch Counter, ShardedReuseStats)."""
-    with kops.count_kernels() as c:
+    t0 = time.perf_counter()
+    with kops.count_kernels() as c, \
+            obs_trace.span("sharded_fleet_step", step=cache.steps) as sp:
         outs, stats = runtime.step_reuse(frames, cache, threshold)
+        sp.set(computed=stats.computed, cold_shards=stats.cold_shards)
+    obs_metrics.observe_fleet_step(stats, time.perf_counter() - t0,
+                                   path="sharded")
     total: collections.Counter = collections.Counter(c)
     if stats.total_tiles == 0:
         expected = {}

@@ -67,6 +67,7 @@ from repro.kernels.sbnet import sbnet_scatter_fleet as _raw_scatter
 from repro.kernels.tile_delta import (COEF_BITS, RUN_BITS,
                                       tile_delta_gate as _raw_gate)
 from repro.launch.mesh import FLEET_AXIS
+from repro.obs import trace as obs_trace
 from repro.serving.detector import (ShardedActivationCache,
                                     gate_changed_rows, ref_advance_rows)
 
@@ -581,23 +582,27 @@ class AsyncShardedPipeline:
         cache.total_tiles += rt.n_total
         if rt.n_total == 0:
             self._ready.append((step, None, ShardedReuseStats(
-                0, 0, 0, 0, 0, 0, 0), frames, t0))
+                0, 0, 0, 0, 0, 0, 0), frames, t0, obs_trace.NULL_SPAN))
             return step
         rt._init_cache_arrays(cache)
         x = rt._ingest(frames)
         # 1. gate for THIS step goes first on the device queue...
-        kops.record_dispatch("tile_delta_gate")
-        stats_f, windows = rt._gate_fn()(x, cache.ref_win, rt.idx_pad)
+        with obs_trace.span("gate", step=step):
+            kops.record_dispatch("tile_delta_gate")
+            stats_f, windows = rt._gate_fn()(x, cache.ref_win, rt.idx_pad)
         # 2. ...then the conv chain of the STAGED previous step, so the
         # stats pull below waits only for the gate while the conv runs on
         h0 = time.perf_counter()
-        self._flush_staged()
-        in_flight = bool(self._ready)
-        stats_np = np.asarray(stats_f)            # blocks on the gate only
-        # 3. host planning for THIS step — overlaps step t-1's conv
-        plan = rt._host_plan(stats_np, cache, self.threshold)
-        cache.ref_win = rt._refadv_fn()(cache.ref_win, windows,
-                                        rt._put_adv(plan))
+        with obs_trace.span("host_plan", step=step) as hsp:
+            self._flush_staged()
+            in_flight = bool(self._ready)
+            stats_np = np.asarray(stats_f)        # blocks on the gate only
+            # 3. host planning for THIS step — overlaps step t-1's conv
+            plan = rt._host_plan(stats_np, cache, self.threshold)
+            cache.ref_win = rt._refadv_fn()(cache.ref_win, windows,
+                                            rt._put_adv(plan))
+            hsp.set(overlapped=in_flight, k_max=plan.k_max,
+                    computed=plan.stats.computed)
         if plan.stats.cold_shards:
             cache.cold_steps += 1
         cache.valid[:] = True
@@ -614,9 +619,14 @@ class AsyncShardedPipeline:
             return
         step, x, plan, frames, t0 = self._staged
         self._staged = None
+        # the device-compute span opens at dispatch and closes at the
+        # collect() fence — in-flight time lands on its own trace track
+        # with NO added sync (the fence already exists)
+        dspan = obs_trace.begin("device_compute", track="device",
+                                step=step, k_max=plan.k_max)
         heads = self.rt._dispatch_conv(x, plan, self.cache,
                                        parity=step % 2)
-        self._ready.append((step, heads, plan.stats, frames, t0))
+        self._ready.append((step, heads, plan.stats, frames, t0, dspan))
 
     def collect(self):
         """Block on the OLDEST completed step (the consumer edge) and
@@ -625,13 +635,16 @@ class AsyncShardedPipeline:
             self._flush_staged()
         if not self._ready:
             raise RuntimeError("collect() with no submitted step pending")
-        step, heads, stats, frames, t0 = self._ready.popleft()
+        step, heads, stats, frames, t0, dspan = self._ready.popleft()
         b0 = time.perf_counter()
-        if heads is None:
-            out = self.rt._zero_heads(frames)
-        else:
-            heads = jax.block_until_ready(heads)
-            out = self.rt._split_heads(np.asarray(heads), frames)
+        with obs_trace.span("collect", step=step):
+            if heads is None:
+                dspan.end()
+                out = self.rt._zero_heads(frames)
+            else:
+                heads = jax.block_until_ready(heads)  # the ONLY fence
+                dspan.end()
+                out = self.rt._split_heads(np.asarray(heads), frames)
         now = time.perf_counter()
         self.blocked_s += now - b0
         self.latencies.append(now - t0)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
+from repro.obs import metrics as obs_metrics
 from repro.kernels.roi_attention import (PAD_POS, block_min_positions,
                                          roi_attention as _roi_attn)
 from repro.kernels.roi_conv import (NEIGHBOR_OFFSETS, roi_conv as _roi_conv,
@@ -69,11 +70,23 @@ def record_dispatch(name: str, n: int = 1) -> None:
     context.  Every public wrapper below calls this; runtimes that launch
     raw kernels themselves (the shard_map'd fleet step dispatches one SPMD
     program that runs the kernel once on every shard) call it directly so
-    dispatch-structure assertions see their launches too."""
+    dispatch-structure assertions see their launches too.
+
+    ``name`` must come from the canonical ``obs.metrics.KERNEL_NAMES``
+    set — a typo'd counter name raises here instead of silently counting
+    zero forever.  When observability is enabled the same bump lands on
+    the ``obs`` ``kernel_dispatches`` counter family (label
+    ``kernel=name``), bit-compatible with this module's counters over
+    the same window."""
+    if name not in obs_metrics.KERNEL_NAMES:
+        raise ValueError(
+            f"unknown kernel counter {name!r}: dispatch names must come "
+            f"from obs.metrics.KERNEL_NAMES")
     with _COUNT_LOCK:
         KERNEL_COUNTS[name] += n
         for region in _COUNT_STACK.get():
             region[name] += n
+    obs_metrics.KERNEL_DISPATCHES.inc(n, kernel=name)
 
 
 @contextlib.contextmanager

@@ -38,6 +38,7 @@ from repro.net.encoder import (CameraCoefficients, RateControlConfig,
                                segment_byte_matrices, sent_matrix,
                                zero_safe_div)
 from repro.net.links import (LinkConfig, bandwidth_traces, fifo_departures)
+from repro.obs import metrics as obs_metrics, trace as obs_trace
 
 
 @dataclass
@@ -96,8 +97,25 @@ class TransportStats:
         return float(np.percentile(v, 99)) if v.size else 0.0
 
 
+def empty_transport(n_cameras: int = 0) -> TransportStats:
+    """A zero-frame TransportStats: every distribution statistic
+    (mean/p50/p99/part_p99/straggler_frac) is 0.0, never NaN or a
+    raise — the degenerate windows (no cameras, no segments, every
+    frame Reducto-filtered) fold into aggregation unharmed."""
+    empty = np.zeros(0)
+    return TransportStats(
+        latency_s=empty,
+        parts={k: empty.copy() for k in ("wait", "encode", "network",
+                                         "batching", "inference")},
+        frame_cam=np.zeros(0, np.int64), bytes_total=0.0, bytes_base=0.0,
+        frames_sent=np.zeros(n_cameras, np.int64), straggler_frames=0,
+        deadline_hits=0, quality_min=1.0)
+
+
 def merge_transport(stats: Sequence[TransportStats]) -> TransportStats:
     """Fleet-level distribution: concatenate every group's frames."""
+    if not stats:
+        return empty_transport()
     keys = list(stats[0].parts)
     return TransportStats(
         latency_s=np.concatenate([s.latency_s for s in stats]),
@@ -124,6 +142,28 @@ def simulate_transport(cameras: Sequence, cam_groups, codec,
                        coef: Optional[CameraCoefficients] = None,
                        sent: Optional[np.ndarray] = None
                        ) -> TransportStats:
+    """Instrumented entry: one ``transport`` span per simulated window
+    and the wire/deadline accounting mirrored into ``obs.metrics``
+    (no-ops while observability is disabled)."""
+    with obs_trace.span("transport", cameras=len(cameras),
+                        segments=int(n_segs)):
+        ts = _simulate_transport(cameras, cam_groups, codec, mask_areas,
+                                 keep, segment_s, frames_per_seg, n_segs,
+                                 bandwidth_mbps, rtt_ms, server_hz,
+                                 pixels_per_s, net, coef, sent)
+    obs_metrics.observe_transport(ts)
+    return ts
+
+
+def _simulate_transport(cameras: Sequence, cam_groups, codec,
+                        mask_areas: np.ndarray, keep,
+                        segment_s: float, frames_per_seg: int, n_segs: int,
+                        bandwidth_mbps: float, rtt_ms: float,
+                        server_hz: float, pixels_per_s: float,
+                        net: Optional[NetConfig] = None,
+                        coef: Optional[CameraCoefficients] = None,
+                        sent: Optional[np.ndarray] = None
+                        ) -> TransportStats:
     """Simulate one group's online window end-to-end.
 
     All model inputs are duck-typed/plain (``codec`` carries the
@@ -138,6 +178,11 @@ def simulate_transport(cameras: Sequence, cam_groups, codec,
     C = len(cameras)
     seg = segment_s
     F = frames_per_seg
+    if C == 0 or n_segs == 0 or F == 0:
+        # degenerate window: no cameras or no segments means no frames,
+        # no reductions (arr.max(axis=0) on a (0, S) array raises) —
+        # short-circuit to the canonical zero-frame stats
+        return empty_transport(C)
     if coef is None:
         coef = camera_coefficients(cameras, cam_groups, codec)
     if sent is None:
@@ -434,26 +479,33 @@ class DeadlineGroupFormer:
     def _release(self, now: float, deadline_hit: bool,
                  superseded: bool = False) -> Release:
         cams = sorted(self._pending)
-        if self._reuse_ready():
-            outputs, folded = self._release_reuse()
-        else:
-            entries = [(c, t, f, g) for c in cams
-                       for (t, f, g) in self._pending[c]]
-            frames = [f for _, _, f, _ in entries]
-            grids = [g for _, _, _, g in entries]
-            # ONE packed launch chain for every queued segment of every
-            # camera — folded straggler segments are just extra entries
-            # in the same fleet-flat index space
-            outs = self.det.fleet_forward(frames, grids)
-            outputs = {}
-            folded = {}
-            for (c, _, _, _), o in zip(entries, outs):
-                if c in outputs:
-                    folded.setdefault(c, []).append(outputs[c])
-                outputs[c] = o             # newest segment wins the slot
-            for c in cams:                 # retained state feeds a later
-                t, f, g = self._pending[c][-1]   # switch to reuse mode
-                self._retained[c] = (f, g)
+        backlog = sum(len(q) for q in self._pending.values())
+        obs_metrics.BACKLOG_DEPTH.observe(backlog)
+        obs_metrics.DEADLINE_EVENTS.inc(1, event="release")
+        if deadline_hit:
+            obs_metrics.DEADLINE_EVENTS.inc(1, event="deadline_hit")
+        with obs_trace.span("release", cams=len(cams), backlog=backlog,
+                            deadline_hit=deadline_hit):
+            if self._reuse_ready():
+                outputs, folded = self._release_reuse()
+            else:
+                entries = [(c, t, f, g) for c in cams
+                           for (t, f, g) in self._pending[c]]
+                frames = [f for _, _, f, _ in entries]
+                grids = [g for _, _, _, g in entries]
+                # ONE packed launch chain for every queued segment of
+                # every camera — folded straggler segments are just
+                # extra entries in the same fleet-flat index space
+                outs = self.det.fleet_forward(frames, grids)
+                outputs = {}
+                folded = {}
+                for (c, _, _, _), o in zip(entries, outs):
+                    if c in outputs:
+                        folded.setdefault(c, []).append(outputs[c])
+                    outputs[c] = o         # newest segment wins the slot
+                for c in cams:             # retained state feeds a later
+                    t, f, g = self._pending[c][-1]  # switch to reuse mode
+                    self._retained[c] = (f, g)
         stragglers = [c for c in cams if c in self._late]
         if set(cams) <= self._late:
             # a pure catch-up launch of the PREVIOUS cycle's stragglers:

@@ -33,6 +33,7 @@ from repro.configs.base import ModelConfig, ServeConfig
 from repro.kernels import ops as kops
 from repro.models import model as M
 from repro.models.dist import DistContext
+from repro.obs import metrics as obs_metrics, trace as obs_trace
 
 
 @dataclass
@@ -231,12 +232,14 @@ class ServingEngine:
         Returns {rid: generated tokens}."""
         results: Dict[int, np.ndarray] = {}
         group: List[Request] = []
-        for r in requests:
-            group.append(r)
-            if len(group) >= self.scfg.max_batch:
-                self._flush_group(group, greedy_steps, results)
-                group = []
-        self._flush_group(group, greedy_steps, results)
+        with obs_trace.span("serve", requests=len(requests)):
+            obs_metrics.SERVE_EVENTS.inc(len(requests), event="request")
+            for r in requests:
+                group.append(r)
+                if len(group) >= self.scfg.max_batch:
+                    self._flush_group(group, greedy_steps, results)
+                    group = []
+            self._flush_group(group, greedy_steps, results)
         return results
 
     def _flush_group(self, group: List[Request], greedy_steps: int,
@@ -259,25 +262,27 @@ class ServingEngine:
                 need.append(_round_up(len(r.tokens), pack_block) + gsteps)
             else:
                 need.append(len(r.tokens) + gsteps)
-        ring = self._ensure_ring(len(group), max(need))
+        with obs_trace.span("serve_flush", batch=len(group),
+                            decode_steps=gsteps):
+            ring = self._ensure_ring(len(group), max(need))
 
-        firsts, starts = [], []
-        for gi, r in enumerate(group):   # ragged per-request packing
-            slot = jax.tree.map(lambda x: x[gi], ring)
-            if r.keep is not None and self.scfg.roi_sparsity:
-                res = self.roi_prefill(jnp.asarray(r.tokens),
-                                       jnp.asarray(r.keep),
-                                       block=pack_block, caches=slot)
-                new_slot = res.caches
-                firsts.append(jnp.argmax(res.logits[:, -1], -1))
-                starts.append(res.n_kept)
-            else:
-                batch = {"tokens": jnp.asarray(r.tokens)[None]}
-                logits, new_slot = self.prefill(batch, caches=slot)
-                firsts.append(jnp.argmax(logits[:, -1], -1))
-                starts.append(len(r.tokens))
-            ring = self._ring_write(ring, new_slot, gi)
-        toks, ring = self._decode_stacked(ring, firsts, starts, gsteps)
+            firsts, starts = [], []
+            for gi, r in enumerate(group):   # ragged per-request packing
+                slot = jax.tree.map(lambda x: x[gi], ring)
+                if r.keep is not None and self.scfg.roi_sparsity:
+                    res = self.roi_prefill(jnp.asarray(r.tokens),
+                                           jnp.asarray(r.keep),
+                                           block=pack_block, caches=slot)
+                    new_slot = res.caches
+                    firsts.append(jnp.argmax(res.logits[:, -1], -1))
+                    starts.append(res.n_kept)
+                else:
+                    batch = {"tokens": jnp.asarray(r.tokens)[None]}
+                    logits, new_slot = self.prefill(batch, caches=slot)
+                    firsts.append(jnp.argmax(logits[:, -1], -1))
+                    starts.append(len(r.tokens))
+                ring = self._ring_write(ring, new_slot, gi)
+            toks, ring = self._decode_stacked(ring, firsts, starts, gsteps)
         self._ring = ring                 # keep buffers for next flush
         for gi, (r, ns) in enumerate(zip(group, steps)):
             results[r.rid] = toks[gi, :ns]
@@ -311,6 +316,10 @@ class ServingEngine:
             members = pending.pop(gid, [])
             if not members:
                 return
+            obs_metrics.BACKLOG_DEPTH.observe(len(members))
+            obs_metrics.SERVE_EVENTS.inc(
+                1, event="deadline_flush" if by_deadline
+                else "complete_flush")
             self._flush_group(members, greedy_steps, results)
             for r in members:
                 report.release_s[r.rid] = now
@@ -323,22 +332,26 @@ class ServingEngine:
                 report.complete_flushes += 1
                 late_quota[gid] = 0
 
-        for r in sorted(requests, key=lambda r: r.arrival_s):
-            now = r.arrival_s
-            # deadlines that expired while the stream was quiet
+        with obs_trace.span("serve_deadline", requests=len(requests)):
+            obs_metrics.SERVE_EVENTS.inc(len(requests), event="request")
+            for r in sorted(requests, key=lambda r: r.arrival_s):
+                now = r.arrival_s
+                # deadlines that expired while the stream was quiet
+                for gid in list(pending):
+                    oldest = min(m.arrival_s for m in pending[gid])
+                    if now - oldest >= deadline_s:
+                        flush(gid, oldest + deadline_s, by_deadline=True)
+                gid = r.group if r.group is not None else -1
+                if late_quota.get(gid, 0) > 0:
+                    report.straggler_requests += 1
+                    obs_metrics.SERVE_EVENTS.inc(1,
+                                                 event="straggler_request")
+                    late_quota[gid] -= 1
+                pending.setdefault(gid, []).append(r)
+                if len(pending[gid]) >= group_sizes.get(
+                        gid, self.scfg.max_batch):
+                    flush(gid, now, by_deadline=False)
             for gid in list(pending):
                 oldest = min(m.arrival_s for m in pending[gid])
-                if now - oldest >= deadline_s:
-                    flush(gid, oldest + deadline_s, by_deadline=True)
-            gid = r.group if r.group is not None else -1
-            if late_quota.get(gid, 0) > 0:
-                report.straggler_requests += 1
-                late_quota[gid] -= 1
-            pending.setdefault(gid, []).append(r)
-            if len(pending[gid]) >= group_sizes.get(
-                    gid, self.scfg.max_batch):
-                flush(gid, now, by_deadline=False)
-        for gid in list(pending):
-            oldest = min(m.arrival_s for m in pending[gid])
-            flush(gid, oldest + deadline_s, by_deadline=True)
+                flush(gid, oldest + deadline_s, by_deadline=True)
         return results, report

@@ -1,0 +1,362 @@
+"""Observability subsystem: default-off no-ops, span recording and the
+Chrome-trace export schema (golden 2-step fleet run with overlapping
+async host/device spans), the typed metrics registry, canonical
+kernel-counter-name enforcement, SLO panels, and the transport
+empty-distribution guards."""
+import json
+import os
+import re
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import obs
+from repro.fleet import fleet_reuse_step
+from repro.fleet.sharded import AsyncShardedPipeline, ShardedSuperlaunch
+from repro.kernels import ops
+from repro.launch.mesh import make_fleet_mesh
+from repro.net.batcher import (TransportStats, empty_transport,
+                               merge_transport, simulate_transport)
+from repro.obs import export, metrics, slo, trace
+from repro.serving.detector import (DetectorConfig, PackedActivationCache,
+                                    RoIDetector)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean():
+    """Every test leaves observability off and empty (tier-1 default)."""
+    obs.configure(enabled=False, reset=True)
+    yield
+    obs.configure(enabled=False, reset=True)
+
+
+@pytest.fixture(scope="module")
+def small_det():
+    return RoIDetector(DetectorConfig(tile=8, channels=(4, 6)),
+                       jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# default-off: zero spans, zero metric values, zero device dispatches
+# ---------------------------------------------------------------------------
+
+def test_disabled_by_default_records_nothing():
+    assert not obs.is_enabled()
+    n0 = trace.span_count()
+    with trace.span("x", a=1):
+        with trace.span("y"):
+            pass
+    trace.begin("dev").end()
+    assert trace.span_count() == n0
+    c = metrics.counter("t_disabled_counter")
+    c.inc(5)
+    g = metrics.gauge("t_disabled_gauge")
+    g.set(3.0)
+    h = metrics.histogram("t_disabled_hist")
+    h.observe(1.0)
+    assert c.total() == 0 and g.value() == 0.0 and h.count() == 0
+
+
+def test_enabled_context_is_scoped():
+    with obs.enabled():
+        assert obs.is_enabled()
+        with trace.span("scoped"):
+            pass
+    assert not obs.is_enabled()
+    assert any(e[0] == "scoped" for e in trace.events())
+
+
+# ---------------------------------------------------------------------------
+# typed registry semantics
+# ---------------------------------------------------------------------------
+
+def test_registry_type_and_label_safety():
+    c = metrics.counter("t_typed", labels=("camera", "group"))
+    with pytest.raises(ValueError):          # same name, different type
+        metrics.gauge("t_typed", labels=("camera", "group"))
+    with pytest.raises(ValueError):          # same name, different labels
+        metrics.counter("t_typed", labels=("camera",))
+    assert metrics.counter("t_typed", labels=("camera", "group")) is c
+    with obs.enabled():
+        c.inc(2, camera="c0", group="g1")
+        with pytest.raises(ValueError):      # undeclared label set
+            c.inc(1, camera="c0")
+    assert c.value(camera="c0", group="g1") == 2
+
+
+def test_snapshot_shape_and_reset():
+    with obs.enabled():
+        metrics.counter("t_snap_c", labels=("k",)).inc(3, k="a")
+        metrics.histogram("t_snap_h").observe(1.0)
+        metrics.histogram("t_snap_h").observe(3.0)
+    snap = metrics.REGISTRY.snapshot()
+    assert snap["t_snap_c"]["type"] == "counter"
+    assert snap["t_snap_c"]["values"] == [
+        {"labels": {"k": "a"}, "value": 3}]
+    hv = snap["t_snap_h"]["values"][0]["value"]
+    assert hv["count"] == 2 and hv["sum"] == 4.0 and hv["p50"] == 2.0
+    json.dumps(snap)                         # serializable as-is
+    metrics.REGISTRY.reset()
+    assert metrics.REGISTRY.get("t_snap_c").total() == 0
+
+
+# ---------------------------------------------------------------------------
+# canonical kernel-counter names (satellite: typo'd names fail loudly)
+# ---------------------------------------------------------------------------
+
+def test_record_dispatch_rejects_unknown_names():
+    # typo'd names built by concatenation so the literal scan below
+    # doesn't flag this test's own fixtures
+    typo = "sbnet_gather" + "r"
+    with pytest.raises(ValueError, match=typo):
+        ops.record_dispatch(typo)
+    before = ops.KERNEL_COUNTS["sbnet_gather"]
+    with pytest.raises(ValueError):
+        ops.record_dispatch("tile_" + "delta_gte")
+    assert ops.KERNEL_COUNTS["sbnet_gather"] == before
+
+
+def test_kernel_dispatch_mirror_bitmatches_legacy_counter():
+    with obs.enabled():
+        obs.configure(reset=True)
+        with ops.count_kernels() as region:
+            ops.record_dispatch("roi_conv_entry")
+            ops.record_dispatch("roi_conv_stack")
+            ops.record_dispatch("sbnet_scatter_fleet", 2)
+        assert metrics.kernel_counts() == dict(region)
+
+
+# string literals that match the kernel-name grammar but are benchmark
+# panel keys, not dispatch counters — anything else outside KERNEL_NAMES
+# is a typo and fails the scan below
+PANEL_KEYS = frozenset({
+    "tile_delta_dispatches", "tile_delta_bit_exact",
+    "tile_delta_static_frac", "roi_conv_interior_err",
+    "roi_conv_checked_tiles", "roi_conv_batched",
+})
+
+_KNAME = re.compile(
+    r"[\"'](sbnet_[a-z_]+|tile_delta[a-z_]*|roi_conv[a-z_]*"
+    r"|roi_attention[a-z_]*)[\"']")
+
+
+def _scan_literals(*dirnames):
+    found = set()
+    for d in dirnames:
+        for root, _, files in os.walk(os.path.join(REPO, d)):
+            for fn in files:
+                if fn.endswith(".py"):
+                    with open(os.path.join(root, fn)) as f:
+                        found |= set(_KNAME.findall(f.read()))
+    return found
+
+
+def test_counter_names_in_tests_and_benchmarks_are_canonical():
+    """Every kernel-counter-shaped string asserted anywhere in tests/
+    benchmarks/src comes from the ONE canonical frozenset (or the known
+    panel-key allowlist) — a typo'd counter name fails here instead of
+    silently counting zero."""
+    found = _scan_literals("tests", "benchmarks", "src")
+    assert found >= {"tile_delta_gate", "roi_conv_entry"}  # scan sanity
+    stray = found - metrics.KERNEL_NAMES - PANEL_KEYS
+    assert not stray, f"non-canonical kernel counter names: {stray}"
+
+
+def test_every_canonical_name_has_a_dispatch_site():
+    pat = re.compile(r"record_dispatch\(\s*[\"']([a-z_]+)[\"']")
+    found = set()
+    for root, _, files in os.walk(os.path.join(REPO, "src")):
+        for fn in files:
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn)) as f:
+                    found |= set(pat.findall(f.read()))
+    assert found == metrics.KERNEL_NAMES
+
+
+# ---------------------------------------------------------------------------
+# golden trace-export schema (satellite: 2-step fleet run)
+# ---------------------------------------------------------------------------
+
+def _intervals(doc, name):
+    return [(e["ts"], e["ts"] + e["dur"])
+            for e in doc["traceEvents"] if e.get("name") == name]
+
+
+def test_two_step_fleet_trace_is_wellformed_chrome_json(small_det,
+                                                        tmp_path):
+    """A 2-step async-pipeline fleet run exports valid Chrome
+    ``trace_event`` JSON: pid/tid/ts/dur/name/args on every span, spans
+    on one thread properly nested or disjoint, and the step-1 host-plan
+    span OVERLAPPING the step-0 device-compute span (the pipeline's
+    host/device overlap made visible)."""
+    det = small_det
+    rng = np.random.default_rng(0)
+    grids = {0: [rng.random((3, 4)) < 0.6], 1: [rng.random((2, 3)) < 0.7]}
+    frames = [{g: [rng.random((a.shape[0] * 8, a.shape[1] * 8, 3)
+                              ).astype(np.float32) for a in gs]
+               for g, gs in grids.items()} for _ in range(2)]
+    rt = ShardedSuperlaunch(det, grids, make_fleet_mesh(1))
+    pipe = AsyncShardedPipeline(rt, rt.make_cache())
+    with obs.enabled():
+        obs.configure(reset=True)
+        for f in frames:
+            pipe.submit(f)
+        pipe.drain()
+        path = tmp_path / "trace.json"
+        doc = export.chrome_trace(str(path))
+
+    with open(path) as f:
+        on_disk = json.load(f)
+    assert on_disk == doc
+    evs = doc["traceEvents"]
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert xs, "no spans recorded"
+    for e in xs:                      # golden field schema
+        assert set(e) >= {"ph", "pid", "tid", "ts", "dur", "name", "args"}
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+        assert e["ts"] >= 0 and e["dur"] >= 0
+        assert isinstance(e["args"], dict)
+    assert any(e["ph"] == "M" and e["name"] == "process_name"
+               for e in evs)
+    # same-thread spans nest or are disjoint (never partially overlap)
+    by_tid = {}
+    for e in xs:
+        by_tid.setdefault(e["tid"], []).append(
+            (e["ts"], e["ts"] + e["dur"]))
+    for spans in by_tid.values():
+        for i, (a0, a1) in enumerate(spans):
+            for b0, b1 in spans[i + 1:]:
+                disjoint = a1 <= b0 or b1 <= a0
+                nested = (a0 <= b0 and b1 <= a1) or (b0 <= a0 and a1 <= b1)
+                assert disjoint or nested, (spans,)
+    # both pipeline step spans present on their own tracks...
+    hosts = {e["args"]["step"]: (e["ts"], e["ts"] + e["dur"])
+             for e in xs if e["name"] == "host_plan"}
+    devs = {e["args"]["step"]: (e["ts"], e["ts"] + e["dur"])
+            for e in xs if e["name"] == "device_compute"}
+    assert set(hosts) == {0, 1} and set(devs) == {0, 1}
+    # ...and step 1's host planning ran INSIDE step 0's device window
+    h0, h1 = hosts[1]
+    d0, d1 = devs[0]
+    assert max(h0, d0) < min(h1, d1), (hosts, devs)
+    # the device track is a separate named row
+    dev_tid = next(e["tid"] for e in xs if e["name"] == "device_compute")
+    assert dev_tid >= trace.TRACK_TID_BASE
+    assert any(e["ph"] == "M" and e["name"] == "thread_name"
+               and e["tid"] == dev_tid
+               and e["args"]["name"] == "device" for e in evs)
+
+
+# ---------------------------------------------------------------------------
+# fleet-step metrics capture (quantities previously dropped on the floor)
+# ---------------------------------------------------------------------------
+
+def test_fleet_reuse_step_records_tiles_cache_and_span(small_det):
+    det = small_det
+    rng = np.random.default_rng(1)
+    grids = {0: [rng.random((3, 3)) < 0.8]}
+    f0 = {0: [rng.random((24, 24, 3)).astype(np.float32)]}
+    cache = PackedActivationCache()
+    with obs.enabled():
+        obs.configure(reset=True)
+        _, c0, s0 = fleet_reuse_step(det, f0, grids, cache)   # cold
+        _, c1, s1 = fleet_reuse_step(det, f0, grids, cache)   # all-static
+    tiles = {k[0]: v for k, v in metrics.TILES.items()}
+    assert tiles["total"] == s0.total_tiles + s1.total_tiles
+    assert tiles["computed"] == s0.computed + s1.computed
+    ev = {k[0]: v for k, v in metrics.CACHE_EVENTS.items()}
+    assert ev["step"] == 2 and ev["cold_step"] == 1
+    # the warm step served every non-recomputed tile from the cache
+    assert ev["hit"] == s1.total_tiles - s1.computed
+    assert metrics.CHANGED_FRACTION.value() == 0.0   # latest step static
+    names = [e[0] for e in trace.events()]
+    assert names.count("fleet_reuse_step") == 2
+    # dispatch mirror stayed bit-compatible across both steps
+    assert metrics.kernel_counts() == dict(c0 + c1)
+
+
+# ---------------------------------------------------------------------------
+# transport empty-distribution guards (satellite: zero-frame == 0.0)
+# ---------------------------------------------------------------------------
+
+def test_zero_frame_transport_stats_are_zero_not_nan():
+    ts = empty_transport(3)
+    assert ts.p50_s == 0.0 and ts.p99_s == 0.0 and ts.mean_s == 0.0
+    assert ts.straggler_frac == 0.0 and ts.shed_bytes == 0.0
+    for k in ts.parts:
+        assert ts.part_p99(k) == 0.0
+    assert ts.parts_mean() == {k: 0.0 for k in ts.parts}
+    assert ts.frames_sent.shape == (3,)
+
+
+def test_simulate_transport_degenerate_shapes_return_zero_stats():
+    class _Cam:                       # never touched on the guard path
+        cam_id = 0
+    # no cameras at all (the (0, S) max-reduction used to raise)
+    ts = simulate_transport([], [], None, np.zeros(0), None,
+                            1.0, 10, 5, 10.0, 40.0, 100.0, 1e7)
+    assert ts.latency_s.size == 0 and ts.p50_s == 0.0 and ts.p99_s == 0.0
+    # cameras but a zero-segment window
+    ts2 = simulate_transport([_Cam()], [0], None, np.zeros(1), None,
+                             1.0, 10, 0, 10.0, 40.0, 100.0, 1e7)
+    assert ts2.p50_s == 0.0 and ts2.part_p99("wait") == 0.0
+    assert ts2.frames_sent.shape == (1,)
+
+
+def test_merge_transport_empty_and_roundtrip():
+    assert merge_transport([]).p99_s == 0.0
+    m = merge_transport([empty_transport(1), empty_transport(2)])
+    assert m.p50_s == 0.0 and m.frames_sent.shape == (3,)
+
+
+# ---------------------------------------------------------------------------
+# SLO panels
+# ---------------------------------------------------------------------------
+
+def _fake_transport():
+    lat = np.linspace(0.1, 1.0, 100)
+    parts = {k: lat / 5 for k in ("wait", "encode", "network",
+                                  "batching", "inference")}
+    return TransportStats(latency_s=lat, parts=parts,
+                          frame_cam=np.zeros(100, np.int64),
+                          bytes_total=6e6, bytes_base=1e7,
+                          frames_sent=np.full(4, 25, np.int64),
+                          straggler_frames=5, deadline_hits=3,
+                          quality_min=0.8, shed_halo_bytes=3e6,
+                          shed_body_bytes=1e6)
+
+
+def test_fleet_slo_report_aggregates_and_serializes():
+    steps = [slo.StepReport(step=i, wall_s=0.1 + 0.01 * i,
+                            total_tiles=100, changed_tiles=20 + i,
+                            computed_tiles=30 + i, launched_tiles=32,
+                            cold=(i == 0), dispatches={"roi_conv_entry": 1})
+             for i in range(4)]
+    ts = _fake_transport()
+    rep = slo.FleetSLOReport.build(steps=steps, transport=ts,
+                                   accuracy_floor=0.97,
+                                   accuracy_mean=0.99, n_windows=30)
+    assert rep.p50_delay_s == pytest.approx(ts.p50_s)
+    assert rep.p99_delay_s == pytest.approx(ts.p99_s)
+    assert rep.deadline_hit_rate == pytest.approx(3 / 30)
+    assert rep.shed_bytes == pytest.approx(4e6)
+    assert rep.changed_tile_fraction == pytest.approx(
+        sum(20 + i for i in range(4)) / 400)
+    assert rep.steps[0].compute_fraction == pytest.approx(0.30)
+    d = rep.to_dict()
+    json.dumps(d)
+    assert d["n_steps"] == 4 and len(d["steps"]) == 4
+    assert d["part_p99_s"].keys() == ts.parts.keys()
+    assert d["accuracy_floor"] == 0.97
+
+
+def test_step_report_from_reuse_duck_types_sharded_stats():
+    class _S:                          # ShardedReuseStats-shaped
+        total_tiles, raw_changed, computed, launched = 10, 4, 6, 8
+        cold_shards = 1
+    r = slo.StepReport.from_reuse(2, 0.5, {"tile_delta_gate": 1}, _S())
+    assert r.cold and r.changed_fraction == 0.4

@@ -275,6 +275,9 @@ def test_count_kernels_regions_are_thread_isolated():
     ops.KERNEL_COUNTS.clear()
     errs, done = [], []
     gate = threading.Barrier(4)
+    # distinct CANONICAL names (record_dispatch validates against
+    # obs.metrics.KERNEL_NAMES), one per worker thread
+    names = ["sbnet_gather", "roi_conv", "tile_delta", "roi_attention"]
 
     def worker(name, n):
         try:
@@ -287,7 +290,7 @@ def test_count_kernels_regions_are_thread_isolated():
         except Exception as e:            # pragma: no cover
             errs.append(e)
 
-    ts = [threading.Thread(target=worker, args=(f"k{i}", 50 + i))
+    ts = [threading.Thread(target=worker, args=(names[i], 50 + i))
           for i in range(4)]
     with ops.count_kernels() as outer:
         for t in ts:
@@ -299,7 +302,7 @@ def test_count_kernels_regions_are_thread_isolated():
     assert dict(outer) == {}
     # ...but the global counter accumulated every thread's dispatches
     for i in range(4):
-        assert ops.KERNEL_COUNTS[f"k{i}"] == 50 + i
+        assert ops.KERNEL_COUNTS[names[i]] == 50 + i
 
 
 # ---------------------------------------------------------------------------

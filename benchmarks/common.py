@@ -42,6 +42,67 @@ def offline_baseline():
     return full_frame_offline(paper_scene())
 
 
+# ---------------------------------------------------------------------------
+# BENCH_history.jsonl record schema
+# ---------------------------------------------------------------------------
+
+#: version stamped into every appended record; bump on layout changes.
+#: Records WITHOUT a "schema" key predate versioning — the sentinel
+#: skips them with a warning instead of crashing.
+HISTORY_SCHEMA_VERSION = 1
+
+_HISTORY_REQUIRED = {
+    "schema": int, "ts": str, "git_sha": str, "mode": str,
+    "panels": list, "headline_walls": dict,
+}
+
+
+def validate_history_record(record) -> list:
+    """Schema-v1 validation for one BENCH_history.jsonl record.
+
+    Returns a list of human-readable problems (empty = valid):
+    required keys with the right types, string panel names, numeric
+    headline walls, and — when present — a flat numeric ``frontier``
+    dict (the SLO headline block).  ``run.py`` refuses to append a
+    record that fails this."""
+    problems = []
+    if not isinstance(record, dict):
+        return [f"record must be a dict, got {type(record).__name__}"]
+    for key, typ in _HISTORY_REQUIRED.items():
+        if key not in record:
+            problems.append(f"missing required key {key!r}")
+        elif not isinstance(record[key], typ):
+            problems.append(f"{key!r} must be {typ.__name__}, got "
+                            f"{type(record[key]).__name__}")
+    if isinstance(record.get("schema"), int) \
+            and record["schema"] < 1:
+        problems.append(f"schema version must be >= 1, got "
+                        f"{record['schema']}")
+    if isinstance(record.get("panels"), list):
+        for p in record["panels"]:
+            if not isinstance(p, str):
+                problems.append(f"panels entries must be str, got {p!r}")
+                break
+    if isinstance(record.get("headline_walls"), dict):
+        for k, v in record["headline_walls"].items():
+            if not isinstance(k, str) or isinstance(v, bool) \
+                    or not isinstance(v, (int, float)):
+                problems.append(f"headline_walls[{k!r}] must be numeric, "
+                                f"got {v!r}")
+                break
+    if "frontier" in record:
+        if not isinstance(record["frontier"], dict):
+            problems.append("frontier must be a flat dict")
+        else:
+            for k, v in record["frontier"].items():
+                if not isinstance(k, str) or isinstance(v, bool) \
+                        or not isinstance(v, (int, float)):
+                    problems.append(f"frontier[{k!r}] must be numeric, "
+                                    f"got {v!r}")
+                    break
+    return problems
+
+
 def save_json(name: str, payload):
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, name)

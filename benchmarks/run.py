@@ -18,7 +18,7 @@ import time
 
 BENCHES = ["reid", "compression", "ablations", "sensitivity", "reducto",
            "kernels", "fleet", "net", "stack", "reuse", "shard", "obs",
-           "roofline"]
+           "slo", "roofline"]
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -46,8 +46,14 @@ def _git_sha() -> str:
 def append_history(mode: str) -> None:
     """One timestamped summary line per driver run appended to
     ``BENCH_history.jsonl``: git SHA, which panels BENCH_kernels.json
-    holds, and the headline walls — the perf trajectory accumulates
-    across commits without diffing full payloads."""
+    holds, the headline walls, and — when an SLO frontier panel exists —
+    its flat ``headline`` block as ``frontier``.  Records are stamped
+    with ``HISTORY_SCHEMA_VERSION`` and validated before the append; a
+    malformed record is REFUSED (the sentinel depends on this stream
+    staying parseable)."""
+    from benchmarks.common import (HISTORY_SCHEMA_VERSION,
+                                   validate_history_record)
+
     bench_path = os.path.join(REPO_ROOT, "BENCH_kernels.json")
     panels = {}
     if os.path.exists(bench_path):
@@ -60,8 +66,9 @@ def append_history(mode: str) -> None:
     for panel, key in _HEADLINE_WALLS:
         src = panels.get(panel, panels if panel == "kernels" else {})
         if isinstance(src, dict) and key in src:
-            walls[f"{panel}.{key}"] = src[key]
+            walls[f"{panel}.{key}"] = float(src[key])
     record = {
+        "schema": HISTORY_SCHEMA_VERSION,
         "ts": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
         "git_sha": _git_sha(),
         "mode": mode,
@@ -69,6 +76,15 @@ def append_history(mode: str) -> None:
                          if isinstance(v, dict)),
         "headline_walls": walls,
     }
+    headline = panels.get("slo", {}).get("headline")
+    if isinstance(headline, dict):
+        record["frontier"] = {k: float(v) for k, v in headline.items()
+                              if isinstance(v, (int, float))
+                              and not isinstance(v, bool)}
+    problems = validate_history_record(record)
+    if problems:
+        raise ValueError("refusing to append malformed history record: "
+                         + "; ".join(problems))
     path = os.path.join(REPO_ROOT, "BENCH_history.jsonl")
     with open(path, "a") as f:
         f.write(json.dumps(record, default=float) + "\n")
@@ -371,6 +387,11 @@ def obs_quick():
     assert payload["overhead_frac"] < 0.02, \
         f"obs overhead must stay < 2% " \
         f"(got {payload['overhead_frac']:+.2%})"
+    # the overhead number is a min over interleaved reps; the recorded
+    # rep count + spread prove the noise treatment actually ran
+    assert payload["rep_count"] >= 3, payload["rep_count"]
+    assert payload["spread_disabled_frac"] >= 0.0 \
+        and payload["spread_enabled_frac"] >= 0.0, payload
     assert payload["added_dispatches"] == 0, payload["dispatches_per_trace"]
     assert payload["kernel_counts_bitmatch"], \
         "kernel_dispatches metric family must bit-match ops.KERNEL_COUNTS"
@@ -400,6 +421,78 @@ def obs_quick():
     with open(out, "w") as f:
         json.dump(merged, f, indent=1, default=float)
     print(f"\nobs smoke OK in {time.time() - t0:.1f}s -> {out}")
+
+
+def slo_quick():
+    """CI smoke for the SLO frontier harness: a small fixed sweep grid
+    (scale x congestion x static fraction, plus the real-LTE-trace and
+    serve-rate legs) with the frontier sanity properties asserted —
+    p99 delay non-decreasing in scripted congestion severity at fixed
+    scale/profile, accuracy floor >= 99%, the loadgen harness adding
+    zero kernel dispatches and < 2% wall vs driving the runtime inline,
+    constant-trace parity with the analytic formula < 1e-6, and CrossRoI
+    masks beating full-frame p50 under the real uplink trace — merged
+    into BENCH_kernels.json under "slo" (its flat ``headline`` block
+    becomes the history record's ``frontier``)."""
+    from benchmarks import bench_slo
+    t0 = time.time()
+    payload = bench_slo.run(verbose=True, quick=True)
+
+    # >= 3 swept axes, every grid point a full FleetSLOReport
+    axes = payload["axes"]
+    assert len(axes["scale"]) >= 2 and len(axes["congestion"]) >= 3 \
+        and len(axes["static_fraction"]) >= 2, axes
+    for r in payload["grid"]:
+        slo = r["slo"]
+        assert slo["p99_delay_s"] >= slo["p50_delay_s"] > 0, r["point"]
+        assert slo["n_steps"] > 0 and slo["bytes_total"] > 0, r["point"]
+        assert 0.0 <= slo["deadline_hit_rate"] <= 1.0, r["point"]
+    # frontier sanity: more congestion can't mean faster responses
+    assert payload["monotonic_p99_ok"], \
+        "p99 delay must be non-decreasing in congestion severity"
+    assert payload["accuracy_floor_min"] >= 0.99, \
+        f"frontier accuracy floor broke 99% " \
+        f"(got {payload['accuracy_floor_min']:.4f})"
+    # the harness itself must be free
+    tax = payload["loadgen"]
+    assert tax["added_dispatches"] == 0, tax
+    assert tax["overhead_frac"] < 0.02, \
+        f"loadgen harness overhead must stay < 2% " \
+        f"(got {tax['overhead_frac']:+.2%} over {tax['rep_count']} reps)"
+    # real-trace replay: analytic parity + the paper claim on real bw
+    tr = payload["trace_replay"]
+    assert tr["const_trace_parity_rel_err"] < 1e-6, tr
+    assert tr["p50_reduction"] >= 0.20, \
+        f"RoI masks must cut p50 delay >= 20% under the real LTE " \
+        f"uplink trace (got {tr['p50_reduction']:.1%})"
+    assert tr["p99_reduction"] > 0.0, tr
+    assert all(s["served"] == s["n_requests"] for s in payload["serve"])
+
+    out = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+    merged = _merge_bench_json(out, {"slo": payload})
+    with open(out, "w") as f:
+        json.dump(merged, f, indent=1, default=float)
+    print(f"\nslo smoke OK in {time.time() - t0:.1f}s -> {out}")
+
+
+def sentinel_gate(window: int = 5) -> None:
+    """CI gate over BENCH_history.jsonl: first the sentinel's self-test
+    (a temp history with an injected 2x wall slowdown MUST be flagged
+    while the clean and ±2%-noise copies pass), then the real analysis —
+    exits non-zero with a delta table naming the metric on a confirmed
+    regression."""
+    import sys
+
+    from repro.obs import sentinel
+
+    path = os.path.join(REPO_ROOT, "BENCH_history.jsonl")
+    self_res = sentinel.self_test(path, window=window)
+    print(f"sentinel self-test OK: 2x slowdown flagged on "
+          f"{self_res['flagged_metrics']}, clean + noise-band pass")
+    report = sentinel.analyze_path(path, window=window)
+    print(report.render())
+    if report.has_regression:
+        sys.exit(1)
 
 
 def main():
@@ -441,16 +534,36 @@ def main():
                          "match, overlapping async host/device trace "
                          "spans, disabled-mode zero spans, SLO panel) "
                          "merged into BENCH_kernels.json")
+    ap.add_argument("--slo", action="store_true",
+                    help="CI smoke: SLO frontier sweep (scale x "
+                         "congestion x static fraction + real-LTE-trace "
+                         "and serve-rate legs; p99 monotone in "
+                         "severity, accuracy floor >= 99%%, zero-"
+                         "dispatch < 2%% loadgen tax, const-trace "
+                         "analytic parity) merged into "
+                         "BENCH_kernels.json")
+    ap.add_argument("--sentinel", action="store_true",
+                    help="CI gate: self-test the regression sentinel "
+                         "(injected 2x slowdown must be flagged), then "
+                         "compare the latest BENCH_history.jsonl SHA "
+                         "against the median-of-window baseline; exits "
+                         "non-zero on a confirmed regression")
     args = ap.parse_args()
     smokes = [("quick", args.quick, quick), ("fleet", args.fleet,
               fleet_quick), ("net", args.net, net_quick),
               ("stack", args.stack, stack_quick),
               ("reuse", args.reuse, reuse_quick),
               ("shard", args.shard, shard_quick),
-              ("obs", args.obs, obs_quick)]
+              ("obs", args.obs, obs_quick),
+              ("slo", args.slo, slo_quick)]
     ran = [name for name, on, fn in smokes if on and (fn() or True)]
     if ran:
         append_history("+".join(ran))
+        if args.sentinel:
+            sentinel_gate()
+        return
+    if args.sentinel:
+        sentinel_gate()       # gate-only invocation: no panel, no append
         return
     selected = args.only.split(",") if args.only else BENCHES
 

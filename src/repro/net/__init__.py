@@ -10,9 +10,10 @@ deadline-based group batching with straggler accounting (``batcher``).
 distributions; in the uncongested limit it converges identically to the
 analytic ``pipeline.online_system_metrics`` formula.
 """
-from repro.net.links import (CongestionEpisode, LinkConfig,
+from repro.net.links import (CongestionEpisode, LinkConfig, UplinkTrace,
                              bandwidth_traces, default_congestion_trace,
-                             fifo_departures, queue_wait)
+                             fifo_departures, load_bundled_trace,
+                             queue_wait)
 from repro.net.encoder import (CameraCoefficients, RateControlConfig,
                                activity, camera_coefficients,
                                gate_threshold_schedule,
@@ -26,8 +27,9 @@ from repro.net.batcher import (DeadlineGroupFormer, NetConfig, Release,
                                simulate_transport)
 
 __all__ = [
-    "CongestionEpisode", "LinkConfig", "bandwidth_traces",
-    "default_congestion_trace", "fifo_departures", "queue_wait",
+    "CongestionEpisode", "LinkConfig", "UplinkTrace", "bandwidth_traces",
+    "default_congestion_trace", "fifo_departures", "load_bundled_trace",
+    "queue_wait",
     "CameraCoefficients", "RateControlConfig", "activity",
     "camera_coefficients", "gate_threshold_schedule",
     "rate_controlled_departures",

@@ -23,10 +23,82 @@ Two structural choices tie the simulation to the analytic model:
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
+
+TRACE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "traces")
+
+
+@dataclass(frozen=True)
+class UplinkTrace:
+    """A measured uplink bandwidth trace replayed as the group's shared
+    budget.
+
+    ``t_s`` are sample timestamps (monotone, starting at 0) and ``mbps``
+    the measured throughput at each timestamp; replay is piecewise-
+    constant (each sample holds until the next) and wraps
+    **deterministically** when the simulation horizon outruns the trace
+    (``sample(t) == sample(t % duration_s)``), so a short drive log can
+    price an arbitrarily long window reproducibly.  The scripted
+    ``CongestionEpisode`` path stays available as the synthetic fallback
+    — episodes multiply on top of whatever budget the trace replays."""
+    t_s: np.ndarray                    # (T,) seconds, monotone from 0
+    mbps: np.ndarray                   # (T,) measured uplink throughput
+    name: str = "trace"
+
+    def __post_init__(self):
+        t = np.asarray(self.t_s, np.float64)
+        m = np.asarray(self.mbps, np.float64)
+        if t.ndim != 1 or t.shape != m.shape or t.size == 0:
+            raise ValueError("trace needs matching 1-D t_s/mbps samples")
+        if t[0] != 0.0 or (np.diff(t) <= 0).any():
+            raise ValueError("trace timestamps must start at 0 and be "
+                             "strictly increasing")
+        object.__setattr__(self, "t_s", t)
+        object.__setattr__(self, "mbps", m)
+
+    @property
+    def duration_s(self) -> float:
+        """Replay period: the last sample holds for the trace's median
+        sample interval, then the trace wraps."""
+        if self.t_s.size == 1:
+            return 1.0
+        return float(self.t_s[-1] + np.median(np.diff(self.t_s)))
+
+    def sample(self, t: np.ndarray) -> np.ndarray:
+        """Piecewise-constant bandwidth (Mbps) at wall times ``t`` with
+        deterministic wrap-around past ``duration_s``."""
+        tm = np.mod(np.asarray(t, np.float64), self.duration_s)
+        idx = np.searchsorted(self.t_s, tm, side="right") - 1
+        return self.mbps[np.maximum(idx, 0)]
+
+    @classmethod
+    def from_csv(cls, path: str, name: Optional[str] = None
+                 ) -> "UplinkTrace":
+        """Load a ``time_s,mbps`` CSV (``#`` comment lines ignored)."""
+        rows = np.loadtxt(path, delimiter=",", comments="#", ndmin=2)
+        if rows.shape[1] != 2:
+            raise ValueError(f"{path}: expected 2 columns (time_s,mbps), "
+                             f"got {rows.shape[1]}")
+        base = os.path.splitext(os.path.basename(path))[0]
+        return cls(rows[:, 0] - rows[0, 0], rows[:, 1], name or base)
+
+
+def load_bundled_trace(name: str = "lte_uplink") -> UplinkTrace:
+    """A cellular uplink trace checked into the repo
+    (``net/traces/<name>.csv``, Ghent 4G/LTE drive-log format:
+    per-second throughput samples with deep fades and recovery ramps) —
+    the real-world bandwidth axis for the SLO frontier sweeps."""
+    path = os.path.join(TRACE_DIR, f"{name}.csv")
+    if not os.path.exists(path):
+        raise FileNotFoundError(
+            f"no bundled trace {name!r}; available: "
+            f"{sorted(os.path.splitext(f)[0] for f in os.listdir(TRACE_DIR) if f.endswith('.csv'))}")
+    return UplinkTrace.from_csv(path, name)
 
 
 @dataclass(frozen=True)
@@ -54,6 +126,14 @@ class LinkConfig:
     jitter_std: float = 0.0              # lognormal sigma per (cam, seg)
     seed: int = 0
     congestion: Tuple[CongestionEpisode, ...] = ()
+    # real-trace replay: when set, the group's shared uplink budget per
+    # segment comes from the measured trace (sampled at each segment's
+    # close time, deterministic wrap) instead of the constant
+    # ``bandwidth_mbps``; share/jitter/congestion semantics are
+    # unchanged on top of it.  ``trace_scale`` rescales the replayed
+    # Mbps (sweep severity without editing the file).
+    trace: Optional[UplinkTrace] = None
+    trace_scale: float = 1.0
 
 
 def default_congestion_trace(duration_s: float,
@@ -78,16 +158,26 @@ def bandwidth_traces(cfg: LinkConfig, bandwidth_mbps: float,
     proportional split (zero-load cameras get an equal share so their
     trace stays finite).  Jitter and congestion multiply the base share;
     congestion episodes are evaluated against each segment's close time.
+    With ``cfg.trace`` set, the shared budget is the replayed
+    measurement sampled at each segment's close instead of the constant
+    ``bandwidth_mbps`` — the share split, jitter, and episode semantics
+    are identical either way, so a constant-valued trace reproduces the
+    analytic calibration exactly.
     """
     C, S = load_bytes.shape
-    base_Bps = bandwidth_mbps * 1e6 / 8.0
+    if cfg.trace is not None:
+        close = (np.arange(S) + 1.0) * segment_s
+        budget_Bps = cfg.trace.sample(close) * cfg.trace_scale * 1e6 / 8.0
+        budget_Bps = budget_Bps[None, :]                    # (1, S)
+    else:
+        budget_Bps = np.full((1, S), bandwidth_mbps * 1e6 / 8.0)
     if cfg.share == "proportional":
         tot = load_bytes.sum(axis=0, keepdims=True)         # (1, S)
         frac = np.where(tot > 0, load_bytes / np.maximum(tot, 1e-300),
                         1.0 / C)
-        bw = base_Bps * frac
+        bw = budget_Bps * frac
     elif cfg.share == "equal":
-        bw = np.full((C, S), base_Bps / C)
+        bw = np.broadcast_to(budget_Bps / C, (C, S)).copy()
     else:
         raise ValueError(f"unknown share mode {cfg.share!r}")
 

@@ -19,6 +19,13 @@ timestamps around already-existing sync points only — no
   changed-tile fraction) that ``benchmarks/run.py`` merges into
   ``BENCH_kernels.json``.
 
+On top of the panels sit the heavy-traffic harness (``obs.loadgen`` —
+SLO frontier sweeps over fleet scale x congestion x traffic profile x
+serve rate, driving the production runtimes with zero added dispatches)
+and the CI gate that watches the resulting history stream
+(``obs.sentinel`` — git-SHA-aware regression detection with
+noise-robust min-of-reps / median-of-window baselines).
+
 Switch it on with ``obs.configure(enabled=True)`` (or scoped:
 ``with obs.enabled(): ...``); ``configure(reset=True)`` clears the
 recorded spans and metric values.
@@ -27,7 +34,8 @@ from __future__ import annotations
 
 import contextlib
 
-from repro.obs import export, metrics, slo, state, trace  # noqa: F401
+from repro.obs import (export, loadgen, metrics, sentinel,  # noqa: F401
+                       slo, state, trace)
 
 
 def configure(enabled=None, reset: bool = False) -> bool:

@@ -16,8 +16,9 @@ from repro.core.pipeline import (OfflineConfig, OnlineConfig,
 from repro.core.scene import SceneConfig, generate_scene
 from repro.kernels import ops, ref
 from repro.net import (DeadlineGroupFormer, LinkConfig, NetConfig,
-                       RateControlConfig, default_congestion_trace,
-                       fifo_departures, tile_static_fraction)
+                       RateControlConfig, UplinkTrace, bandwidth_traces,
+                       default_congestion_trace, fifo_departures,
+                       load_bundled_trace, tile_static_fraction)
 from repro.serving.detector import DetectorConfig, RoIDetector
 
 
@@ -525,3 +526,123 @@ def test_straggler_fold_reclaims_launch():
     np.testing.assert_allclose(np.asarray(rel.outputs[1]),
                                np.asarray(det.roi_forward(f1, grids[1])),
                                atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# real uplink trace replay
+# ---------------------------------------------------------------------------
+
+
+def test_constant_trace_matches_analytic(scene, offline):
+    """A constant-valued trace at the analytic bandwidth is the
+    uncongested limit: the replay path must reproduce the analytic
+    latency formula < 1e-6 relative (same property the scripted-episode
+    path pinned in PR 3)."""
+    cfg_a = OnlineConfig()
+    trace = UplinkTrace(np.array([0.0]),
+                        np.array([cfg_a.bandwidth_mbps]), "const")
+    cfg_s = OnlineConfig(transport="simulated",
+                         net=NetConfig(link=LinkConfig(trace=trace)))
+    a = online_system_metrics(scene.cameras, offline, cfg_a, 10.0, 200)
+    s = online_system_metrics(scene.cameras, offline, cfg_s, 10.0, 200)
+    assert abs(s[3] - a[3]) <= 1e-6 * a[3], (s[3], a[3])
+    assert abs(s[5] - a[5]) <= 1e-6 * a[5], (s[5], a[5])
+
+
+def test_short_trace_wraps_deterministically():
+    """A trace shorter than the simulation horizon replays periodically:
+    sample(t) == sample(t + k * duration) exactly, and two simulations
+    over the same wrapped trace are bit-identical."""
+    trace = UplinkTrace(np.arange(5.0), np.array([20., 5., 30., 8., 12.]))
+    assert trace.duration_s == 5.0
+    t = np.linspace(0.0, 4.99, 37)
+    for k in (1, 2, 7):
+        np.testing.assert_array_equal(trace.sample(t),
+                                      trace.sample(t + k * 5.0))
+    # piecewise-constant hold: mid-interval equals the left sample
+    assert trace.sample(np.array([1.5]))[0] == 5.0
+    assert trace.sample(np.array([6.5]))[0] == 5.0     # wrapped
+    # horizon (30 segments) far past the 5 s trace: deterministic runs
+    load = np.full((3, 30), 1e5)
+    bw1 = bandwidth_traces(LinkConfig(trace=trace), 999.0, load, 1.0)
+    bw2 = bandwidth_traces(LinkConfig(trace=trace), 999.0, load, 1.0)
+    np.testing.assert_array_equal(bw1, bw2)
+    # the constant bandwidth argument is ignored when a trace is set
+    bw3 = bandwidth_traces(LinkConfig(trace=trace), 1.0, load, 1.0)
+    np.testing.assert_array_equal(bw1, bw3)
+
+
+def test_share_semantics_under_trace_budget():
+    """Proportional/equal share semantics are identical whether the
+    per-segment budget comes from the constant bandwidth or a trace:
+    proportional shares sum to the budget, equal gives budget/C."""
+    rng = np.random.default_rng(3)
+    C, S = 4, 8
+    load = rng.uniform(1e4, 1e6, size=(C, S))
+    trace = UplinkTrace(np.arange(float(S)),
+                        rng.uniform(5.0, 40.0, size=S))
+    close = (np.arange(S) + 1.0) * 1.0
+    budget = trace.sample(close) * 1e6 / 8.0                    # (S,)
+
+    prop = bandwidth_traces(LinkConfig(share="proportional",
+                                       trace=trace), 30.0, load, 1.0)
+    np.testing.assert_allclose(prop.sum(axis=0), budget, rtol=1e-12)
+    np.testing.assert_allclose(prop / budget[None, :],
+                               load / load.sum(0, keepdims=True),
+                               rtol=1e-12)
+
+    eq = bandwidth_traces(LinkConfig(share="equal", trace=trace),
+                          30.0, load, 1.0)
+    np.testing.assert_allclose(eq, np.broadcast_to(budget / C, (C, S)),
+                               rtol=1e-12)
+
+    # constant-valued trace == constant bandwidth argument, both modes
+    const = UplinkTrace(np.array([0.0]), np.array([30.0]))
+    for share in ("proportional", "equal"):
+        via_trace = bandwidth_traces(LinkConfig(share=share, trace=const),
+                                     1.0, load, 1.0)
+        via_const = bandwidth_traces(LinkConfig(share=share), 30.0,
+                                     load, 1.0)
+        np.testing.assert_allclose(via_trace, via_const, rtol=1e-12)
+
+
+def test_congestion_episodes_multiply_on_trace():
+    """Scripted episodes stay available as the synthetic fallback and
+    compose multiplicatively on top of a replayed trace."""
+    trace = UplinkTrace(np.array([0.0]), np.array([16.0]))
+    load = np.full((2, 6), 1e5)
+    ep = default_congestion_trace(6.0, factor=0.25)
+    plain = bandwidth_traces(LinkConfig(trace=trace), 1.0, load, 1.0)
+    cong = bandwidth_traces(LinkConfig(trace=trace, congestion=ep),
+                            1.0, load, 1.0)
+    close = (np.arange(6) + 1.0) * 1.0
+    hit = (close > ep[0].t0_s) & (close <= ep[0].t1_s)
+    np.testing.assert_allclose(cong[:, hit], 0.25 * plain[:, hit])
+    np.testing.assert_allclose(cong[:, ~hit], plain[:, ~hit])
+
+
+def test_trace_scale_rescales_budget():
+    trace = UplinkTrace(np.array([0.0]), np.array([10.0]))
+    load = np.full((2, 4), 1e5)
+    bw1 = bandwidth_traces(LinkConfig(trace=trace), 1.0, load, 1.0)
+    bw2 = bandwidth_traces(LinkConfig(trace=trace, trace_scale=0.5),
+                           1.0, load, 1.0)
+    np.testing.assert_allclose(bw2, 0.5 * bw1)
+
+
+def test_bundled_lte_trace_loads():
+    trace = load_bundled_trace("lte_uplink")
+    assert trace.t_s[0] == 0.0 and (np.diff(trace.t_s) > 0).all()
+    assert (trace.mbps > 0).all()
+    assert trace.duration_s > 60.0          # long enough for real sweeps
+    with pytest.raises(FileNotFoundError):
+        load_bundled_trace("no_such_trace")
+
+
+def test_trace_validation_rejects_malformed():
+    with pytest.raises(ValueError):
+        UplinkTrace(np.array([1.0, 2.0]), np.array([5.0, 5.0]))  # t0 != 0
+    with pytest.raises(ValueError):
+        UplinkTrace(np.array([0.0, 0.0]), np.array([5.0, 5.0]))  # not inc
+    with pytest.raises(ValueError):
+        UplinkTrace(np.array([0.0, 1.0]), np.array([5.0]))       # shapes

@@ -1,0 +1,271 @@
+"""SLO frontier harness: loadgen drives == inline drives (zero added
+dispatches), frontier monotonicity, history record schema, and the
+regression sentinel's classification rules + self-test."""
+import collections
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from benchmarks.common import (HISTORY_SCHEMA_VERSION,
+                               validate_history_record)
+from repro.fleet.runtime import fleet_reuse_step
+from repro.kernels import ops
+from repro.obs import loadgen, sentinel
+from repro.serving.detector import (DetectorConfig, PackedActivationCache,
+                                    RoIDetector)
+
+
+@pytest.fixture(scope="module")
+def det():
+    return RoIDetector(DetectorConfig(tile=8, channels=(4,)),
+                       jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return loadgen.LoadgenConfig(steps=3, channels=(4,),
+                                 grid_shape=(3, 4))
+
+
+# ---------------------------------------------------------------------------
+# loadgen: the harness is the production loop
+# ---------------------------------------------------------------------------
+
+def test_drive_fleet_adds_zero_dispatches(det, cfg):
+    """drive_fleet must issue bit-identical kernel dispatch Counters to
+    an inline fleet_reuse_step loop over the same trace."""
+    grids = loadgen.make_grids(cfg, 1, 2)
+    frames_list = loadgen.make_frame_trace(cfg, grids, 0.5)
+
+    inline = collections.Counter()
+    with ops.count_kernels() as region:
+        cache = PackedActivationCache()
+        for frames in frames_list:
+            fleet_reuse_step(det, frames, grids, cache)
+    inline = collections.Counter(region)
+
+    with ops.count_kernels() as region:
+        reports, _, counts = loadgen.drive_fleet(
+            det, frames_list, grids, PackedActivationCache())
+    assert collections.Counter(region) == inline
+    assert counts == inline
+    assert len(reports) == len(frames_list)
+    assert reports[0].cold and not reports[1].cold
+
+
+def test_drive_fleet_outputs_match_exact_at_threshold_zero(det, cfg):
+    grids = loadgen.make_grids(cfg, 1, 2)
+    frames_list = loadgen.make_frame_trace(cfg, grids, 0.5)
+    _, outs, _ = loadgen.drive_fleet(det, frames_list, grids,
+                                     PackedActivationCache(),
+                                     keep_outputs=True)
+    floor, mean = loadgen.accuracy_vs_exact(det, frames_list, grids, outs)
+    assert floor == 1.0 and mean == 1.0      # threshold 0 is bit-exact
+
+
+def test_frame_trace_static_fraction_semantics(cfg):
+    grids = loadgen.make_grids(cfg, 1, 2)
+    frozen = loadgen.make_frame_trace(cfg, grids, 1.0)
+    for step in frozen[1:]:                  # fully static: bit-equal
+        for cam in range(2):
+            np.testing.assert_array_equal(step[0][cam], frozen[0][0][cam])
+    moving = loadgen.make_frame_trace(cfg, grids, 0.0)
+    assert any(not np.array_equal(moving[1][0][c], moving[0][0][c])
+               for c in range(2))
+
+
+def test_transport_monotone_in_scripted_severity(cfg):
+    """The frontier sanity property --slo gates on: deeper scripted
+    congestion cannot lower the p99 response delay."""
+    p99 = [loadgen.transport_window(cfg, 4, c, 0.75).p99_s
+           for c in ("none", "episode:0.6", "episode:0.3")]
+    assert p99[0] <= p99[1] + 1e-9 <= p99[2] + 2e-9, p99
+    with pytest.raises(ValueError):
+        loadgen.link_for(cfg, "bogus:1.0")
+
+
+def test_run_point_emits_full_slo_report(det, cfg):
+    point = loadgen.SweepPoint(1, 2, "episode:0.5", 0.5)
+    res = loadgen.run_point(cfg, det, point)
+    assert res["point"]["n_cameras"] == 2
+    slo = res["slo"]
+    for key in ("p50_delay_s", "p99_delay_s", "part_p99_s",
+                "deadline_hit_rate", "bytes_total", "shed_bytes",
+                "accuracy_floor", "changed_tile_fraction",
+                "compute_tile_fraction", "cache", "steps"):
+        assert key in slo, key
+    assert slo["n_steps"] == cfg.steps
+    assert slo["accuracy_floor"] == 1.0
+    assert point.severity == pytest.approx(0.5)
+    assert loadgen.SweepPoint(1, 2, "trace:x").severity == -1.0
+
+
+# ---------------------------------------------------------------------------
+# history record schema
+# ---------------------------------------------------------------------------
+
+def _valid_record():
+    return {"schema": HISTORY_SCHEMA_VERSION, "ts": "2026-01-01T00:00:00",
+            "git_sha": "abc123def456", "mode": "slo",
+            "panels": ["slo"], "headline_walls": {"x.wall_s": 0.1},
+            "frontier": {"p99_delay_worst_s": 1.2}}
+
+
+def test_history_validator_accepts_valid():
+    assert validate_history_record(_valid_record()) == []
+    rec = _valid_record()
+    del rec["frontier"]                       # frontier is optional
+    assert validate_history_record(rec) == []
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda r: r.pop("git_sha"),
+    lambda r: r.pop("schema"),
+    lambda r: r.update(schema=0),
+    lambda r: r.update(headline_walls={"x": "fast"}),
+    lambda r: r.update(headline_walls={"x": True}),
+    lambda r: r.update(panels=[3]),
+    lambda r: r.update(frontier="yes"),
+    lambda r: r.update(frontier={"m": None}),
+])
+def test_history_validator_rejects_malformed(mutate):
+    rec = _valid_record()
+    mutate(rec)
+    assert validate_history_record(rec) != []
+
+
+def test_history_validator_rejects_non_dict():
+    assert validate_history_record(["not", "a", "dict"]) != []
+
+
+# ---------------------------------------------------------------------------
+# sentinel
+# ---------------------------------------------------------------------------
+
+def _hist(tmp_path, records):
+    p = tmp_path / "hist.jsonl"
+    with open(p, "w") as f:
+        for r in records:
+            f.write(json.dumps(r) + "\n")
+    return str(p)
+
+
+def _rec(sha, walls):
+    return {"schema": 1, "ts": "t", "git_sha": sha, "mode": "m",
+            "panels": [], "headline_walls": walls}
+
+
+BASE = {"reuse.step_wall_s": 0.10, "obs.overhead_frac": 0.017}
+
+
+def test_sentinel_clean_history_passes(tmp_path):
+    recs = [_rec(f"s{i}", BASE) for i in range(4)]
+    rep = sentinel.analyze_path(_hist(tmp_path, recs))
+    assert rep.status == "ok" and not rep.has_regression
+    assert "clean" in rep.render()
+
+
+def test_sentinel_flags_2x_wall_slowdown(tmp_path):
+    recs = [_rec(f"s{i}", BASE) for i in range(3)]
+    recs.append(_rec("head", {"reuse.step_wall_s": 0.20,
+                              "obs.overhead_frac": 0.017}))
+    rep = sentinel.analyze_path(_hist(tmp_path, recs))
+    assert rep.has_regression
+    assert [f.metric for f in rep.regressions] == ["reuse.step_wall_s"]
+    out = rep.render()
+    assert "reuse.step_wall_s" in out and "REGRESSION" in out
+    assert "+0.1" in out                      # the delta is printed
+
+
+def test_sentinel_min_of_reps_within_sha(tmp_path):
+    """A SHA's noisy rep is absorbed by the per-SHA min: one slow record
+    next to a fast one at head must not flag."""
+    recs = [_rec(f"s{i}", BASE) for i in range(3)]
+    recs.append(_rec("head", {"reuse.step_wall_s": 0.30}))   # noisy rep
+    recs.append(_rec("head", {"reuse.step_wall_s": 0.10}))   # clean rep
+    rep = sentinel.analyze_path(_hist(tmp_path, recs))
+    assert not rep.has_regression
+
+
+def test_sentinel_median_baseline_robust_to_one_fast_outlier(tmp_path):
+    """One historically-fast SHA cannot poison the baseline: the median
+    of the window, not the min, is the comparison point."""
+    walls = [0.10, 0.02, 0.10, 0.11]          # one freak-fast SHA
+    recs = [_rec(f"s{i}", {"reuse.step_wall_s": w})
+            for i, w in enumerate(walls)]
+    recs.append(_rec("head", {"reuse.step_wall_s": 0.11}))
+    rep = sentinel.analyze_path(_hist(tmp_path, recs))
+    assert not rep.has_regression
+
+
+def test_sentinel_noise_band_never_flags_overhead_frac(tmp_path):
+    """The known ±2%-per-arm obs-overhead band (worst absolute swing
+    0.04, including sign flips through zero) must never trip the
+    absolute-only rule."""
+    for head_val in (-0.022, 0.019, 0.017 + 0.04):
+        recs = [_rec(f"s{i}", BASE) for i in range(3)]
+        recs.append(_rec("head", {"reuse.step_wall_s": 0.10,
+                                  "obs.overhead_frac": head_val}))
+        rep = sentinel.analyze_path(_hist(tmp_path, recs))
+        assert not rep.has_regression, head_val
+    # a real structural regression (overhead jumps to 10%) DOES flag
+    recs = [_rec(f"s{i}", BASE) for i in range(3)]
+    recs.append(_rec("head", {"reuse.step_wall_s": 0.10,
+                              "obs.overhead_frac": 0.10}))
+    rep = sentinel.analyze_path(_hist(tmp_path, recs))
+    assert rep.has_regression
+    assert rep.regressions[0].metric == "obs.overhead_frac"
+
+
+def test_sentinel_skips_pre_schema_records_with_warning(tmp_path):
+    pre = {"ts": "t", "git_sha": "old", "mode": "m", "panels": [],
+           "headline_walls": {"reuse.step_wall_s": 0.01}}   # no schema
+    recs = [pre] + [_rec(f"s{i}", BASE) for i in range(3)] \
+        + [_rec("head", BASE)]
+    path = _hist(tmp_path, recs)
+    records, warnings = sentinel.load_history(path)
+    assert len(records) == 4
+    assert any("pre-schema" in w for w in warnings)
+    rep = sentinel.analyze_path(path)
+    assert not rep.has_regression             # 0.01 never entered baseline
+    assert any("pre-schema" in w for w in rep.skipped)
+
+
+def test_sentinel_degenerate_histories(tmp_path):
+    rep = sentinel.analyze_path(str(tmp_path / "missing.jsonl"))
+    assert rep.status == "no_data" and not rep.has_regression
+    rep = sentinel.analyze_path(_hist(tmp_path, [_rec("only", BASE)]))
+    assert rep.status == "no_baseline" and not rep.has_regression
+    assert "no prior SHA" in rep.render()
+
+
+def test_sentinel_frontier_metrics_gated(tmp_path):
+    recs = [dict(_rec(f"s{i}", BASE),
+                 frontier={"p99_delay_worst_s": 1.0}) for i in range(3)]
+    recs.append(dict(_rec("head", BASE),
+                     frontier={"p99_delay_worst_s": 2.5}))
+    rep = sentinel.analyze_path(_hist(tmp_path, recs))
+    assert rep.has_regression
+    assert rep.regressions[0].metric == "frontier.p99_delay_worst_s"
+
+
+def test_sentinel_improvement_classified(tmp_path):
+    recs = [_rec(f"s{i}", BASE) for i in range(3)]
+    recs.append(_rec("head", {"reuse.step_wall_s": 0.05,
+                              "obs.overhead_frac": 0.017}))
+    rep = sentinel.analyze_path(_hist(tmp_path, recs))
+    assert not rep.has_regression
+    assert any(f.classification == "improvement" for f in rep.findings)
+
+
+def test_sentinel_self_test_passes_on_real_history():
+    """The gate's own self-test: injected 2x slowdown flagged, clean +
+    noise-band copies pass — against the repo's actual history file."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    res = sentinel.self_test(os.path.join(repo, "BENCH_history.jsonl"))
+    assert res["clean_pass"] and res["slowdown_flagged"] \
+        and res["noise_band_pass"]
+    assert res["flagged_metrics"]

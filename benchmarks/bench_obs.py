@@ -243,6 +243,9 @@ def run(verbose=True, quick=False):
         "overhead_steps": tax_steps,
         "wall_disabled_s": wall_off,
         "wall_enabled_s": wall_on,
+        # per-step wall is the cross-commit comparable: the total arm
+        # wall scales with the arm length, which the de-flake changed
+        "wall_enabled_per_step_s": wall_on / max(tax_steps, 1),
         "overhead_frac": overhead,
         "rep_count": reps,
         "spread_disabled_frac": spread_off,

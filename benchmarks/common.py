@@ -49,7 +49,10 @@ def offline_baseline():
 #: version stamped into every appended record; bump on layout changes.
 #: Records WITHOUT a "schema" key predate versioning — the sentinel
 #: skips them with a warning instead of crashing.
-HISTORY_SCHEMA_VERSION = 1
+#: v2: optional flat numeric "chaos" dict (the chaos-harness headline —
+#: mttr_steps, detect_latency_steps, uncovered_frac_p99 ...) alongside
+#: the v1 "frontier" block; v1 records remain valid.
+HISTORY_SCHEMA_VERSION = 2
 
 _HISTORY_REQUIRED = {
     "schema": int, "ts": str, "git_sha": str, "mode": str,
@@ -62,9 +65,10 @@ def validate_history_record(record) -> list:
 
     Returns a list of human-readable problems (empty = valid):
     required keys with the right types, string panel names, numeric
-    headline walls, and — when present — a flat numeric ``frontier``
-    dict (the SLO headline block).  ``run.py`` refuses to append a
-    record that fails this."""
+    headline walls, and — when present — flat numeric ``frontier``
+    (the SLO headline block, v1) and ``chaos`` (the chaos-harness
+    headline, v2) dicts.  ``run.py`` refuses to append a record that
+    fails this."""
     problems = []
     if not isinstance(record, dict):
         return [f"record must be a dict, got {type(record).__name__}"]
@@ -90,16 +94,18 @@ def validate_history_record(record) -> list:
                 problems.append(f"headline_walls[{k!r}] must be numeric, "
                                 f"got {v!r}")
                 break
-    if "frontier" in record:
-        if not isinstance(record["frontier"], dict):
-            problems.append("frontier must be a flat dict")
-        else:
-            for k, v in record["frontier"].items():
-                if not isinstance(k, str) or isinstance(v, bool) \
-                        or not isinstance(v, (int, float)):
-                    problems.append(f"frontier[{k!r}] must be numeric, "
-                                    f"got {v!r}")
-                    break
+    for block in ("frontier", "chaos"):
+        if block not in record:
+            continue
+        if not isinstance(record[block], dict):
+            problems.append(f"{block} must be a flat dict")
+            continue
+        for k, v in record[block].items():
+            if not isinstance(k, str) or isinstance(v, bool) \
+                    or not isinstance(v, (int, float)):
+                problems.append(f"{block}[{k!r}] must be numeric, "
+                                f"got {v!r}")
+                break
     return problems
 
 

@@ -18,7 +18,7 @@ import time
 
 BENCHES = ["reid", "compression", "ablations", "sensitivity", "reducto",
            "kernels", "fleet", "net", "stack", "reuse", "shard", "obs",
-           "slo", "roofline"]
+           "slo", "chaos", "roofline"]
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -28,7 +28,9 @@ _HEADLINE_WALLS = [
     ("stack", "stack_kernel_wall_s"), ("stack", "chain_kernel_wall_s"),
     ("reuse", "reuse_step_wall_s"), ("reuse", "full_step_wall_s"),
     ("shard", "sharded_wall_2shard_s"), ("shard", "single_device_wall_s"),
-    ("obs", "wall_enabled_s"), ("obs", "overhead_frac"),
+    # per-step, not total: the 30-step de-flake arms made the total
+    # wall incomparable with pre-de-flake history under the same name
+    ("obs", "wall_enabled_per_step_s"), ("obs", "overhead_frac"),
 ]
 
 
@@ -47,7 +49,8 @@ def append_history(mode: str) -> None:
     """One timestamped summary line per driver run appended to
     ``BENCH_history.jsonl``: git SHA, which panels BENCH_kernels.json
     holds, the headline walls, and — when an SLO frontier panel exists —
-    its flat ``headline`` block as ``frontier``.  Records are stamped
+    its flat ``headline`` block as ``frontier`` (likewise the chaos
+    panel's headline as ``chaos``).  Records are stamped
     with ``HISTORY_SCHEMA_VERSION`` and validated before the append; a
     malformed record is REFUSED (the sentinel depends on this stream
     staying parseable)."""
@@ -76,11 +79,12 @@ def append_history(mode: str) -> None:
                          if isinstance(v, dict)),
         "headline_walls": walls,
     }
-    headline = panels.get("slo", {}).get("headline")
-    if isinstance(headline, dict):
-        record["frontier"] = {k: float(v) for k, v in headline.items()
-                              if isinstance(v, (int, float))
-                              and not isinstance(v, bool)}
+    for panel, block in (("slo", "frontier"), ("chaos", "chaos")):
+        headline = panels.get(panel, {}).get("headline")
+        if isinstance(headline, dict):
+            record[block] = {k: float(v) for k, v in headline.items()
+                             if isinstance(v, (int, float))
+                             and not isinstance(v, bool)}
     problems = validate_history_record(record)
     if problems:
         raise ValueError("refusing to append malformed history record: "
@@ -475,6 +479,75 @@ def slo_quick():
     print(f"\nslo smoke OK in {time.time() - t0:.1f}s -> {out}")
 
 
+def chaos_quick():
+    """CI smoke for the fault-tolerance layer: fault-free chaos drives
+    BIT-identical to production with ZERO added dispatches, a scripted
+    frozen camera confirmed within the liveness window while a genuinely
+    static camera is never flagged, camera blackout -> heartbeat
+    detection -> ONE warm failover re-solve restoring >= 95% of
+    pre-fault coverage (and a positive ``uncovered_fraction`` reported
+    when no surviving camera can cover the hole), shard loss restored
+    bit-identically on the next SPMD step, and zero-bandwidth uplink
+    outages pricing FINITE transport percentiles — merged into
+    BENCH_kernels.json under "chaos" (its flat ``headline`` block
+    becomes the history record's ``chaos``)."""
+    from benchmarks import bench_chaos
+    t0 = time.time()
+    payload = bench_chaos.run(verbose=True, quick=True)
+
+    # the fault layer must be free in production: bit-identical outputs,
+    # not one extra dispatch, on both the fleet and sharded paths
+    bit = payload["bit_identity"]
+    assert bit["fleet_bit_identical"] and bit["sharded_bit_identical"], bit
+    assert bit["fleet_added_dispatches"] == 0, bit
+    assert bit["sharded_added_dispatches"] == 0, bit
+    # frozen-vs-static: the scripted freeze is confirmed within the
+    # liveness window (from the step's OWN gate stats); the camera that
+    # never moved is never declared dead
+    fr = payload["freeze"]
+    assert fr["frozen_cam_confirmed"], fr
+    assert 0 <= fr["freeze_detect_latency_steps"] <= \
+        fr["freeze_window"] + 1, fr
+    assert not fr["static_cam_flagged"], \
+        "a genuinely static camera must never be confirmed dead"
+    # blackout -> heartbeat -> ONE warm re-solve -> coverage restored
+    fo = payload["failover"]
+    assert fo["mask_listener_calls"] == 1, \
+        f"failover must fan out through the mask listeners exactly " \
+        f"once (got {fo['mask_listener_calls']})"
+    assert fo["failover_tiles_dropped"] > 0, fo
+    assert fo["coverage_restored_ratio"] >= 0.95, \
+        f"failover must restore >= 95% of pre-fault coverage " \
+        f"(got {fo['coverage_restored_ratio']:.3f}x)"
+    assert fo["mttr_steps"] <= fo["heartbeat_detect_latency_steps"] + 3, fo
+    # degraded mode is explicit, never silent: any genuine hole
+    # (sole-observer appearances) must surface as a reported positive
+    # uncovered fraction, and killing all overlap certainly must
+    assert fo["genuine_hole_frac"] <= 0.01 \
+        or fo["failover_uncovered_fraction"] > 0, fo
+    assert fo["uncoverable_reported_fraction"] > 0, fo
+    assert fo["uncoverable_live_fraction"] > 0, fo
+    # shard loss: exactly the owning groups cold-marked, next step
+    # restores, outputs bit-identical to a never-faulted run
+    sh = payload["shard_loss"]
+    assert sh["restore_bit_identical"], sh
+    assert sorted(sh["affected_groups"]) == sorted(sh["expected_groups"])
+    assert 0 < len(sh["affected_groups"]) < sh["n_groups"], \
+        "shard loss must cold-mark exactly the owning shard's groups"
+    assert sh["shard_invalidations"] >= 1, sh
+    # zero-bandwidth outages must price finite (backlog carries over)
+    out_leg = payload["outage"]
+    assert out_leg["fifo"]["finite"], out_leg
+    assert out_leg["rate_controlled"]["finite"], out_leg
+    assert out_leg["outage_slower_than_clear"], out_leg
+
+    out = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+    merged = _merge_bench_json(out, {"chaos": payload})
+    with open(out, "w") as f:
+        json.dump(merged, f, indent=1, default=float)
+    print(f"\nchaos smoke OK in {time.time() - t0:.1f}s -> {out}")
+
+
 def sentinel_gate(window: int = 5) -> None:
     """CI gate over BENCH_history.jsonl: first the sentinel's self-test
     (a temp history with an injected 2x wall slowdown MUST be flagged
@@ -542,6 +615,15 @@ def main():
                          "dispatch < 2%% loadgen tax, const-trace "
                          "analytic parity) merged into "
                          "BENCH_kernels.json")
+    ap.add_argument("--chaos", action="store_true",
+                    help="CI smoke: fault-tolerance layer (fault-free "
+                         "bit-identity with zero added dispatches, "
+                         "freeze detection within the liveness window, "
+                         "blackout failover restoring >= 95%% coverage "
+                         "with one warm re-solve, explicit uncovered-"
+                         "fraction reporting, shard-loss restore, "
+                         "finite zero-bandwidth transport) merged into "
+                         "BENCH_kernels.json")
     ap.add_argument("--sentinel", action="store_true",
                     help="CI gate: self-test the regression sentinel "
                          "(injected 2x slowdown must be flagged), then "
@@ -555,7 +637,8 @@ def main():
               ("reuse", args.reuse, reuse_quick),
               ("shard", args.shard, shard_quick),
               ("obs", args.obs, obs_quick),
-              ("slo", args.slo, slo_quick)]
+              ("slo", args.slo, slo_quick),
+              ("chaos", args.chaos, chaos_quick)]
     ran = [name for name, on, fn in smokes if on and (fn() or True)]
     if ran:
         append_history("+".join(ran))

@@ -130,6 +130,7 @@ class DriftAdapter:
         # activations (the caches' content keys would miss anyway — the
         # listener makes the invalidation explicit and countable).
         self._mask_listeners: List = []
+        self._notifying = False
 
     def add_mask_listener(self, fn) -> None:
         """Register ``fn(adapter)`` to run after every mask mutation
@@ -139,8 +140,21 @@ class DriftAdapter:
         self._mask_listeners.append(fn)
 
     def _notify_mask_update(self) -> None:
-        for fn in self._mask_listeners:
-            fn(self)
+        # Reentrancy guard: a listener (shard invalidation -> table
+        # rebuild) may feed back into ``observe``/``failover`` paths that
+        # mutate the mask again within the same step.  The inner mutation
+        # already left ``self.mask``/``cam_grids`` final, so fanning out
+        # a second time from inside the first fan-out would only
+        # double-invalidate the shard cache — suppress the nested call;
+        # the outer fan-out delivers the final state.
+        if self._notifying:
+            return
+        self._notifying = True
+        try:
+            for fn in self._mask_listeners:
+                fn(self)
+        finally:
+            self._notifying = False
 
     # -- monitoring --------------------------------------------------------
     @property
@@ -256,6 +270,18 @@ class DriftAdapter:
     def traffic_rate(self) -> float:
         """Windowed appearances per frame — the low-traffic detector."""
         return len(self._window) / max(self.cfg.window_frames, 1)
+
+    def occupancy_by_camera(self) -> Dict[int, int]:
+        """Buffered appearance-region count per camera over the current
+        observation window — how much traffic each camera has recently
+        *seen*.  This is the liveness monitor's second evidence channel:
+        a camera whose delta gate goes quiet while its windowed occupancy
+        says traffic should be flowing is FROZEN, not static."""
+        occ: Dict[int, int] = {c.cam_id: 0 for c in self.cameras}
+        for _, _, regions in self._regions:
+            for cam in regions:
+                occ[cam] = occ.get(cam, 0) + 1
+        return occ
 
     def maybe_shrink(self, t: int, scene: Scene) -> bool:
         """At a detected low-traffic window, re-profile the recent stream

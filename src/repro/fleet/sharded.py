@@ -181,6 +181,15 @@ class ShardedSuperlaunch:
     def make_cache(self) -> ShardedActivationCache:
         return ShardedActivationCache(self.plan, gids=self.gids)
 
+    def groups_on_shard(self, shard: int) -> List[int]:
+        """Group ids placed on ``shard`` — the blast radius of losing
+        that shard.  The fault layer walks this to cold-mark every owned
+        group (``cache.invalidate_group``); the next step then
+        recomputes them from scratch, which IS the restore path (the
+        detect -> restore idiom of ``distributed.fault.ElasticMesh``,
+        applied to serving state instead of training state)."""
+        return list(self._shard_gids[shard])
+
     def rebuild_group(self, gid: int, new_grids: Sequence[np.ndarray],
                       cache: Optional[ShardedActivationCache] = None
                       ) -> None:

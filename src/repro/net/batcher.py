@@ -37,7 +37,8 @@ from repro.net.encoder import (CameraCoefficients, RateControlConfig,
                                rate_controlled_departures,
                                segment_byte_matrices, sent_matrix,
                                zero_safe_div)
-from repro.net.links import (LinkConfig, bandwidth_traces, fifo_departures)
+from repro.net.links import (LinkConfig, bandwidth_traces, fifo_departures,
+                             outage_effective)
 from repro.obs import metrics as obs_metrics, trace as obs_trace
 
 
@@ -194,21 +195,39 @@ def _simulate_transport(cameras: Sequence, cam_groups, codec,
     arrival_link = close[None, :] + enc
 
     bw = bandwidth_traces(net.link, bandwidth_mbps, base, seg)
+    arrival_eff, start_floor = arrival_link, None
+    if (bw <= 0).any():
+        # uplink outage segments (congestion factor 0.0, trace fade to
+        # zero, or a scripted blackout): rewrite to the outage-effective
+        # form so the closed-form FIFO stays finite — backlog carries
+        # across the outage and drains at the restored rate.  The
+        # fallback prices a drain that never restores inside the window
+        # at the nominal equal share.
+        fallback_Bps = bandwidth_mbps * 1e6 / 8.0 / C
+        arrival_eff, bw, start_floor = outage_effective(
+            arrival_link, bw, seg, fallback_Bps)
     rc = net.rate_control
     if rc.enabled:
+        # backlog is still measured against the ORIGINAL arrivals so the
+        # controller keeps shedding through the outage
         dep, bytes_out, quality, shed_h, shed_b = \
             rate_controlled_departures(arrival_link, body, halo, headers,
-                                       bw, rc)
+                                       bw, rc, start_floor=start_floor)
     else:
         bytes_out, quality = base, np.ones_like(base)
         shed_h = shed_b = np.zeros_like(base)
-        dep = fifo_departures(arrival_link, zero_safe_div(bytes_out, bw))
+        dep = fifo_departures(arrival_eff, zero_safe_div(bytes_out, bw))
 
     rtt_half = rtt_ms / 2e3
     arr_srv = dep + rtt_half                                    # (C, S)
 
     # ---- deadline release per segment --------------------------------------
     active = sent > 0
+    if not active.any():
+        # dead fleet slice: every camera shipped nothing (blackout, full
+        # Reducto filtering, empty masks) — no releases form, so the
+        # window degenerates to the canonical zero-frame stats
+        return empty_transport(C)
     arr_m = np.where(active, arr_srv, -np.inf)
     last = arr_m.max(axis=0)                                    # (S,)
     release = np.minimum(last, close + net.deadline_s)
@@ -423,6 +442,15 @@ class DeadlineGroupFormer:
             return self._release(now, deadline_hit=True)
         return None
 
+    def force_release(self, now: float) -> Release:
+        """Flush whatever is pending *right now* regardless of the
+        deadline (window teardown / chaos-harness step boundary).  Safe
+        on a dead fleet slice: with nothing pending the release forms NO
+        launch — zero dispatches — and every expected camera is marked
+        late so its eventual arrival rides a catch-up release as a
+        straggler."""
+        return self._release(now, deadline_hit=True)
+
     def _reuse_ready(self) -> bool:
         return self.reuse_cache is not None and all(
             c in self._retained or self._pending.get(c)
@@ -486,7 +514,16 @@ class DeadlineGroupFormer:
             obs_metrics.DEADLINE_EVENTS.inc(1, event="deadline_hit")
         with obs_trace.span("release", cams=len(cams), backlog=backlog,
                             deadline_hit=deadline_hit):
-            if self._reuse_ready():
+            if not cams:
+                # dead fleet slice: every expected camera missed the
+                # deadline — short-circuit to an empty release (no
+                # fleet_forward call, zero dispatches) instead of
+                # forming a zero-camera launch.  The guard must precede
+                # ``_reuse_ready`` (with every camera retained it would
+                # report ready and ``_release_reuse`` would crash on an
+                # empty wave max()).
+                outputs, folded = {}, {}
+            elif self._reuse_ready():
                 outputs, folded = self._release_reuse()
             else:
                 entries = [(c, t, f, g) for c in cams
@@ -507,7 +544,11 @@ class DeadlineGroupFormer:
                     t, f, g = self._pending[c][-1]  # switch to reuse mode
                     self._retained[c] = (f, g)
         stragglers = [c for c in cams if c in self._late]
-        if set(cams) <= self._late:
+        if not cams:
+            # every expected camera is now late: their eventual arrivals
+            # must be counted as stragglers by the next real release
+            self._late = set(self.expected)
+        elif set(cams) <= self._late:
             # a pure catch-up launch of the PREVIOUS cycle's stragglers:
             # the punctual cameras' batch already left without them, so
             # this release must not mark them late for the next cycle
@@ -519,3 +560,96 @@ class DeadlineGroupFormer:
                       superseded, folded)
         self.releases.append(rel)
         return rel
+
+
+# ---------------------------------------------------------------------------
+# transport heartbeat: per-camera liveness at the link level
+# ---------------------------------------------------------------------------
+
+@dataclass
+class HeartbeatConfig:
+    """Transport-level liveness parameters.  A camera *beats* on every
+    segment arrival; missing ``timeout_beats`` consecutive expected
+    beats marks it dead.  While dead, reconnect attempts follow
+    exponential backoff (``base * factor**k`` capped at ``max_s``) —
+    the retry *accounting* is what the chaos harness measures; an
+    actual arrival restores the camera instantly regardless of where
+    the backoff clock stands."""
+    interval_s: float = 1.0            # expected beat cadence
+    timeout_beats: float = 3.0         # missed intervals before "dead"
+    backoff_base_s: float = 0.5        # first retry delay after death
+    backoff_factor: float = 2.0
+    backoff_max_s: float = 8.0
+
+    @property
+    def timeout_s(self) -> float:
+        return self.interval_s * self.timeout_beats
+
+
+class HeartbeatMonitor:
+    """Per-camera transport heartbeat with timeout detection and
+    exponential-backoff retry accounting.
+
+    Drives the *transport* half of fault detection (uplink outages and
+    camera blackouts kill the beat; frozen cameras keep beating — those
+    are the liveness monitor's job in ``fleet/faults.py``).  The event
+    log carries ``(t, cam, kind)`` with kind in {"dead", "retry",
+    "restored"}; ``detect_latency(cam)`` reports beats-to-detection for
+    the chaos panel."""
+
+    def __init__(self, cams: Sequence[int],
+                 cfg: Optional[HeartbeatConfig] = None, t0: float = 0.0):
+        self.cfg = cfg or HeartbeatConfig()
+        self.last_beat: Dict[int, float] = {c: t0 for c in cams}
+        self.dead: set = set()
+        self.retries: Dict[int, int] = {c: 0 for c in cams}
+        self._next_retry: Dict[int, float] = {}
+        self._died_at: Dict[int, float] = {}
+        self.events: List[Tuple[float, int, str]] = []
+
+    def beat(self, t: float, cam: int) -> bool:
+        """Record an arrival; returns True when it RESTORES a camera
+        previously declared dead."""
+        self.last_beat[cam] = t
+        if cam in self.dead:
+            self.dead.discard(cam)
+            self._next_retry.pop(cam, None)
+            self.retries[cam] = 0
+            self.events.append((t, cam, "restored"))
+            obs_metrics.HEARTBEAT_EVENTS.inc(1, event="restored")
+            return True
+        return False
+
+    def poll(self, t: float) -> List[int]:
+        """Advance the clock: returns cameras newly declared dead at
+        ``t``; charges backoff retries for already-dead cameras."""
+        newly = []
+        for cam, last in self.last_beat.items():
+            if cam in self.dead:
+                nxt = self._next_retry[cam]
+                while t >= nxt:
+                    self.retries[cam] += 1
+                    self.events.append((nxt, cam, "retry"))
+                    obs_metrics.HEARTBEAT_EVENTS.inc(1, event="retry")
+                    delay = min(self.cfg.backoff_base_s
+                                * self.cfg.backoff_factor
+                                ** self.retries[cam],
+                                self.cfg.backoff_max_s)
+                    nxt = nxt + delay
+                self._next_retry[cam] = nxt
+            elif t - last >= self.cfg.timeout_s:
+                self.dead.add(cam)
+                self._died_at[cam] = t
+                self.retries[cam] = 0
+                self._next_retry[cam] = t + self.cfg.backoff_base_s
+                self.events.append((t, cam, "dead"))
+                obs_metrics.HEARTBEAT_EVENTS.inc(1, event="dead")
+                newly.append(cam)
+        return newly
+
+    def detect_latency(self, cam: int) -> float:
+        """Seconds from the last good beat to the death declaration
+        (NaN if the camera was never declared dead)."""
+        if cam not in self._died_at:
+            return float("nan")
+        return self._died_at[cam] - self.last_beat[cam]

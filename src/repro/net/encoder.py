@@ -150,7 +150,8 @@ class RateControlConfig:
 
 def rate_controlled_departures(arrivals: np.ndarray, body: np.ndarray,
                                halo: np.ndarray, headers: np.ndarray,
-                               bw: np.ndarray, rc: RateControlConfig
+                               bw: np.ndarray, rc: RateControlConfig,
+                               start_floor: np.ndarray = None
                                ) -> Tuple[np.ndarray, np.ndarray,
                                           np.ndarray, np.ndarray,
                                           np.ndarray]:
@@ -163,7 +164,14 @@ def rate_controlled_departures(arrivals: np.ndarray, body: np.ndarray,
     body`` — halo-ring bytes first, static body rows only once a
     segment's sheddable halo is exhausted.  Returns (departures (C, S),
     bytes_out (C, S), quality (C, S), shed_halo (C, S), shed_body
-    (C, S))."""
+    (C, S)).
+
+    ``start_floor`` (optional, (C, S)) is the outage-effective service
+    floor from ``links.outage_effective``: a segment cannot *start*
+    transmitting before it (the link is down until then).  Backlog is
+    still measured against the original ``arrivals``, so the controller
+    keeps shedding through the outage — the desired degraded behavior.
+    ``None`` (the default) is bit-identical to the pre-outage code."""
     C, S = body.shape
     static = np.broadcast_to(np.asarray(rc.static_fraction, np.float64),
                              (C,))
@@ -188,6 +196,8 @@ def rate_controlled_departures(arrivals: np.ndarray, body: np.ndarray,
         b = base[:, s] - shed
         tx = zero_safe_div(b, bw[:, s])
         start = np.maximum(arrivals[:, s], prev_dep)
+        if start_floor is not None:
+            start = np.maximum(start, start_floor[:, s])
         prev_dep = start + tx
         dep[:, s] = prev_dep
         bytes_out[:, s] = b

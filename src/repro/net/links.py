@@ -200,6 +200,47 @@ def bandwidth_traces(cfg: LinkConfig, bandwidth_mbps: float,
     return bw
 
 
+def outage_effective(arrivals: np.ndarray, bw: np.ndarray,
+                     segment_s: float, fallback_Bps: float
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Rewrite a (C, S) bandwidth grid with zero-rate segments (uplink
+    outages) into an *outage-effective* form the closed-form FIFO can
+    price without emitting inf/NaN.
+
+    During an outage nothing transmits: bytes that arrive sit in the
+    queue and drain when the link comes back.  Pricing that exactly per
+    row: a segment arriving while ``bw == 0`` cannot *start* service
+    before the first later segment boundary where ``bw > 0``, and it is
+    transmitted at that restored rate.  So per (cam, seg):
+
+    * ``eff_bw``  — the rate of the next up segment (>= s); when the
+      outage runs past the window end, ``fallback_Bps`` (the caller's
+      nominal rate) prices the eventual drain.
+    * ``eff_arr`` — ``max(arrivals, restore_t)`` where ``restore_t`` is
+      the open time of that next up segment.  On non-outage segments
+      ``restore_t = s * segment_s <= arrivals`` (arrivals sit at or
+      after their segment close), so the floor is a no-op there and the
+      transform is *bit-identical* to the input when no zeros exist.
+
+    Returns ``(eff_arrivals, eff_bw, restore_t)``; ``eff_arrivals``
+    stays monotone along the segment axis because both inputs to the
+    max are monotone."""
+    C, S = bw.shape
+    idx = np.arange(S)
+    # first segment index >= s with positive bandwidth (S when none):
+    # reversed running-min of (idx where up, else S).
+    nxt = np.where(bw > 0, idx[None, :], S)
+    nxt = np.minimum.accumulate(nxt[:, ::-1], axis=1)[:, ::-1]
+    eff_bw = np.where(
+        nxt < S,
+        np.take_along_axis(np.concatenate(
+            [bw, np.full((C, 1), fallback_Bps)], axis=1), nxt, axis=1),
+        fallback_Bps)
+    restore_t = np.where(nxt < S, nxt * segment_s, S * segment_s)
+    eff_arr = np.maximum(arrivals, restore_t)
+    return eff_arr, eff_bw, restore_t
+
+
 def fifo_departures(arrivals: np.ndarray, tx_s: np.ndarray) -> np.ndarray:
     """Vectorized FIFO queue: per row (camera), segments enter the link at
     ``arrivals`` (monotone along the last axis) and each occupies the link

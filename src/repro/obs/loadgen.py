@@ -52,11 +52,17 @@ class SweepPoint:
     ``"trace:<name>"`` (replay the bundled real uplink trace).
     ``static_fraction`` is the per-step fraction of fleet cameras that
     hold still (1.0 = frozen scene, delta-gating serves everything from
-    cache)."""
+    cache).  ``faults`` is a seeded fault-schedule spec: ``"none"``
+    (production — the drive is bit-identical to the fault-free path),
+    ``"random:<n_events>:<seed>"`` (a reproducible random chaos script,
+    ``fleet.faults.FaultSchedule.random``), or
+    ``"<kind>:<gid>.<cam>@<t0>-<t1>"`` for one scripted camera fault
+    (kind in blackout/freeze/noise)."""
     n_groups: int
     cams_per_group: int
     congestion: str = "none"
     static_fraction: float = 0.9
+    faults: str = "none"
 
     @property
     def n_cameras(self) -> int:
@@ -78,7 +84,8 @@ class SweepPoint:
                 "cams_per_group": self.cams_per_group,
                 "n_cameras": self.n_cameras,
                 "congestion": self.congestion,
-                "static_fraction": self.static_fraction}
+                "static_fraction": self.static_fraction,
+                "faults": self.faults}
 
 
 @dataclass
@@ -244,6 +251,28 @@ def accuracy_vs_exact(det, frames_list: Sequence[Dict[int, List]],
     return float(np.min(per_step)), float(np.mean(per_step))
 
 
+def faults_for(cfg: LoadgenConfig, point: SweepPoint):
+    """Resolve a ``SweepPoint.faults`` spec into a
+    ``fleet.faults.FaultSchedule`` (None for ``"none"`` — the injector
+    then never touches the frames and the drive stays bit-identical to
+    the production loop)."""
+    from repro.fleet.faults import FaultEvent, FaultSchedule
+
+    spec = point.faults
+    if spec == "none":
+        return None
+    if spec.startswith("random:"):
+        _, n_events, seed = spec.split(":")
+        return FaultSchedule.random(
+            int(seed) + cfg.seed, int(n_events), cfg.steps,
+            point.n_groups, point.cams_per_group)
+    kind, rest = spec.split(":", 1)
+    target, window = rest.split("@")
+    gid, cam = (int(x) for x in target.split("."))
+    t0, t1 = (int(x) for x in window.split("-"))
+    return FaultSchedule((FaultEvent(kind, t0, t1, gid=gid, cam=cam),))
+
+
 # ---------------------------------------------------------------------------
 # transport leg
 # ---------------------------------------------------------------------------
@@ -314,13 +343,30 @@ def run_point(cfg: LoadgenConfig, det, point: SweepPoint,
     if cache is None:
         cache = PackedActivationCache()
 
+    schedule = faults_for(cfg, point)
+    fault_info = None
     t0 = time.perf_counter()
-    reports, outputs, counts = drive_fleet(
-        det, frames_list, grids, cache, cfg.threshold, cfg.qstep,
-        keep_outputs=measure_accuracy)
+    if schedule is None:
+        reports, outputs, counts = drive_fleet(
+            det, frames_list, grids, cache, cfg.threshold, cfg.qstep,
+            keep_outputs=measure_accuracy)
+    else:
+        from repro.fleet.faults import (LivenessMonitor, drive_chaos,
+                                        flat_cam_index)
+
+        monitor = LivenessMonitor(len(flat_cam_index(grids)))
+        reports, outputs, counts, detected = drive_chaos(
+            det, frames_list, grids, cache, cfg.threshold, cfg.qstep,
+            schedule=schedule, monitor=monitor,
+            keep_outputs=measure_accuracy, seed=cfg.seed)
+        fault_info = {"events": len(schedule.events),
+                      "detected": {int(k): list(map(int, v))
+                                   for k, v in detected.items()}}
     drive_wall = time.perf_counter() - t0
 
     if measure_accuracy:
+        # against the exact forward on the TRUE (clean) frames — under
+        # an active fault window this measures degraded-mode accuracy
         acc_floor, acc_mean = accuracy_vs_exact(det, frames_list, grids,
                                                 outputs)
     else:
@@ -331,8 +377,11 @@ def run_point(cfg: LoadgenConfig, det, point: SweepPoint,
     report = FleetSLOReport.build(
         steps=reports, transport=ts, accuracy_floor=acc_floor,
         accuracy_mean=acc_mean, cache=cache, n_windows=cfg.n_segs)
-    return {"point": point.to_dict(), "drive_wall_s": drive_wall,
-            "dispatches": dict(counts), "slo": report.to_dict()}
+    out = {"point": point.to_dict(), "drive_wall_s": drive_wall,
+           "dispatches": dict(counts), "slo": report.to_dict()}
+    if fault_info is not None:
+        out["faults"] = fault_info
+    return out
 
 
 def sweep(cfg: LoadgenConfig, det_factory, points: Sequence[SweepPoint],

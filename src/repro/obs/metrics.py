@@ -264,6 +264,19 @@ DRIFT_EVENTS = REGISTRY.counter(
 DRIFT_RESOLVE_WALL = REGISTRY.histogram(
     "drift_resolve_s", "Wall time of warm set-cover re-solves")
 
+FAULT_EVENTS = REGISTRY.counter(
+    "fault_events", "Fault lifecycle: injected / detected / failover / "
+    "restored / shard_lost / shard_restored", ("event",))
+
+HEARTBEAT_EVENTS = REGISTRY.counter(
+    "heartbeat_events", "Transport heartbeat: dead / retry / restored",
+    ("event",))
+
+UNCOVERED_FRACTION = REGISTRY.gauge(
+    "uncovered_fraction", "Degraded-mode coverage hole: fraction of "
+    "ground-truth appearances no surviving camera's mask covers, "
+    "latest step (0.0 when failover fully reassigned coverage)")
+
 
 def kernel_counts() -> Dict[str, int]:
     """{kernel: launches} from the ``kernel_dispatches`` family — the

@@ -42,6 +42,15 @@ SCHEMA_VERSION = 1
 _ABSOLUTE_ONLY_SUFFIXES = ("_frac", "_fraction", "_rate", "_reduction",
                            "_floor")
 
+#: named absolute rules, matched on the metric's LEAF name (after the
+#: last "."): chaos-recovery bounds the suffix table cannot express.
+#: ``mttr_steps`` is step-valued with a small-integer healthy baseline
+#: (relative thresholds off "1 step" are meaningless; one extra step of
+#: recovery IS the regression).  ``uncovered_frac_p99`` would match the
+#: suffix table anyway, but its floor is tighter: any sustained coverage
+#: hole above 5% is an incident, regardless of the baseline.
+_ABSOLUTE_METRIC_RULES: Dict[str, "MetricRule"] = {}
+
 
 @dataclass(frozen=True)
 class MetricRule:
@@ -59,16 +68,46 @@ class MetricRule:
 
 
 def rule_for(metric: str) -> MetricRule:
-    """Default rule table: seconds-valued walls get relative + floor;
-    fraction/rate metrics get absolute-only with a 0.05 floor — wide
-    enough that the known ±2% obs-overhead noise band (worst in-band
-    swing 0.04) can never trip it, tight enough that a real structural
-    regression (overhead jumping to 10%) does."""
+    """Default rule table: named absolute rules first (matched on the
+    leaf name, so ``chaos.mttr_steps`` finds ``mttr_steps``); then
+    seconds-valued walls get relative + floor; fraction/rate metrics get
+    absolute-only with a 0.05 floor — wide enough that the known ±2%
+    obs-overhead noise band (worst in-band swing 0.04) can never trip
+    it, tight enough that a real structural regression (overhead jumping
+    to 10%) does."""
+    named = _ABSOLUTE_METRIC_RULES.get(metric.rsplit(".", 1)[-1])
+    if named is not None:
+        return named
     if metric.endswith(_ABSOLUTE_ONLY_SUFFIXES):
         return MetricRule(rel_threshold=0.0, abs_floor=0.05,
                           absolute_only=True)
     return MetricRule(rel_threshold=0.30, abs_floor=0.010,
                       absolute_only=False)
+
+
+_ABSOLUTE_METRIC_RULES.update({
+    # recovery must stay within ~2 steps of the baseline; a 2x MTTR on
+    # a 2-step baseline moves by 2.0 > 1.5 and is flagged
+    "mttr_steps": MetricRule(rel_threshold=0.0, abs_floor=1.5,
+                             absolute_only=True),
+    "detect_latency_steps": MetricRule(rel_threshold=0.0, abs_floor=2.5,
+                                       absolute_only=True),
+    "freeze_detect_latency_steps": MetricRule(rel_threshold=0.0,
+                                              abs_floor=2.5,
+                                              absolute_only=True),
+    "uncovered_frac_p99": MetricRule(rel_threshold=0.0, abs_floor=0.05,
+                                     absolute_only=True),
+    # higher-is-better recovery metrics: a DROP past the floor is the
+    # regression (the suffix/wall tables would price these backwards)
+    "coverage_restored_ratio": MetricRule(rel_threshold=0.0,
+                                          abs_floor=0.05,
+                                          absolute_only=True,
+                                          lower_is_better=False),
+    "degraded_accuracy_floor": MetricRule(rel_threshold=0.0,
+                                          abs_floor=0.05,
+                                          absolute_only=True,
+                                          lower_is_better=False),
+})
 
 
 @dataclass
@@ -186,6 +225,9 @@ def _record_metrics(rec: Dict) -> Dict[str, float]:
     for k, v in rec.get("frontier", {}).items():
         if isinstance(v, (int, float)):
             out[f"frontier.{k}"] = float(v)
+    for k, v in rec.get("chaos", {}).items():
+        if isinstance(v, (int, float)):
+            out[f"chaos.{k}"] = float(v)
     return out
 
 
@@ -283,7 +325,10 @@ def self_test(history_path: Optional[str] = None, window: int = 5
     * an injected 2x slowdown on every wall is flagged as a regression
       with the metric named,
     * a head whose ``obs.overhead_frac`` moved by the known ±2%
-      measurement band (0.04 absolute worst case) is NOT flagged.
+      measurement band (0.04 absolute worst case) is NOT flagged,
+    * an injected 2x MTTR (``chaos.mttr_steps`` 2 -> 4 while every wall
+      holds) is flagged BY NAME — the chaos recovery bound proves
+      itself before gating.
     """
     walls: Dict[str, float] = {}
     if history_path:
@@ -291,7 +336,7 @@ def self_test(history_path: Optional[str] = None, window: int = 5
         shas = reduce_by_sha(records)
         if shas:
             walls = {k: v for k, v in shas[-1][1].items()
-                     if not k.endswith(_ABSOLUTE_ONLY_SUFFIXES)}
+                     if not rule_for(k).absolute_only}
             walls["obs.overhead_frac"] = \
                 shas[-1][1].get("obs.overhead_frac", 0.017)
     if not walls:
@@ -300,11 +345,17 @@ def self_test(history_path: Optional[str] = None, window: int = 5
     base = [_mk_record(f"base{i:04d}", walls) for i in range(3)]
     clean = base + [_mk_record("head-clean", walls)]
     slow = base + [_mk_record("head-slow", {
-        k: (v * 2.0 if not k.endswith(_ABSOLUTE_ONLY_SUFFIXES) else v)
+        k: (v * 2.0 if not rule_for(k).absolute_only else v)
         for k, v in walls.items()})]
     noisy = base + [_mk_record("head-noisy", {
         k: (v + 0.04 if k == "obs.overhead_frac" else v)
         for k, v in walls.items()})]
+    chaos_walls = dict(walls, **{"chaos.mttr_steps": 2.0,
+                                 "chaos.uncovered_frac_p99": 0.0})
+    chaos_base = [_mk_record(f"cbase{i:04d}", chaos_walls)
+                  for i in range(3)]
+    mttr = chaos_base + [_mk_record("head-mttr", dict(
+        chaos_walls, **{"chaos.mttr_steps": 4.0}))]
 
     def run_case(recs: List[Dict]) -> SentinelReport:
         with tempfile.NamedTemporaryFile("w", suffix=".jsonl",
@@ -320,6 +371,7 @@ def self_test(history_path: Optional[str] = None, window: int = 5
     rep_clean = run_case(clean)
     rep_slow = run_case(slow)
     rep_noisy = run_case(noisy)
+    rep_mttr = run_case(mttr)
 
     assert not rep_clean.has_regression, \
         f"sentinel self-test: clean history flagged\n{rep_clean.render()}"
@@ -331,7 +383,12 @@ def self_test(history_path: Optional[str] = None, window: int = 5
     assert not rep_noisy.has_regression, \
         f"sentinel self-test: ±2% obs-overhead noise band flagged\n" \
         f"{rep_noisy.render()}"
+    mttr_flagged = [f.metric for f in rep_mttr.regressions]
+    assert mttr_flagged == ["chaos.mttr_steps"], \
+        f"sentinel self-test: 2x MTTR must be flagged by name (and " \
+        f"nothing else), got {mttr_flagged}\n{rep_mttr.render()}"
     return {"clean_pass": not rep_clean.has_regression,
             "slowdown_flagged": rep_slow.has_regression,
             "noise_band_pass": not rep_noisy.has_regression,
+            "mttr_flagged": rep_mttr.has_regression,
             "flagged_metrics": [f.metric for f in rep_slow.regressions]}

@@ -97,12 +97,20 @@ class FleetSLOReport:
     step_wall_p50_s: float = 0.0
     step_wall_p99_s: float = 0.0
     cache: Dict[str, float] = field(default_factory=dict)
+    # degraded-mode coverage (fault failover): fraction of ground-truth
+    # appearances NO surviving camera's mask covers — 0.0 in healthy
+    # operation, explicitly nonzero when failover could not reassign a
+    # dead camera's coverage (never silently zero: the chaos harness
+    # feeds the per-step series in)
+    uncovered_frac_mean: float = 0.0
+    uncovered_frac_p99: float = 0.0
 
     @classmethod
     def build(cls, steps: Sequence[StepReport] = (),
               transport=None, accuracy_floor: float = 1.0,
               accuracy_mean: float = 1.0, cache=None,
-              n_windows: int = 0) -> "FleetSLOReport":
+              n_windows: int = 0,
+              uncovered_frac: Sequence[float] = ()) -> "FleetSLOReport":
         """Aggregate a run.  ``transport`` is a duck-typed
         ``TransportStats`` (or None); ``cache`` a duck-typed
         ``PackedActivationCache``/``ShardedActivationCache``;
@@ -135,6 +143,10 @@ class FleetSLOReport:
             walls = np.asarray([s.wall_s for s in rep.steps])
             rep.step_wall_p50_s = float(np.percentile(walls, 50))
             rep.step_wall_p99_s = float(np.percentile(walls, 99))
+        if len(uncovered_frac):
+            uf = np.asarray(uncovered_frac, np.float64)
+            rep.uncovered_frac_mean = float(uf.mean())
+            rep.uncovered_frac_p99 = float(np.percentile(uf, 99))
         if cache is not None:
             rep.cache = {
                 "steps": int(cache.steps),
@@ -154,7 +166,7 @@ class FleetSLOReport:
             "shed_body_bytes", "quality_min", "accuracy_floor",
             "accuracy_mean", "changed_tile_fraction",
             "compute_tile_fraction", "step_wall_p50_s", "step_wall_p99_s",
-            "cache")}
+            "cache", "uncovered_frac_mean", "uncovered_frac_p99")}
         d["n_steps"] = len(self.steps)
         d["steps"] = [s.to_dict() for s in self.steps]
         return d

@@ -5,9 +5,11 @@ headline walls, and (since schema v1) the SLO frontier metrics.  This
 module turns that stream into a CI gate:
 
 * **interleaved min-of-reps** — a SHA usually has several records (the
-  smokes re-run per mode); the per-SHA value of each metric is the MIN
+  smokes re-run per mode); the per-SHA value of each wall is the MIN
   across its records, the same noise treatment the benches apply to
-  their own rep loops.
+  their own rep loops.  Absolute-only metrics (two-sided noise) use
+  the per-SHA MEDIAN instead, so one contended-run outlier cannot
+  latch into the baseline.
 * **median-of-window baseline** — the head SHA (latest in file order)
   compares against the MEDIAN of the previous ``window`` SHAs' mins, so
   one noisy historical run cannot poison the baseline.
@@ -233,19 +235,34 @@ def _record_metrics(rec: Dict) -> Dict[str, float]:
 
 def reduce_by_sha(records: Sequence[Dict]
                   ) -> List[Tuple[str, Dict[str, float]]]:
-    """File-ordered (sha, per-metric MIN over that SHA's records) —
-    min-of-reps across the smoke re-runs a SHA accumulates."""
+    """File-ordered (sha, per-metric reduction over that SHA's records).
+
+    Walls reduce by MIN — rep noise is one-sided slow, so the min is
+    the achievable cost, the same treatment the benches apply to their
+    own rep loops.  Absolute-only metrics (fractions, counts, signed
+    overheads) reduce by MEDIAN instead: their noise is two-sided, and
+    a min would latch the worst outlier (e.g. an ``overhead_frac`` of
+    -0.2 from a CPU-contended run poisoning every later baseline).
+    """
     order: List[str] = []
-    mins: Dict[str, Dict[str, float]] = {}
+    reps: Dict[str, Dict[str, List[float]]] = {}
     for rec in records:
         sha = rec["git_sha"]
-        if sha not in mins:
+        if sha not in reps:
             order.append(sha)
-            mins[sha] = {}
+            reps[sha] = {}
         for k, v in _record_metrics(rec).items():
-            cur = mins[sha].get(k)
-            mins[sha][k] = v if cur is None else min(cur, v)
-    return [(sha, mins[sha]) for sha in order]
+            reps[sha].setdefault(k, []).append(v)
+    out: List[Tuple[str, Dict[str, float]]] = []
+    for sha in order:
+        reduced = {}
+        for k, vals in reps[sha].items():
+            if rule_for(k).absolute_only:
+                reduced[k] = float(np.median(vals))
+            else:
+                reduced[k] = min(vals)
+        out.append((sha, reduced))
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -190,6 +190,20 @@ def test_sentinel_min_of_reps_within_sha(tmp_path):
     assert not rep.has_regression
 
 
+def test_sentinel_median_of_reps_for_absolute_metrics(tmp_path):
+    """Absolute-only metrics have two-sided noise: a single garbage rep
+    (e.g. overhead_frac -0.20 from a CPU-contended run) must not latch
+    into a historical SHA's value via a min and flag a healthy head."""
+    recs = [_rec(f"s{i}", BASE) for i in range(2)]
+    for frac in (-0.012, -0.197, 0.007):      # one polluted rep
+        recs.append(_rec("s2", {"reuse.step_wall_s": 0.10,
+                                "obs.overhead_frac": frac}))
+    recs.append(_rec("head", {"reuse.step_wall_s": 0.10,
+                              "obs.overhead_frac": 0.0002}))
+    rep = sentinel.analyze_path(_hist(tmp_path, recs))
+    assert not rep.has_regression
+
+
 def test_sentinel_median_baseline_robust_to_one_fast_outlier(tmp_path):
     """One historically-fast SHA cannot poison the baseline: the median
     of the window, not the min, is the comparison point."""

@@ -13,12 +13,23 @@ Four panels:
      per-step compute count never exceeds the receptive-field dilation
      bound computed by an INDEPENDENT 2D grid-morphology oracle.
   3. dispatch structure — warm changed steps: gate + entry + stack +
-     composite scatter (conv ceiling ≤3 preserved); all-static steps:
-     gate + scatter ONLY.
+     changed-only canvas scatter (conv ceiling ≤3 preserved); all-static
+     steps: the gate ALONE (the persistent canvas is served as-is —
+     zero conv/scatter launches, 0 canvas bytes written).
   4. wall clock (interpret mode) — the reuse step on the sparse-motion
      steady state vs the full-recompute super-launch step (interleaved
-     min over reps), plus the VMEM-calibrated ``ops.choose_block`` size
-     the blocked entry/stack/scatter walks run at.
+     min over reps), plus the all-static step wall (the zero-copy
+     gate-only step, a history headline the sentinel watches) and the
+     VMEM-calibrated ``ops.choose_block`` size the blocked
+     entry/stack/scatter walks run at.
+  5. persistent-canvas accounting — per-step canvas bytes written are
+     exactly ``changed_out * tile_bytes`` (bytes ∝ changed fraction, 0
+     on all-static steps), and at a representative dense-RoI config the
+     canvas-resident reference storage is ≤ 1.0x the packed duplicated
+     reference windows it replaced.
+  6. per-tile-class gate-threshold schedule — shed cameras' body tiles
+     stop relaunching tiny deltas under a (C, 2) [body, halo] schedule
+     while the head-map accuracy floor vs exact recompute holds.
 
 ``quick=True`` is the CI smoke shape.
 """
@@ -33,6 +44,7 @@ import numpy as np
 from benchmarks.common import save_json, table
 from repro.fleet.runtime import fleet_inference_step, fleet_reuse_step
 from repro.kernels import ops
+from repro.net.encoder import gate_threshold_schedule
 from repro.serving.detector import (DetectorConfig, PackedActivationCache,
                                     RoIDetector)
 
@@ -127,9 +139,12 @@ def run(verbose: bool = True, quick: bool = False):
     cache = PackedActivationCache()
     frames = mk_frames()
     fleet_reuse_step(det, as_jnp(frames), grids, cache)     # cold seed
+    tile_bytes = t * t * int(det.head.shape[-1]) * 4
     computed, launched, changed, bounds = [], [], [], []
+    canvas_bytes, changed_out = [], []
     max_diff = 0.0
     static_counts = changed_counts = None
+    static_canvas_bytes = -1
     for s in range(steps):
         prev = frames
         frames = perturb(frames) if s % 2 == 0 else frames  # odd = static
@@ -144,14 +159,22 @@ def run(verbose: bool = True, quick: bool = False):
         computed.append(st.computed)
         launched.append(st.launched)
         changed.append(st.raw_changed)
+        canvas_bytes.append(st.canvas_bytes)
+        changed_out.append(st.changed_out)
         flat_prev = [f for fs in prev.values() for f in fs]
         flat_cur = [f for fs in frames.values() for f in fs]
         bounds.append(_dilation_bound(flat_grids, flat_prev, flat_cur, t,
                                       n_layers))
         if st.computed == 0:
             static_counts = dict(counts)
+            static_canvas_bytes = st.canvas_bytes
         else:
             changed_counts = dict(counts)
+    # canvas-write proportionality: bytes written are EXACTLY the
+    # changed-out tile count times the per-tile head footprint — the
+    # scatter touches nothing else (all-static steps write 0 bytes)
+    canvas_prop_ok = all(cb == co * tile_bytes
+                         for cb, co in zip(canvas_bytes, changed_out))
     # honest accounting: the reduction is measured on LAUNCHED tiles
     # (compact set + power-of-two bucket padding), not the semantic
     # compact set alone
@@ -193,6 +216,67 @@ def run(verbose: bool = True, quick: bool = False):
     reuse_wall, full_wall = _time_min_interleaved(
         [reuse_pair, full_pair], max(reps, 3))
 
+    # all-static step wall: the cache already holds flip["cur"], so each
+    # timed call is the gate-only zero-copy step (no conv, no scatter,
+    # 0 canvas bytes) — the headline the sentinel's named absolute rule
+    # watches for a regression re-enabling full-canvas writes
+    def static_step():
+        return fleet_reuse_step(det, flip["cur"], grids, wall_cache)[0]
+
+    fleet_reuse_step(det, flip["cur"], grids, wall_cache)   # settle static
+    static_wall = _time_min_interleaved([static_step], max(reps, 3))[0]
+
+    # --- panel 5: reference storage, canvas-resident vs packed ----------
+    # at a dense RoI config (merged cross-camera masks are dense — the
+    # regime the packed duplication tax was paid in) the canvas-resident
+    # reference must cost no more than the (t+2)^2-per-tile duplicated
+    # windows it replaced
+    dense_grids = {gid: [rng.random(gshape) < 0.85 for _ in range(cams)]
+                   for gid in range(K)}
+    for gs in dense_grids.values():
+        for g in gs:
+            g[1, 1] = True
+    fd = as_jnp(mk_frames())
+    ref_bytes = {}
+    for mode in ("canvas", "packed"):
+        c = PackedActivationCache(ref_mode=mode)
+        fleet_reuse_step(det, fd, dense_grids, c)           # cold seed
+        fleet_reuse_step(det, fd, dense_grids, c)           # warm refs
+        ref = c.ref_canvas if mode == "canvas" else c.ref_win
+        ref_bytes[mode] = int(np.asarray(ref).nbytes)
+    ref_storage_ratio = ref_bytes["canvas"] / max(ref_bytes["packed"], 1)
+
+    # --- panel 6: per-tile-class gate-threshold schedule ----------------
+    # every other camera shed; its BODY tiles get a high byte threshold,
+    # its HALO (mask-boundary) tiles half that — boundary content stays
+    # fresher under the same shedding.  Tiny sub-threshold drift must
+    # stop relaunching shed body tiles while the served (stale) heads
+    # hold the accuracy floor vs exact recompute.
+    flat_cams = K * cams
+    quality = np.ones(flat_cams)
+    quality[::2] = 0.5
+    thr2 = gate_threshold_schedule(quality, t, 3, gain=0.5,
+                                   halo_gain=0.25)           # (C, 2)
+    assert thr2.shape == (flat_cams, 2)
+    tc_cache = PackedActivationCache()
+    f0 = mk_frames()
+    fleet_reuse_step(det, as_jnp(f0), grids, tc_cache, thr2)  # cold seed
+    f1 = {g: [f + np.float32(2e-3) for f in fs] for g, fs in f0.items()}
+    got_tc, _, tc_stats = fleet_reuse_step(det, as_jnp(f1), grids,
+                                           tc_cache, thr2)
+    exact = det.superlaunch_forward(f1, grids)
+    close = tot = 0
+    tc_worst = 0.0
+    for gid in grids:
+        for i in range(len(grids[gid])):
+            d = np.abs(np.asarray(exact[gid][i])
+                       - np.asarray(got_tc[gid][i]))
+            close += int((d <= 1e-2).sum())
+            tot += d.size
+            tc_worst = max(tc_worst, float(d.max()) if d.size else 0.0)
+    tileclass_accuracy_floor = close / max(tot, 1)
+    tileclass_sheds_suppressed = tc_stats.raw_changed < tc_stats.total_tiles
+
     payload = {
         "groups": K, "cameras": K * cams, "grid_shape": list(gshape),
         "num_conv_layers": n_layers, "active_tiles": n_active,
@@ -209,9 +293,27 @@ def run(verbose: bool = True, quick: bool = False):
         "changed_step_dispatches": changed_counts,
         "reuse_step_wall_s": reuse_wall,
         "full_step_wall_s": full_wall,
+        "static_step_wall_s": static_wall,
+        "canvas_bytes_per_step": canvas_bytes,
+        "changed_out_per_step": changed_out,
+        "tile_canvas_bytes": tile_bytes,
+        "canvas_bytes_prop_ok": bool(canvas_prop_ok),
+        "static_canvas_bytes": static_canvas_bytes,
+        "canvas_bytes_total": cache.canvas_bytes_total,
+        "ref_storage_canvas_bytes": ref_bytes["canvas"],
+        "ref_storage_packed_bytes": ref_bytes["packed"],
+        "ref_storage_ratio": ref_storage_ratio,
+        "tileclass_accuracy_floor": tileclass_accuracy_floor,
+        "tileclass_max_abs_diff": tc_worst,
+        "tileclass_sheds_suppressed": bool(tileclass_sheds_suppressed),
         "chosen_block": det.block,
         "vmem_budget_bytes": det.cfg.vmem_budget_bytes,
         "cache_invalidations": cache.invalidations,
+        "headline": {
+            "canvas_bytes_per_step": float(np.mean(canvas_bytes)),
+            "static_step_wall_s": static_wall,
+            "static_canvas_bytes": float(static_canvas_bytes),
+        },
         "wall_s": time.time() - t00,
     }
     if verbose:
@@ -221,6 +323,11 @@ def run(verbose: bool = True, quick: bool = False):
             ["compute fraction", f"{compute_frac:.3f}", "1.000"],
             ["trace-cell wall (s)", f"{reuse_wall:.4f}",
              f"{full_wall:.4f}"],
+            ["all-static step wall (s)", f"{static_wall:.4f}", "-"],
+            ["canvas bytes / step", f"{np.mean(canvas_bytes):.0f}",
+             f"{n_active * tile_bytes}"],
+            ["reference storage (bytes)", str(ref_bytes["canvas"]),
+             str(ref_bytes["packed"])],
         ]
         print(f"== delta-gated reuse: {K} groups x {cams} cams, "
               f"{gshape[0]}x{gshape[1]} grids, {n_active} active tiles, "
@@ -229,8 +336,13 @@ def run(verbose: bool = True, quick: bool = False):
         print(f"conv-tile reduction: {reduction:.1%} "
               f"(changed {changed_frac:.1%} -> dilated "
               f"{compute_frac:.1%}); max |diff| {max_diff:.1e}")
-        print(f"static step: {static_counts}; "
+        print(f"static step: {static_counts} "
+              f"({static_canvas_bytes} canvas bytes); "
               f"changed step: {changed_counts}")
+        print(f"canvas prop ok: {canvas_prop_ok}; ref storage ratio "
+              f"{ref_storage_ratio:.2f}x; tile-class accuracy floor "
+              f"{tileclass_accuracy_floor:.4f} (sheds suppressed: "
+              f"{tileclass_sheds_suppressed})")
     save_json("bench_reuse.json", payload)
     return payload
 

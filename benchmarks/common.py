@@ -52,7 +52,10 @@ def offline_baseline():
 #: v2: optional flat numeric "chaos" dict (the chaos-harness headline —
 #: mttr_steps, detect_latency_steps, uncovered_frac_p99 ...) alongside
 #: the v1 "frontier" block; v1 records remain valid.
-HISTORY_SCHEMA_VERSION = 2
+#: v3: optional flat numeric "canvas" dict (the persistent-canvas
+#: headline — canvas_bytes_per_step, static_step_wall_s,
+#: static_canvas_bytes); v1/v2 records remain valid.
+HISTORY_SCHEMA_VERSION = 3
 
 _HISTORY_REQUIRED = {
     "schema": int, "ts": str, "git_sha": str, "mode": str,
@@ -66,9 +69,9 @@ def validate_history_record(record) -> list:
     Returns a list of human-readable problems (empty = valid):
     required keys with the right types, string panel names, numeric
     headline walls, and — when present — flat numeric ``frontier``
-    (the SLO headline block, v1) and ``chaos`` (the chaos-harness
-    headline, v2) dicts.  ``run.py`` refuses to append a record that
-    fails this."""
+    (the SLO headline block, v1), ``chaos`` (the chaos-harness
+    headline, v2) and ``canvas`` (the persistent-canvas headline, v3)
+    dicts.  ``run.py`` refuses to append a record that fails this."""
     problems = []
     if not isinstance(record, dict):
         return [f"record must be a dict, got {type(record).__name__}"]
@@ -94,7 +97,7 @@ def validate_history_record(record) -> list:
                 problems.append(f"headline_walls[{k!r}] must be numeric, "
                                 f"got {v!r}")
                 break
-    for block in ("frontier", "chaos"):
+    for block in ("frontier", "chaos", "canvas"):
         if block not in record:
             continue
         if not isinstance(record[block], dict):

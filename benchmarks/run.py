@@ -27,6 +27,7 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _HEADLINE_WALLS = [
     ("stack", "stack_kernel_wall_s"), ("stack", "chain_kernel_wall_s"),
     ("reuse", "reuse_step_wall_s"), ("reuse", "full_step_wall_s"),
+    ("reuse", "static_step_wall_s"),
     ("shard", "sharded_wall_2shard_s"), ("shard", "single_device_wall_s"),
     # per-step, not total: the 30-step de-flake arms made the total
     # wall incomparable with pre-de-flake history under the same name
@@ -50,7 +51,8 @@ def append_history(mode: str) -> None:
     ``BENCH_history.jsonl``: git SHA, which panels BENCH_kernels.json
     holds, the headline walls, and — when an SLO frontier panel exists —
     its flat ``headline`` block as ``frontier`` (likewise the chaos
-    panel's headline as ``chaos``).  Records are stamped
+    panel's headline as ``chaos`` and the reuse panel's
+    persistent-canvas headline as ``canvas``).  Records are stamped
     with ``HISTORY_SCHEMA_VERSION`` and validated before the append; a
     malformed record is REFUSED (the sentinel depends on this stream
     staying parseable)."""
@@ -79,7 +81,8 @@ def append_history(mode: str) -> None:
                          if isinstance(v, dict)),
         "headline_walls": walls,
     }
-    for panel, block in (("slo", "frontier"), ("chaos", "chaos")):
+    for panel, block in (("slo", "frontier"), ("chaos", "chaos"),
+                         ("reuse", "canvas")):
         headline = panels.get(panel, {}).get("headline")
         if isinstance(headline, dict):
             record[block] = {k: float(v) for k, v in headline.items()
@@ -266,10 +269,14 @@ def reuse_quick():
     tiles bounded by the dilated changed set (checked against an
     independent grid-morphology oracle), ≥40% conv-tile reduction on the
     default mostly-static trace with BIT-identical outputs at threshold
-    0, all-static steps dispatching only gate + composite scatter, the
-    conv chain keeping its ≤3-dispatch ceiling, the reuse step's wall
-    clock at or below full recompute, and the VMEM-calibrated block
-    recorded — merges a "reuse" panel into BENCH_kernels.json."""
+    0, all-static steps dispatching the gate ALONE (zero conv/scatter
+    launches, 0 canvas bytes), canvas bytes written exactly proportional
+    to the changed-out tile count, canvas-resident reference storage ≤
+    1.0x the packed windows it replaced, the per-tile-class threshold
+    schedule holding the accuracy floor, the conv chain keeping its
+    ≤3-dispatch ceiling, the reuse step's wall clock at or below full
+    recompute, and the VMEM-calibrated block recorded — merges a
+    "reuse" panel into BENCH_kernels.json."""
     from benchmarks import bench_reuse
     t0 = time.time()
     payload = bench_reuse.run(verbose=True, quick=True)
@@ -297,13 +304,34 @@ def reuse_quick():
         f"(got {payload['conv_tile_reduction']:.1%})"
     assert payload["reuse_vs_full_max_abs_diff"] == 0.0, \
         "threshold-0 reuse must be bit-identical to full recompute"
-    # dispatch structure: all-static = gate + scatter; changed steps keep
-    # the ≤3-dispatch conv ceiling next to the one shared gate dispatch
+    # dispatch structure: all-static = the gate ALONE (zero-copy step —
+    # the persistent canvas is served as-is); changed steps keep the
+    # ≤3-dispatch conv ceiling next to the one shared gate dispatch
     assert payload["static_step_dispatches"] == {
-        "tile_delta_gate": 1, "sbnet_scatter_fleet": 1}, payload
+        "tile_delta_gate": 1}, payload
     ch = payload["changed_step_dispatches"]
     assert ch["tile_delta_gate"] == 1 and ch["roi_conv_entry"] == 1
+    assert ch["sbnet_scatter_changed"] == 1, ch
     assert sum(v for k, v in ch.items() if k != "tile_delta_gate") <= 3
+    # persistent canvas: bytes written ∝ changed fraction (exactly
+    # changed_out * tile_bytes per step), 0 bytes on all-static steps,
+    # and the canvas-resident references cost ≤ 1.0x the packed
+    # duplicated windows they replaced
+    assert payload["canvas_bytes_prop_ok"], \
+        "canvas bytes written must equal changed_out * tile_bytes"
+    assert payload["static_canvas_bytes"] == 0, \
+        f"all-static step wrote {payload['static_canvas_bytes']} canvas " \
+        f"bytes (must be 0)"
+    assert payload["ref_storage_ratio"] <= 1.0, \
+        f"canvas-resident references must not cost more than the packed " \
+        f"windows (got {payload['ref_storage_ratio']:.2f}x)"
+    # per-tile-class threshold schedule: shed cameras stop relaunching
+    # tiny deltas, yet ≥99% of head entries stay within 1e-2 of exact
+    assert payload["tileclass_sheds_suppressed"], \
+        "per-tile-class thresholds must suppress shed-camera relaunches"
+    assert payload["tileclass_accuracy_floor"] >= 0.99, \
+        f"per-tile-class schedule broke the accuracy floor " \
+        f"(got {payload['tileclass_accuracy_floor']:.4f})"
     # 15% slack absorbs scheduler noise on shared CI runners (same
     # policy as the stack smoke) without hiding a real regression
     assert payload["reuse_step_wall_s"] <= \
@@ -593,8 +621,10 @@ def main():
                     help="CI smoke: temporal delta-gated inference "
                          "(convolved tiles ≤ dilated changed set, ≥40% "
                          "reduction on the mostly-static trace, bit-"
-                         "exact at threshold 0, gate+scatter-only static "
-                         "steps) merged into BENCH_kernels.json")
+                         "exact at threshold 0, gate-only zero-copy "
+                         "static steps, canvas bytes ∝ changed "
+                         "fraction, ≤1.0x reference storage) merged "
+                         "into BENCH_kernels.json")
     ap.add_argument("--shard", action="store_true",
                     help="CI smoke: sharded fleet serving (mesh=(1,) "
                          "bit-exact, per-shard dispatch ceiling, async "

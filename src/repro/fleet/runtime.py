@@ -292,16 +292,17 @@ def fleet_reuse_step(det, frames: Dict[int, List],
     — the SAME stats feed the edge rate controller via
     ``net.encoder.static_fraction_from_stats``, so there is no second
     delta dispatch per step), the surviving compact set runs the blocked
-    entry + stack chain, and one blocked composite scatter merges cached
-    + fresh tiles.  Returns ({gid: head maps}, dispatch Counter,
-    ReuseStats).  Asserts — every step — the delta-gated dispatch
-    structure:
+    entry + stack chain, and one ``sbnet_scatter_changed`` writes ONLY
+    the refreshed tiles' head rows into the persistent canvas.  Returns
+    ({gid: head maps}, dispatch Counter, ReuseStats).  Asserts — every
+    step — the delta-gated dispatch structure:
 
     * the conv chain keeps the super-launch's ≤3-dispatch ceiling
-      (entry ≤1, stack ≤1, composite scatter = 1);
+      (entry ≤1, stack ≤1, changed-only scatter = 1);
     * exactly one gate dispatch on warm steps, none on cold steps (a
-      cold step IS the plain super-launch: cache re-seed);
-    * an all-static frame dispatches only gate + composite scatter;
+      cold step IS the plain super-launch: cache + canvas re-seed);
+    * an all-static frame dispatches the gate ALONE — zero conv, zero
+      scatter, 0 canvas bytes written;
     * an all-empty fleet launches nothing."""
     t0 = time.perf_counter()
     with kops.count_kernels() as c, \
@@ -321,11 +322,11 @@ def fleet_reuse_step(det, frames: Dict[int, List],
                     "roi_conv_stack": 1 if det.num_conv_layers > 1 else 0,
                     "sbnet_scatter_fleet": 1}
     elif stats.computed == 0:
-        expected = {"tile_delta_gate": 1, "sbnet_scatter_fleet": 1}
+        expected = {"tile_delta_gate": 1}
     else:
         expected = {"tile_delta_gate": 1, "roi_conv_entry": 1,
                     "roi_conv_stack": 1 if det.num_conv_layers > 1 else 0,
-                    "sbnet_scatter_fleet": 1}
+                    "sbnet_scatter_changed": 1}
     expected = {k: v for k, v in expected.items() if v}
     observed = {k: total[k] for k in expected}
     assert observed == expected and not set(total) - set(expected), \
@@ -342,11 +343,12 @@ def sharded_fleet_step(runtime, frames: Dict[int, List], cache,
     with the same every-step dispatch-structure assertion as
     ``fleet_reuse_step`` — the sharded program is ONE SPMD launch per
     kernel, so the per-SHARD ceiling and the fleet-wide dispatch count
-    coincide: 1 gate + the ≤3-dispatch conv chain on changed steps, gate
-    + scatter on all-static steps, nothing on an all-empty fleet.  (The
-    sharded path gates on cold steps too — SPMD uniformity: cold and
-    warm shards share one program.)  Returns ({gid: head maps},
-    dispatch Counter, ShardedReuseStats)."""
+    coincide: 1 gate + the ≤3-dispatch conv chain on changed steps, the
+    gate ALONE on all-static steps (the persistent canvas is served
+    as-is, zero conv/scatter launches and 0 bytes written), nothing on
+    an all-empty fleet.  (The sharded path gates on cold steps too —
+    SPMD uniformity: cold and warm shards share one program.)  Returns
+    ({gid: head maps}, dispatch Counter, ShardedReuseStats)."""
     t0 = time.perf_counter()
     with kops.count_kernels() as c, \
             obs_trace.span("sharded_fleet_step", step=cache.steps) as sp:
@@ -358,12 +360,12 @@ def sharded_fleet_step(runtime, frames: Dict[int, List], cache,
     if stats.total_tiles == 0:
         expected = {}
     elif stats.k_max == 0:
-        expected = {"tile_delta_gate": 1, "sbnet_scatter_fleet": 1}
+        expected = {"tile_delta_gate": 1}
     else:
         expected = {"tile_delta_gate": 1, "roi_conv_entry": 1,
                     "roi_conv_stack":
                         1 if runtime.det.num_conv_layers > 1 else 0,
-                    "sbnet_scatter_fleet": 1}
+                    "sbnet_scatter_changed": 1}
     expected = {k: v for k, v in expected.items() if v}
     observed = {k: total[k] for k in expected}
     assert observed == expected and not set(total) - set(expected), \

@@ -19,23 +19,31 @@ state:
   entirely empty ones — run the same SPMD program and padding work can
   never corrupt a real output.
 * **Per-shard dispatch ceiling.**  Each step is one gate launch plus a
-  ≤3-dispatch conv chain (entry, layer-stack megakernel, composite
-  scatter) — each counted ONCE per step via ``ops.record_dispatch``
-  because SPMD means the single traced program IS the per-shard program:
-  one dispatch runs the kernel once on every shard.
+  ≤3-dispatch conv chain (entry, layer-stack megakernel, changed-only
+  canvas scatter) — each counted ONCE per step via
+  ``ops.record_dispatch`` because SPMD means the single traced program
+  IS the per-shard program: one dispatch runs the kernel once on every
+  shard.  An ALL-STATIC step is the gate alone: the persistent head
+  canvas is served as-is — zero conv/scatter launches, 0 bytes written.
 * **Bit-identity.**  Every per-tile quantity (gate stats, entry/stack
   GEMMs, scatter, head matmul) reduces only over its own tile's inputs,
   so re-partitioning tiles across shards cannot change bits: each
   group's head maps are bit-identical to the single-device
   ``superlaunch_forward_reuse`` on the same trace (asserted by
   tests/test_sharded.py and benchmarks/bench_shard.py).
-* **Sharded cache + per-shard invalidation.**  The packed activations
-  and reference windows live in a ``ShardedActivationCache`` ((S, n_max,
-  ...) stacked, shard axis over the mesh).  A drift re-solve invalidates
-  ONLY the owning shard (``drift.wire_shard_invalidation``); the next
-  step recomputes that shard's rows while the others keep serving warm —
-  cold and warm shards share the one SPMD program (a cold shard's rows
-  are simply all marked raw-changed host-side).
+* **Sharded cache + persistent canvas + per-shard invalidation.**  The
+  packed activations, the persistent HEAD-MAP CANVAS ((S, F_max + 1, H,
+  W, A) — warm steps scatter only changed tiles' head rows into it,
+  padding/margin rows land on the sacrificial camera plane) and the
+  canvas-resident gate references ((S, F_max + 1, H + 2, W + 2, 3) with
+  a host-side (S, n_max) refresh-epoch table) live in a
+  ``ShardedActivationCache``, shard axis over the mesh.  A drift
+  re-solve invalidates ONLY the owning shard
+  (``drift.wire_shard_invalidation``); the next step wipes that shard's
+  canvas plane in-program and recomputes its rows while the others keep
+  serving warm — cold and warm shards share the one SPMD program (a
+  cold shard's rows are simply all marked raw-changed host-side), so
+  canvas invalidation is shard-exact.
 
 ``AsyncShardedPipeline`` overlaps the host and the device: the gate for
 step t is dispatched BEFORE the conv for step t-1, so pulling the gate
@@ -63,13 +71,16 @@ from repro.distributed.shardings import fleet_state_sharding
 from repro.kernels import ops as kops
 from repro.kernels.roi_conv import (roi_conv_entry as _raw_entry,
                                     roi_conv_stack as _raw_stack)
-from repro.kernels.sbnet import sbnet_scatter_fleet as _raw_scatter
+from repro.kernels.sbnet import (sbnet_scatter_changed as
+                                 _raw_scatter_changed)
 from repro.kernels.tile_delta import (COEF_BITS, RUN_BITS,
-                                      tile_delta_gate as _raw_gate)
+                                      tile_delta_gate_canvas as
+                                      _raw_gate_canvas)
 from repro.launch.mesh import FLEET_AXIS
 from repro.obs import trace as obs_trace
 from repro.serving.detector import (ShardedActivationCache,
-                                    gate_changed_rows, ref_advance_rows)
+                                    gate_changed_rows, ref_advance_rows,
+                                    tile_class_rows)
 
 
 def _pow2(n: int) -> int:
@@ -94,6 +105,10 @@ class ShardedReuseStats:
     launched: int                 # S * k_max when the conv launched
     k_max: int                    # per-shard convolved rows this step
     cold_shards: int              # shards that ran a forced recompute
+    # bytes scattered into the persistent head canvas this step (real
+    # changed-out tiles only; sacrificial-plane padding/margin writes
+    # are not counted).  0 on an all-static step — no scatter launch.
+    canvas_bytes: int = 0
     per_shard_computed: List[int] = field(default_factory=list)
     # per-shard gate stats over REAL rows (None for cold shards, whose
     # reference content was stale) — feed per-camera slices to
@@ -110,11 +125,19 @@ class ShardedReuseStats:
 class _HostPlan:
     """One step's host-side compaction product (the work the async
     pipeline overlaps with the previous step's device compute)."""
-    k_max: int                    # 0 = all-static: scatter-only step
+    k_max: int                    # 0 = all-static: gate-only step (the
+    #                               persistent canvas is served as-is)
     cidx: Optional[np.ndarray]    # (S, k_max, 3) compact tables
     cnbr: Optional[np.ndarray]    # (S, k_max, 8)
     upd: Optional[np.ndarray]     # (S, k_max) cache row targets (n_max=drop)
+    sidx: Optional[np.ndarray]    # (S, k_max, 3) canvas scatter targets:
+    #                               changed rows keep their (cam, ty, tx),
+    #                               margin/padding rows hit the
+    #                               sacrificial camera plane (F_max, 0, 0)
     adv: np.ndarray               # (S, n_max) reference-advance mask
+    cold_mask: np.ndarray         # (S,) shards whose canvas plane must be
+    #                               wiped to zeros before this step's
+    #                               scatter (shard-exact invalidation)
     stats: ShardedReuseStats
 
 
@@ -176,6 +199,9 @@ class ShardedSuperlaunch:
             idx_pad[s, :self._n_s[s]] = self._idx_np[s]
         self._idx_pad_np = idx_pad
         self.idx_pad = jax.device_put(jnp.asarray(idx_pad), self.sharding)
+        # per-shard tile classes (body vs halo/boundary rows) for the
+        # per-tile-class gate-threshold schedule
+        self._cls_np = [tile_class_rows(nbr) for nbr in self._nbr_np]
         self._fns = {}
 
     def make_cache(self) -> ShardedActivationCache:
@@ -206,22 +232,42 @@ class ShardedSuperlaunch:
                     g.shape[1] * t > self.canvas_w:
                 raise ValueError("re-solved grid exceeds the built canvas")
         self.grids[gid] = list(new_grids)
-        old_n_max = self.n_max
+        old_n_max, old_f_max = self.n_max, self.F_max
         self._build_tables()
-        if cache is not None and cache.packed is not None \
-                and self.n_max != old_n_max:
+        if cache is None or cache.packed is None:
+            return
+        if self.F_max != old_f_max:
+            # camera-axis shape changed: the stacked canvases cannot be
+            # row-preserved — drop them (every shard reseeds next step)
+            cache.packed = None
+            cache.ref_canvas = None
+            cache.canvas = None
+            cache.epoch_np = None
+            cache.valid[:] = False
+            return
+        if self.n_max != old_n_max:
             pad = self.n_max - old_n_max
-            if pad > 0:
-                packed = np.pad(np.asarray(cache.packed),
-                                ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
-                ref = np.pad(np.asarray(cache.ref_win),
-                             ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
-            else:
-                packed = np.asarray(cache.packed)[:, :self.n_max]
-                ref = np.asarray(cache.ref_win)[:, :self.n_max]
-            cache.packed = jax.device_put(jnp.asarray(packed),
-                                          self.sharding)
-            cache.ref_win = jax.device_put(jnp.asarray(ref), self.sharding)
+
+            def repad(a, n_extra_dims):
+                a = np.asarray(a)
+                if pad > 0:
+                    widths = ((0, 0), (0, pad)) + ((0, 0),) * n_extra_dims
+                    return np.pad(a, widths)
+                return a[:, :self.n_max]
+
+            cache.packed = jax.device_put(
+                jnp.asarray(repad(cache.packed, 3)), self.sharding)
+            if cache.epoch_np is not None:
+                cache.epoch_np = repad(cache.epoch_np, 0)
+        # shard-exact canvas invalidation: the owning shard is already
+        # cold (invalidate_group); zero its canvas plane host-side too,
+        # so tiles the re-solve REMOVED cannot leak stale head bytes
+        # (the in-program cold wipe covers the normal case, but a shard
+        # rebuilt to an empty mask never reaches the conv dispatch)
+        s = cache.owner_shard(gid)
+        if cache.canvas is not None:
+            cache.canvas = jax.device_put(
+                jnp.asarray(cache.canvas).at[s].set(0.0), self.sharding)
 
     # -- step building blocks ---------------------------------------------
     def _shard_map(self, f, n_in: int, n_out: int, donate=()):
@@ -255,12 +301,16 @@ class ShardedSuperlaunch:
 
             def local(x, ref, idx):
                 xp = jnp.pad(x[0], ((0, 0), (1, 1), (1, 1), (0, 0)))
-                stats, windows = _raw_gate(
+                # canvas-resident references: the comparison side is the
+                # shard's padded reference canvas, addressed through the
+                # same tile rows — no packed window duplication, stats
+                # rows are the only output
+                stats = _raw_gate_canvas(
                     xp, ref[0], idx[0], t, t, 8.0, COEF_BITS, RUN_BITS,
                     block=det.block, interpret=kops.INTERPRET)
-                return stats[None], windows[None]
+                return stats[None]
 
-            self._fns[key] = self._shard_map(local, 3, 2)
+            self._fns[key] = self._shard_map(local, 3, 1)
         return self._fns[key]
 
     def _conv_fn(self, k_max: int):
@@ -268,10 +318,8 @@ class ShardedSuperlaunch:
         if key not in self._fns:
             det, t = self.det, self.det.cfg.tile
             w0, ws, head = det.weights[0], det.weights[1:], det.head
-            n_max, F, H, W = self.n_max, self.F_max, self.canvas_h, \
-                self.canvas_w
 
-            def local(x, cidx, cnbr, upd, packed, idx):
+            def local(x, cidx, cnbr, upd, sidx, wipe, packed, canvas):
                 p = _raw_entry(x[0], w0, cidx[0], t, t,
                                block=det.chain_block,
                                interpret=kops.INTERPRET)
@@ -281,44 +329,45 @@ class ShardedSuperlaunch:
                 # only changed-OUTPUT rows graduate; margin and padding
                 # rows carry target n_max and drop out of bounds
                 new_packed = packed[0].at[upd[0]].set(p, mode="drop")
-                base = jnp.zeros((F + 1, H, W, p.shape[-1]), p.dtype)
-                full = _raw_scatter(new_packed, idx[0], base,
-                                    block=det.chain_block,
-                                    interpret=kops.INTERPRET)
-                return new_packed[None], (full @ head)[None]
+                # head applied PRE-scatter (bit-identical: per-pixel dot
+                # products), then ONLY this step's rows hit the
+                # persistent canvas — changed rows at their real
+                # (cam, ty, tx), margin/padding rows on the sacrificial
+                # camera plane.  A cold shard's plane is wiped to zeros
+                # first (shard-exact canvas invalidation, in-program)
+                k, C = p.shape[0], p.shape[-1]
+                ph = (p.reshape(k * t * t, C) @ head).reshape(
+                    k, t, t, head.shape[-1])
+                base = jnp.where(wipe[0][0], jnp.zeros_like(canvas[0]),
+                                 canvas[0])
+                new_canvas = _raw_scatter_changed(
+                    ph, sidx[0], base, block=det.chain_block,
+                    interpret=kops.INTERPRET)
+                return new_packed[None], new_canvas[None]
 
-            # donate the cache's packed buffer (argument 4): the update
-            # writes in place of the old activations
-            self._fns[key] = self._shard_map(local, 6, 2, donate=(4,))
-        return self._fns[key]
-
-    def _static_fn(self):
-        key = ("static",)
-        if key not in self._fns:
-            det, head = self.det, self.det.head
-            F, H, W = self.F_max, self.canvas_h, self.canvas_w
-
-            def local(packed, idx):
-                base = jnp.zeros((F + 1, H, W, packed.shape[-1]),
-                                 packed.dtype)
-                full = _raw_scatter(packed[0], idx[0], base,
-                                    block=det.chain_block,
-                                    interpret=kops.INTERPRET)
-                return (full @ head)[None]
-
-            self._fns[key] = self._shard_map(local, 2, 1)
+            # donate the cache's packed buffer (argument 6): the update
+            # writes in place of the old activations.  The canvas
+            # (argument 7) is NOT donated here: the async pipeline's
+            # collect() reads the previous step's heads — which ARE the
+            # previous canvas buffer — after this dispatch is queued
+            # (real-TPU canvas donation is a carried ROADMAP item)
+            self._fns[key] = self._shard_map(local, 8, 2, donate=(6,))
         return self._fns[key]
 
     def _refadv_fn(self):
         key = ("refadv",)
         if key not in self._fns:
 
-            def local(ref, windows, mask):
-                m = mask[0][:, None, None, None]
-                return jnp.where(m, windows[0], ref[0])[None]
+            def local(ref, x, mask):
+                xp = jnp.pad(x[0], ((0, 0), (1, 1), (1, 1), (0, 0)))
+                return jnp.where(mask[0], xp, ref[0])[None]
 
             # pure jnp reference advancement (not a counted kernel
-            # dispatch, like ops.gather_windows); donates the old refs
+            # dispatch, like ops.gather_windows): advanced rows' full
+            # window regions take the current frame's content (all
+            # writes carry the SAME frame, so window overlap between
+            # simultaneously-advanced tiles is harmless); donates the
+            # old reference canvas
             self._fns[key] = self._shard_map(local, 3, 1, donate=(0,))
         return self._fns[key]
 
@@ -327,12 +376,17 @@ class ShardedSuperlaunch:
             return
         S, t = self.plan.n_shards, self.det.cfg.tile
         c_last = self.det.cfg.channels[-1]
+        a = self.det.head.shape[-1]
         cache.packed = jax.device_put(
             jnp.zeros((S, self.n_max, t, t, c_last), jnp.float32),
             self.sharding)
-        cache.ref_win = jax.device_put(
-            jnp.zeros((S, self.n_max, t + 2, t + 2, 3), jnp.float32),
-            self.sharding)
+        cache.ref_canvas = jax.device_put(
+            jnp.zeros((S, self.F_max + 1, self.canvas_h + 2,
+                       self.canvas_w + 2, 3), jnp.float32), self.sharding)
+        cache.canvas = jax.device_put(
+            jnp.zeros((S, self.F_max + 1, self.canvas_h, self.canvas_w,
+                       a), jnp.float32), self.sharding)
+        cache.epoch_np = np.zeros((S, self.n_max), np.int64)
         cache.valid[:] = False
 
     def _host_plan(self, stats_np: np.ndarray,
@@ -341,8 +395,9 @@ class ShardedSuperlaunch:
         """Gate thresholding + ``reuse_sets`` dilation + table
         compaction for every shard — all host-side numpy on static
         tables (the phase the async pipeline overlaps with device
-        compute).  ``threshold``: scalar, or {gid: per-camera array}
-        (the rate controller's schedule)."""
+        compute).  ``threshold``: scalar, or {gid: per-camera (F_g,) or
+        per-camera-per-tile-class (F_g, N_TILE_CLASSES) array} (the rate
+        controller's schedule; see ``gate_threshold_schedule``)."""
         S = self.plan.n_shards
         n_layers = self.det.num_conv_layers
         per_changed, per_compute = [], []
@@ -360,7 +415,8 @@ class ShardedSuperlaunch:
             rows = stats_np[s, :n_s]
             if cache.valid[s]:
                 raw = np.asarray(gate_changed_rows(
-                    rows, thr_by_shard[s], self._idx_np[s][:, 0]), bool)
+                    rows, thr_by_shard[s], self._idx_np[s][:, 0],
+                    self._cls_np[s]), bool)
                 gate_stats.append(rows)
             else:
                 # cold shard: reference content is stale — force a full
@@ -386,21 +442,28 @@ class ShardedSuperlaunch:
                 adv[s, :n_s] = True
                 continue
             a = ref_advance_rows(thr_by_shard[s], self._idx_np[s][:, 0],
-                                 per_changed[s])
+                                 per_changed[s], self._cls_np[s])
             adv[s, :n_s] = True if a is None else a
+        cold_mask = ~np.asarray(cache.valid, bool)
+        t = self.det.cfg.tile
+        tile_bytes = t * t * int(self.det.head.shape[-1]) * 4
         stats = ShardedReuseStats(
             total_tiles=self.n_total, raw_changed=raw_total,
             changed_out=changed_total, computed=computed_total,
             launched=S * k_max if k_max else 0, k_max=k_max,
             cold_shards=cold_shards,
+            canvas_bytes=changed_total * tile_bytes,
             per_shard_computed=[int(c.sum()) for c in per_compute],
             gate_stats=gate_stats)
         if k_max == 0:
-            return _HostPlan(0, None, None, None, adv, stats)
+            return _HostPlan(0, None, None, None, None, adv, cold_mask,
+                             stats)
         cidx = np.zeros((S, k_max, 3), np.int32)
         cidx[:, :, 0] = self.F_max                 # sacrificial padding
         cnbr = np.full((S, k_max, 8), -1, np.int32)
         upd = np.full((S, k_max), self.n_max, np.int32)   # n_max = drop
+        sidx = np.zeros((S, k_max, 3), np.int32)
+        sidx[:, :, 0] = self.F_max                 # sacrificial plane
         for s in range(S):
             compute = per_compute[s]
             k = int(compute.sum())
@@ -411,22 +474,36 @@ class ShardedSuperlaunch:
             cidx[s, :k] = ci
             cnbr[s, :k] = cn
             slots = np.nonzero(compute)[0]
-            upd[s, :k] = np.where(per_changed[s][slots], slots,
-                                  self.n_max).astype(np.int32)
-        return _HostPlan(k_max, cidx, cnbr, upd, adv, stats)
+            ch = per_changed[s][slots]
+            upd[s, :k] = np.where(ch, slots, self.n_max).astype(np.int32)
+            # canvas targets: only changed-OUTPUT rows write their real
+            # tile; margin rows keep the cache's (still-exact) old bytes
+            # by writing the sacrificial plane instead
+            sidx[s, :k] = np.where(ch[:, None], ci,
+                                   np.array([[self.F_max, 0, 0]],
+                                            np.int32))
+        return _HostPlan(k_max, cidx, cnbr, upd, sidx, adv, cold_mask,
+                         stats)
 
     def _shard_thresholds(self, threshold) -> List:
-        """Resolve the scalar / {gid: per-camera} threshold into one
-        scalar-or-(F_s,) value per shard, flat-camera indexed."""
+        """Resolve the scalar / {gid: per-camera or per-camera-per-
+        tile-class} threshold into one scalar, (F_s,) or
+        (F_s, n_classes) value per shard, flat-camera indexed."""
         if not isinstance(threshold, dict):
             return [threshold] * self.plan.n_shards
+        vals = {g: np.asarray(v, np.float64) for g, v in threshold.items()}
+        n_cls = max([v.shape[1] for v in vals.values() if v.ndim == 2],
+                    default=0)
         out = []
         for s in range(self.plan.n_shards):
-            thr = np.zeros(max(self._F_s[s], 1), np.float64)
+            shape = (max(self._F_s[s], 1),) + ((n_cls,) if n_cls else ())
+            thr = np.zeros(shape, np.float64)
             for gid in self._shard_gids[s]:
-                if gid in threshold:
+                if gid in vals:
                     _, c0 = self._group_slot[gid]
-                    v = np.asarray(threshold[gid], np.float64)
+                    v = vals[gid]
+                    if n_cls and v.ndim == 1:
+                        v = np.repeat(v[:, None], n_cls, axis=1)
                     thr[c0:c0 + v.shape[0]] = v
             out.append(thr)
         return out
@@ -435,17 +512,44 @@ class ShardedSuperlaunch:
         """Stage one step's compact tables into a device slot.  Two
         slots alternate (``parity``): the PREVIOUS step's tables stay
         referenced while its conv chain is still in flight, so staging
-        step t+1 can never free buffers step t is reading."""
+        step t+1 can never free buffers step t is reading.  The canvas
+        slots ride the same double-buffer discipline: the conv returns a
+        fresh canvas buffer each step (no donation — collect() may still
+        read the old one), so the in-flight step's heads stay alive."""
         slot = jax.device_put(
             (jnp.asarray(plan.cidx), jnp.asarray(plan.cnbr),
-             jnp.asarray(plan.upd)), self.sharding)
+             jnp.asarray(plan.upd), jnp.asarray(plan.sidx),
+             jnp.asarray(plan.cold_mask[:, None])), self.sharding)
         if not hasattr(self, "_table_slots"):
             self._table_slots: List = [None, None]
         self._table_slots[parity % 2] = slot
         return slot
 
-    def _put_adv(self, plan: _HostPlan):
-        return jax.device_put(jnp.asarray(plan.adv), self.sharding)
+    def _adv_canvas_mask(self, adv: np.ndarray) -> np.ndarray:
+        """(S, n_max) advance-row mask -> bool (S, F_max + 1, H + 2,
+        W + 2, 1) canvas mask over the advanced rows' haloed window
+        regions (host-built from the static tables; broadcasts over
+        channels)."""
+        t = self.det.cfg.tile
+        S = self.plan.n_shards
+        m = np.zeros((S, self.F_max + 1, self.canvas_h + 2,
+                      self.canvas_w + 2, 1), bool)
+        for s in range(S):
+            for cam, ty, tx in self._idx_np[s][adv[s, :self._n_s[s]]]:
+                m[s, cam, ty * t:ty * t + t + 2,
+                  tx * t:tx * t + t + 2, 0] = True
+        return m
+
+    def _advance_refs(self, cache: ShardedActivationCache, x,
+                      plan: _HostPlan) -> None:
+        """Advance the reference canvas + epoch table per the plan's
+        (S, n_max) advance mask."""
+        if not plan.adv.any():
+            return
+        mask = jax.device_put(
+            jnp.asarray(self._adv_canvas_mask(plan.adv)), self.sharding)
+        cache.ref_canvas = self._refadv_fn()(cache.ref_canvas, x, mask)
+        cache.epoch_np[plan.adv] = cache.steps
 
     # -- synchronous steps -------------------------------------------------
     def step_reuse(self, frames: Dict[int, List],
@@ -453,11 +557,13 @@ class ShardedSuperlaunch:
         """One sharded delta-gated fleet step, blocking at the end.
 
         Dispatch structure (counted once per step — SPMD: one launch
-        runs on every shard): 1 gate + the ≤3-dispatch conv chain on
-        changed steps; 1 gate + 1 scatter on all-static steps; nothing
-        on an all-empty fleet.  NOTE the sharded path gates on cold
-        shards too (SPMD uniformity — the single-device cold step skips
-        the gate instead); outputs stay bit-identical.  Returns
+        runs on every shard): 1 gate + the ≤3-dispatch conv chain
+        (entry, stack, changed-only canvas scatter) on changed steps;
+        the gate ALONE on all-static steps — the persistent canvas is
+        served as-is, zero conv/scatter launches, 0 bytes written;
+        nothing on an all-empty fleet.  NOTE the sharded path gates on
+        cold shards too (SPMD uniformity — the single-device cold step
+        skips the gate instead); outputs stay bit-identical.  Returns
         ({gid: per-camera head maps (numpy)}, ShardedReuseStats)."""
         if cache.plan is not self.plan:
             raise ValueError("cache was built for a different shard plan")
@@ -469,15 +575,16 @@ class ShardedSuperlaunch:
         self._init_cache_arrays(cache)
         x = self._ingest(frames)
         kops.record_dispatch("tile_delta_gate")
-        stats_f, windows = self._gate_fn()(x, cache.ref_win, self.idx_pad)
+        stats_f = self._gate_fn()(x, cache.ref_canvas, self.idx_pad)
         plan = self._host_plan(np.asarray(stats_f), cache, threshold)
         heads = self._dispatch_conv(x, plan, cache)
-        cache.ref_win = self._refadv_fn()(cache.ref_win, windows,
-                                          self._put_adv(plan))
+        self._advance_refs(cache, x, plan)
         if plan.stats.cold_shards:
             cache.cold_steps += 1
         cache.valid[:] = True
         cache.launched_tiles += plan.stats.launched
+        cache.canvas_bytes_last = plan.stats.canvas_bytes
+        cache.canvas_bytes_total += plan.stats.canvas_bytes
         heads_np = np.asarray(heads)
         return self._split_heads(heads_np, frames), plan.stats
 
@@ -498,8 +605,11 @@ class ShardedSuperlaunch:
             jnp.zeros((self.plan.n_shards, self.n_max, self.det.cfg.tile,
                        self.det.cfg.tile, self.det.cfg.channels[-1]),
                       jnp.float32), self.sharding)
-        _, heads = self._conv_fn(plan.k_max)(x, *slot, packed0,
-                                             self.idx_pad)
+        canvas0 = jax.device_put(
+            jnp.zeros((self.plan.n_shards, self.F_max + 1, self.canvas_h,
+                       self.canvas_w, self.det.head.shape[-1]),
+                      jnp.float32), self.sharding)
+        _, heads = self._conv_fn(plan.k_max)(x, *slot, packed0, canvas0)
         return self._split_heads(np.asarray(heads), frames)
 
     def _full_plan(self) -> _HostPlan:
@@ -510,32 +620,41 @@ class ShardedSuperlaunch:
         cidx[:, :, 0] = self.F_max
         cnbr = np.full((S, k_max, 8), -1, np.int32)
         upd = np.full((S, k_max), self.n_max, np.int32)
+        sidx = np.zeros((S, k_max, 3), np.int32)
+        sidx[:, :, 0] = self.F_max
         for s in range(S):
             n_s = self._n_s[s]
             cidx[s, :n_s] = self._idx_np[s]
             cnbr[s, :n_s] = self._nbr_np[s]
             upd[s, :n_s] = np.arange(n_s)
+            sidx[s, :n_s] = self._idx_np[s]
+        t = self.det.cfg.tile
+        tile_bytes = t * t * int(self.det.head.shape[-1]) * 4
         stats = ShardedReuseStats(self.n_total, self.n_total, self.n_total,
-                                  self.n_total, S * k_max, k_max, S)
-        return _HostPlan(k_max, cidx, cnbr, upd,
-                         np.zeros((S, self.n_max), bool), stats)
+                                  self.n_total, S * k_max, k_max, S,
+                                  canvas_bytes=self.n_total * tile_bytes)
+        return _HostPlan(k_max, cidx, cnbr, upd, sidx,
+                         np.zeros((S, self.n_max), bool),
+                         np.ones(S, bool), stats)
 
     def _dispatch_conv(self, x, plan: _HostPlan,
                        cache: ShardedActivationCache, parity: int = 0):
-        """Dispatch the conv chain (or the static scatter) for one
-        planned step; returns the heads future.  Counts one launch per
-        kernel — the SPMD program runs each once on every shard."""
+        """Dispatch the conv chain for one planned step; returns the
+        heads future (= the updated persistent canvas).  Counts one
+        launch per kernel — the SPMD program runs each once on every
+        shard.  ``k_max == 0`` (all-static) is a ZERO-dispatch path:
+        nothing is launched, no canvas byte is written, and the cached
+        canvas is served directly."""
         if plan.k_max == 0:
-            kops.record_dispatch("sbnet_scatter_fleet")
-            return self._static_fn()(cache.packed, self.idx_pad)
+            return cache.canvas
         kops.record_dispatch("roi_conv_entry")
         if self.det.num_conv_layers > 1:
             kops.record_dispatch("roi_conv_stack")
-        kops.record_dispatch("sbnet_scatter_fleet")
+        kops.record_dispatch("sbnet_scatter_changed")
         slot = self._put_tables(plan, parity)
-        cache.packed, heads = self._conv_fn(plan.k_max)(
-            x, *slot, cache.packed, self.idx_pad)
-        return heads
+        cache.packed, cache.canvas = self._conv_fn(plan.k_max)(
+            x, *slot, cache.packed, cache.canvas)
+        return cache.canvas
 
     # -- output plumbing ---------------------------------------------------
     def _split_heads(self, heads_np: np.ndarray, frames: Dict[int, List]
@@ -598,7 +717,7 @@ class AsyncShardedPipeline:
         # 1. gate for THIS step goes first on the device queue...
         with obs_trace.span("gate", step=step):
             kops.record_dispatch("tile_delta_gate")
-            stats_f, windows = rt._gate_fn()(x, cache.ref_win, rt.idx_pad)
+            stats_f = rt._gate_fn()(x, cache.ref_canvas, rt.idx_pad)
         # 2. ...then the conv chain of the STAGED previous step, so the
         # stats pull below waits only for the gate while the conv runs on
         h0 = time.perf_counter()
@@ -608,14 +727,15 @@ class AsyncShardedPipeline:
             stats_np = np.asarray(stats_f)        # blocks on the gate only
             # 3. host planning for THIS step — overlaps step t-1's conv
             plan = rt._host_plan(stats_np, cache, self.threshold)
-            cache.ref_win = rt._refadv_fn()(cache.ref_win, windows,
-                                            rt._put_adv(plan))
+            rt._advance_refs(cache, x, plan)
             hsp.set(overlapped=in_flight, k_max=plan.k_max,
                     computed=plan.stats.computed)
         if plan.stats.cold_shards:
             cache.cold_steps += 1
         cache.valid[:] = True
         cache.launched_tiles += plan.stats.launched
+        cache.canvas_bytes_last = plan.stats.canvas_bytes
+        cache.canvas_bytes_total += plan.stats.canvas_bytes
         host = time.perf_counter() - h0
         self.host_s += host
         if in_flight:

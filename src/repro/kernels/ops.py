@@ -33,12 +33,15 @@ from repro.kernels.roi_conv import (NEIGHBOR_OFFSETS, roi_conv as _roi_conv,
                                     roi_conv_packed as _roi_conv_packed,
                                     roi_conv_stack as _roi_conv_stack)
 from repro.kernels.sbnet import sbnet_gather as _gather, \
-    sbnet_scatter as _scatter, sbnet_scatter_fleet as _scatter_fleet
+    sbnet_scatter as _scatter, sbnet_scatter_changed as _scatter_changed, \
+    sbnet_scatter_fleet as _scatter_fleet
 from repro.kernels.tile_delta import (COEF_BITS, GATE_BODY_BYTES,
                                       GATE_WIN_BYTES, GATE_WIN_EXACT,
                                       RUN_BITS, STATS_WIDTH,
                                       tile_delta as _tile_delta,
                                       tile_delta_gate as _tile_delta_gate,
+                                      tile_delta_gate_canvas as
+                                      _tile_delta_gate_canvas,
                                       tile_delta_halo as _tile_delta_halo)
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
@@ -445,7 +448,11 @@ def roi_conv_entry(x: jax.Array, w: jax.Array, idx: jax.Array, th: int,
     entry layer, feeding ``roi_conv_stack``.  ``block`` > 1 blocks the
     tile walk (``choose_block`` sizes it against VMEM): ``block`` haloed
     windows gathered per grid step, one GEMM per tap per block,
-    bit-identical to the per-tile walk."""
+    bit-identical to the per-tile walk.  An empty compute set is NOT a
+    dispatch: zero tiles return an empty packed tensor with no launch
+    formed and no counter bump."""
+    if idx.shape[0] == 0:
+        return jnp.zeros((0, th, tw, w.shape[-1]), x.dtype)
     record_dispatch("roi_conv_entry")
     return _roi_conv_entry_jit(x, w, idx, th, tw, int(block), interpret)
 
@@ -482,10 +489,54 @@ def sbnet_scatter_fleet(packed: jax.Array, idx: jax.Array, base: jax.Array,
     frames in ONE launch; untouched regions keep ``base`` values.
     ``block`` > 1 blocks the tile walk: ``block`` packed tiles arrive per
     grid step as one contiguous load, bit-identical to the per-tile
-    walk."""
+    walk.  An empty tile set is NOT a dispatch: ``base`` is returned
+    untouched with no launch formed and no counter bump."""
+    if packed.shape[0] == 0:
+        return base
     record_dispatch("sbnet_scatter_fleet")
     return _sbnet_scatter_fleet_jit(packed, idx, base, int(block),
                                     interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _sbnet_scatter_changed_jit(packed, idx, base, block=1,
+                               interpret=INTERPRET):
+    return _scatter_changed(packed, idx, base, block=block,
+                            interpret=interpret)
+
+
+@functools.lru_cache(maxsize=1)
+def _sbnet_scatter_changed_donated_jit():
+    # donate_argnums touches the backend at trace time, so build lazily —
+    # and only off-CPU callers ask for it (CPU jit rejects donation with a
+    # warning, same constraint the serving engine's ring writer handles).
+    return jax.jit(_scatter_changed,
+                   static_argnames=("block", "interpret"),
+                   donate_argnums=(2,))
+
+
+def sbnet_scatter_changed(packed: jax.Array, idx: jax.Array,
+                          base: jax.Array, block: int = 1,
+                          interpret: bool = INTERPRET,
+                          donate: bool = False) -> jax.Array:
+    """Changed-only scatter into the PERSISTENT head-map canvas:
+    ``base`` is the previous step's device-resident canvas, ``packed`` /
+    ``idx`` carry ONLY this step's changed tiles, unchanged tiles pass
+    through untouched — O(changed) canvas bytes per step, bit-identical
+    to re-scattering the whole active set (``sbnet_scatter_fleet``)
+    composed with the passthrough.  An all-static step (zero changed
+    tiles) returns the canvas with NO launch and NO counter bump.
+    ``donate=True`` donates the canvas buffer to the launch (in-place
+    update, double-buffer-free) — caller must not reuse ``base`` after;
+    only ask for it off-CPU (see ``serving.engine.ring_donate_argnums``)."""
+    if packed.shape[0] == 0:
+        return base
+    record_dispatch("sbnet_scatter_changed")
+    if donate:
+        return _sbnet_scatter_changed_donated_jit()(
+            packed, idx, base, block=int(block), interpret=interpret)
+    return _sbnet_scatter_changed_jit(packed, idx, base, int(block),
+                                      interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("th", "tw", "qstep",
@@ -540,6 +591,37 @@ def tile_delta_gate(cur_p: jax.Array, ref_win: jax.Array, idx: jax.Array,
     return _tile_delta_gate_jit(cur_p, ref_win, idx, th, tw, float(qstep),
                                 int(coef_bits), int(run_bits),
                                 int(block), interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("th", "tw", "qstep",
+                                             "coef_bits", "run_bits",
+                                             "block", "interpret"))
+def _tile_delta_gate_canvas_jit(cur_p, ref_c, idx, th, tw, qstep,
+                                coef_bits, run_bits, block=1,
+                                interpret=INTERPRET):
+    return _tile_delta_gate_canvas(cur_p, ref_c, idx, th, tw, qstep,
+                                   coef_bits, run_bits, block=block,
+                                   interpret=interpret)
+
+
+def tile_delta_gate_canvas(cur_p: jax.Array, ref_c: jax.Array,
+                           idx: jax.Array, th: int, tw: int,
+                           qstep: float = 8.0, coef_bits: int = COEF_BITS,
+                           run_bits: int = RUN_BITS, block: int = 1,
+                           interpret: bool = INTERPRET) -> jax.Array:
+    """The reuse gate against a CANVAS-RESIDENT reference: same stats
+    rows as ``tile_delta_gate`` but the reference side is a second
+    (C, H+2, W+2, Cin) padded canvas addressed through the same tile
+    rows — no (n, th+2, tw+2) per-tile window duplication (~1.3x the
+    canvas bytes on overlap-heavy masks) and no windows output (reference
+    advancement writes canvas regions instead).  Counted under the same
+    ``tile_delta_gate`` dispatch name: it IS the gate, structurally —
+    per-step dispatch ceilings stay mode-independent."""
+    record_dispatch("tile_delta_gate")
+    return _tile_delta_gate_canvas_jit(cur_p, ref_c, idx, th, tw,
+                                       float(qstep), int(coef_bits),
+                                       int(run_bits), int(block),
+                                       interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("th", "tw"))
@@ -670,10 +752,11 @@ __all__ = ["mask_to_indices", "neighbor_table", "fleet_indices",
            "fleet_neighbor_table", "superlaunch_tables", "ShardPlan",
            "shard_plan", "record_dispatch", "dilate_changed",
            "reuse_sets", "compact_tables", "choose_block", "sbnet_gather",
-           "sbnet_scatter", "sbnet_scatter_fleet", "roi_conv",
-           "roi_conv_entry", "roi_conv_fleet", "roi_conv_packed",
-           "roi_conv_stack", "roi_conv_batched", "tile_delta",
-           "tile_delta_gate", "gather_windows", "tile_delta_halo",
+           "sbnet_scatter", "sbnet_scatter_fleet", "sbnet_scatter_changed",
+           "roi_conv", "roi_conv_entry", "roi_conv_fleet",
+           "roi_conv_packed", "roi_conv_stack", "roi_conv_batched",
+           "tile_delta", "tile_delta_gate", "tile_delta_gate_canvas",
+           "gather_windows", "tile_delta_halo",
            "GATE_BODY_BYTES",
            "GATE_WIN_BYTES", "GATE_WIN_EXACT", "STATS_WIDTH", "pack_tokens",
            "unpack_tokens", "roi_attention", "attention_visit_bound",

@@ -297,9 +297,15 @@ def roi_conv_entry(x: jax.Array, w: jax.Array, idx: jax.Array, th: int,
     coalesced gather DMAs, bit-identical to the per-tile walk (size it
     with ``ops.choose_block``).  The index list is padded up with
     repeats of its last row; the duplicate rows' outputs land past ``n``
-    and are sliced off."""
+    and are sliced off.
+
+    An EMPTY tile set short-circuits to a zero-row packed tensor with no
+    pallas_call at all — the per-tile walk used to form a grid=(0,)
+    launch (and the blocked walk a padded >= 1-block launch) here."""
     n = idx.shape[0]
-    if block <= 1 or n == 0:
+    if n == 0:
+        return jnp.zeros((0, th, tw, w.shape[-1]), x.dtype)
+    if block <= 1:
         return _fleet_conv_call(x, w, idx, th, tw, fuse_relu=True,
                                 interpret=interpret)
     C, H, W, Cin = x.shape

@@ -120,9 +120,15 @@ def sbnet_scatter_fleet(packed: jax.Array, idx: jax.Array, base: jax.Array,
     stores back-to-back — same per-tile write pattern, 1/block the grid
     steps.  Both index list and packed tensor are padded with repeats of
     their last row, so padding stores are idempotent rewrites of the last
-    real tile (bit-identical to the per-tile walk by construction)."""
+    real tile (bit-identical to the per-tile walk by construction).
+
+    An EMPTY tile set is a no-op: the base is returned untouched and no
+    pallas_call is formed at all (the per-tile walk used to build a
+    grid=(0,) launch here)."""
     n, th, tw, C = packed.shape
-    if block > 1 and n > 0:
+    if n == 0:
+        return base
+    if block > 1:
         nb, tb, n_pad = balanced_split(n, block)
         idx = pad_repeat_last(idx, n_pad)
         packed = pad_repeat_last(packed, n_pad)
@@ -170,3 +176,22 @@ def sbnet_scatter_fleet(packed: jax.Array, idx: jax.Array, base: jax.Array,
         input_output_aliases={2: 0},   # args: (idx, packed, base) -> out
         interpret=interpret,
     )(idx, packed, base)
+
+
+def sbnet_scatter_changed(packed: jax.Array, idx: jax.Array,
+                          base: jax.Array, *, block: int = 1,
+                          interpret: bool = True) -> jax.Array:
+    """Changed-only scatter into a PERSISTENT canvas: O(changed) bytes.
+
+    Same store machinery as ``sbnet_scatter_fleet`` (blocked walk,
+    scalar-prefetched (cam, ty, tx) rows, aliased/donated base), but the
+    contract is different: ``base`` is the PREVIOUS step's device-resident
+    head-map canvas and ``packed``/``idx`` carry ONLY the tiles whose
+    content changed this step.  Unchanged tiles pass through untouched —
+    their canvas bytes were written by the step that last computed them —
+    so the composite result is bit-identical to re-scattering the whole
+    active set while writing ``n_changed`` tiles instead of ``n_active``.
+    An empty changed set returns the canvas with zero launches (the
+    all-static step writes 0 canvas bytes)."""
+    return sbnet_scatter_fleet(packed, idx, base, block=block,
+                               interpret=interpret)

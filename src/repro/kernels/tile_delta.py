@@ -248,6 +248,75 @@ def tile_delta_gate(cur_p: jax.Array, ref_win: jax.Array, idx: jax.Array,
     return stats[:n], wins[:n]
 
 
+def _tile_delta_gate_canvas_kernel(idx_ref, cur_ref, refc_ref, o_ref, *,
+                                   th: int, tw: int, tb: int, qstep: float,
+                                   coef_bits: int, run_bits: int):
+    b = pl.program_id(0)
+    curs, prevs = [], []
+    for j in range(tb):
+        cam = idx_ref[b * tb + j, 0]
+        ty = idx_ref[b * tb + j, 1]
+        tx = idx_ref[b * tb + j, 2]
+        sel = (pl.ds(cam, 1), pl.ds(ty * th, th + 2),
+               pl.ds(tx * tw, tw + 2), slice(None))
+        curs.append(pl.load(cur_ref, sel)[0])
+        prevs.append(pl.load(refc_ref, sel)[0])
+    cur = jnp.stack(curs)                    # (tb, th+2, tw+2, C)
+    prev = jnp.stack(prevs)                  # reference windows, canvas
+    body = _batched_stats(cur[:, 1:1 + th, 1:1 + tw],
+                          prev[:, 1:1 + th, 1:1 + tw], qstep, coef_bits,
+                          run_bits)
+    win_bytes, _, _, _ = _batched_stats(cur, prev, qstep, coef_bits,
+                                        run_bits)
+    exact = jnp.sum((cur != prev).astype(jnp.int32), axis=(1, 2, 3))
+    out = jnp.zeros((tb, STATS_WIDTH), jnp.int32)
+    out = out.at[:, 0].set(body[0]).at[:, 1].set(body[1]) \
+             .at[:, 2].set(body[2]).at[:, 3].set(body[3]) \
+             .at[:, GATE_WIN_EXACT].set(exact) \
+             .at[:, GATE_WIN_BYTES].set(win_bytes)
+    o_ref[...] = out
+
+
+def tile_delta_gate_canvas(cur_p: jax.Array, ref_c: jax.Array,
+                           idx: jax.Array, th: int, tw: int,
+                           qstep: float = 8.0, coef_bits: int = COEF_BITS,
+                           run_bits: int = RUN_BITS, *, block: int = 1,
+                           interpret: bool = True) -> jax.Array:
+    """The gate with CANVAS-RESIDENT references: same pricing math as
+    ``tile_delta_gate`` (identical stats columns, bit-exact when both
+    views hold the same reference content), but the comparison side is a
+    (C, H+2, W+2, Cin) reference CANVAS addressed through the same
+    (cam, ty, tx) rows as the current frame — no packed (n, th+2, tw+2)
+    duplication (~1.3x the canvas bytes) and no windows output at all:
+    reference advancement writes window regions of the canvas from the
+    current frame, so the kernel's write side is stats rows only.
+    ``cur_p`` and ``ref_c`` have the SAME padded shape; per-tile refresh
+    epochs are tracked host-side (serving/detector)."""
+    n = idx.shape[0]
+    nb, tb, n_pad = balanced_split(n, block)
+    idx = pad_repeat_last(idx, n_pad)
+    kernel = functools.partial(_tile_delta_gate_canvas_kernel, th=th,
+                               tw=tw, tb=tb, qstep=qstep,
+                               coef_bits=coef_bits, run_bits=run_bits)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_pad // tb,),
+        in_specs=[
+            pl.BlockSpec(memory_space=_MEMSPACE.ANY),
+            pl.BlockSpec(memory_space=_MEMSPACE.ANY),
+        ],
+        out_specs=pl.BlockSpec((tb, STATS_WIDTH),
+                               lambda b, idx_ref: (b, 0)),
+    )
+    stats = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_pad, STATS_WIDTH), jnp.int32),
+        interpret=interpret,
+    )(idx, cur_p, ref_c)
+    return stats[:n]
+
+
 # ---------------------------------------------------------------------------
 # halo-strip delta pricing (the boundary ring, not the tile body)
 # ---------------------------------------------------------------------------

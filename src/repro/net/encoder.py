@@ -231,7 +231,8 @@ def static_fraction_from_stats(stats, n_channels: int, tile: int,
 
 def gate_threshold_schedule(quality, tile: int, n_channels: int,
                             base_threshold: float = 0.0,
-                            gain: float = 0.05) -> np.ndarray:
+                            gain: float = 0.05,
+                            halo_gain: Optional[float] = None) -> np.ndarray:
     """Per-camera ``tile_delta_gate`` thresholds from the rate
     controller's quality trace — the server-side half of shedding: a
     camera the uplink is ALREADY degrading (quality < 1) gets a raised
@@ -246,13 +247,28 @@ def gate_threshold_schedule(quality, tile: int, n_channels: int,
     camera (quality 1.0) keeps ``base_threshold`` — at the default 0.0
     that is the EXACT gate, so the schedule can only relax cameras the
     controller already sheds; the reuse bench asserts the resulting
-    head-map accuracy floor."""
+    head-map accuracy floor.
+
+    halo_gain: opt-in per-tile-class schedule — when given, returns
+    (C, N_TILE_CLASSES) with column 0 (BODY: interior tiles, all eight
+    neighbors inside the RoI) using ``gain`` and column 1 (HALO:
+    boundary tiles) using ``halo_gain``.  Halo tiles sit where the
+    cross-camera RoI masks meet; a ``halo_gain`` BELOW ``gain`` keeps
+    boundary content fresher than interiors under the same shedding
+    (the usual choice — detection targets cross tile borders), a higher
+    one sheds borders first.  The gate consumes either shape unchanged
+    (``gate_changed_rows`` / ``ref_advance_rows`` broadcast 2-D
+    thresholds per tile class)."""
     from repro.kernels import ops as kops
     q = np.asarray(quality, np.float64)
     if q.ndim == 2:
         q = q.min(axis=1)
     dense_bytes = tile * tile * n_channels * kops.COEF_BITS / 8.0
-    return base_threshold + gain * (1.0 - q) * dense_bytes
+    shed = (1.0 - q) * dense_bytes
+    if halo_gain is None:
+        return base_threshold + gain * shed
+    return base_threshold + np.stack([gain * shed, halo_gain * shed],
+                                     axis=1)
 
 
 def tile_static_fraction(cur, prev, grid: np.ndarray, tile: int,

@@ -32,6 +32,7 @@ from repro.obs import state
 # counting zero forever.
 KERNEL_NAMES = frozenset({
     "sbnet_gather", "sbnet_scatter", "sbnet_scatter_fleet",
+    "sbnet_scatter_changed",
     "roi_conv", "roi_conv_packed", "roi_conv_fleet",
     "roi_conv_entry", "roi_conv_stack",
     "tile_delta", "tile_delta_gate", "tile_delta_halo",
@@ -272,6 +273,14 @@ HEARTBEAT_EVENTS = REGISTRY.counter(
     "heartbeat_events", "Transport heartbeat: dead / retry / restored",
     ("event",))
 
+CANVAS_BYTES = REGISTRY.gauge(
+    "canvas_bytes_written", "Bytes scattered into the persistent head-map "
+    "canvas, latest step (0 on an all-static step)")
+
+CANVAS_BYTES_TOTAL = REGISTRY.counter(
+    "canvas_bytes_total", "Cumulative bytes scattered into the persistent "
+    "head-map canvas across steps")
+
 UNCOVERED_FRACTION = REGISTRY.gauge(
     "uncovered_fraction", "Degraded-mode coverage hole: fraction of "
     "ground-truth appearances no surviving camera's mask covers, "
@@ -313,6 +322,10 @@ def observe_fleet_step(stats, wall_s: float, path: str) -> None:
         CACHE_EVENTS.inc(1, event="cold_step")
     else:
         CACHE_EVENTS.inc(total - int(stats.computed), event="hit")
+    canvas_bytes = getattr(stats, "canvas_bytes", None)
+    if canvas_bytes is not None:
+        CANVAS_BYTES.set(float(canvas_bytes))
+        CANVAS_BYTES_TOTAL.inc(float(canvas_bytes))
     per_shard = getattr(stats, "per_shard_computed", None)
     if per_shard:
         mean = sum(per_shard) / len(per_shard)

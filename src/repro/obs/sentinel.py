@@ -109,6 +109,18 @@ _ABSOLUTE_METRIC_RULES.update({
                                           abs_floor=0.05,
                                           absolute_only=True,
                                           lower_is_better=False),
+    # persistent-canvas contract: an all-static step writes ZERO canvas
+    # bytes — any sustained nonzero value means a regression re-enabled
+    # full-canvas (or any) writes on static steps, so the floor is half
+    # a byte; and the mean per-step canvas traffic may not quietly grow
+    # past a sustained 64 KiB/step (static tiles being rewritten) — a
+    # byte count with two-sided run-to-run jitter, so absolute-only
+    # with MEDIAN per-SHA reduction
+    "static_canvas_bytes": MetricRule(rel_threshold=0.0, abs_floor=0.5,
+                                      absolute_only=True),
+    "canvas_bytes_per_step": MetricRule(rel_threshold=0.0,
+                                        abs_floor=65536.0,
+                                        absolute_only=True),
 })
 
 
@@ -230,6 +242,9 @@ def _record_metrics(rec: Dict) -> Dict[str, float]:
     for k, v in rec.get("chaos", {}).items():
         if isinstance(v, (int, float)):
             out[f"chaos.{k}"] = float(v)
+    for k, v in rec.get("canvas", {}).items():
+        if isinstance(v, (int, float)):
+            out[f"canvas.{k}"] = float(v)
     return out
 
 
@@ -345,7 +360,12 @@ def self_test(history_path: Optional[str] = None, window: int = 5
       measurement band (0.04 absolute worst case) is NOT flagged,
     * an injected 2x MTTR (``chaos.mttr_steps`` 2 -> 4 while every wall
       holds) is flagged BY NAME — the chaos recovery bound proves
-      itself before gating.
+      itself before gating,
+    * an injected static-step canvas write (``canvas.static_canvas_bytes``
+      0 -> one full changed-step's bytes, i.e. a regression re-enabling
+      canvas writes on all-static steps, while every wall holds) is
+      flagged BY NAME — the zero-copy contract proves itself before
+      gating.
     """
     walls: Dict[str, float] = {}
     if history_path:
@@ -373,6 +393,12 @@ def self_test(history_path: Optional[str] = None, window: int = 5
                   for i in range(3)]
     mttr = chaos_base + [_mk_record("head-mttr", dict(
         chaos_walls, **{"chaos.mttr_steps": 4.0}))]
+    canvas_walls = dict(walls, **{"canvas.canvas_bytes_per_step": 1.05e5,
+                                  "canvas.static_canvas_bytes": 0.0})
+    canvas_base = [_mk_record(f"vbase{i:04d}", canvas_walls)
+                   for i in range(3)]
+    canvas = canvas_base + [_mk_record("head-canvas", dict(
+        canvas_walls, **{"canvas.static_canvas_bytes": 1.05e5}))]
 
     def run_case(recs: List[Dict]) -> SentinelReport:
         with tempfile.NamedTemporaryFile("w", suffix=".jsonl",
@@ -389,6 +415,7 @@ def self_test(history_path: Optional[str] = None, window: int = 5
     rep_slow = run_case(slow)
     rep_noisy = run_case(noisy)
     rep_mttr = run_case(mttr)
+    rep_canvas = run_case(canvas)
 
     assert not rep_clean.has_regression, \
         f"sentinel self-test: clean history flagged\n{rep_clean.render()}"
@@ -404,8 +431,14 @@ def self_test(history_path: Optional[str] = None, window: int = 5
     assert mttr_flagged == ["chaos.mttr_steps"], \
         f"sentinel self-test: 2x MTTR must be flagged by name (and " \
         f"nothing else), got {mttr_flagged}\n{rep_mttr.render()}"
+    canvas_flagged = [f.metric for f in rep_canvas.regressions]
+    assert canvas_flagged == ["canvas.static_canvas_bytes"], \
+        f"sentinel self-test: static-step canvas writes must be flagged " \
+        f"by name (and nothing else), got {canvas_flagged}\n" \
+        f"{rep_canvas.render()}"
     return {"clean_pass": not rep_clean.has_regression,
             "slowdown_flagged": rep_slow.has_regression,
             "noise_band_pass": not rep_noisy.has_regression,
             "mttr_flagged": rep_mttr.has_regression,
+            "static_canvas_flagged": rep_canvas.has_regression,
             "flagged_metrics": [f.metric for f in rep_slow.regressions]}

@@ -34,6 +34,9 @@ class StepReport:
     launched_tiles: int         # padded launch rows (honest GEMM work)
     cold: bool
     dispatches: Dict[str, int] = field(default_factory=dict)
+    # bytes scattered into the persistent head canvas (0 on all-static
+    # steps — the zero-copy contract the sentinel watches)
+    canvas_bytes: int = 0
 
     @property
     def changed_fraction(self) -> float:
@@ -55,7 +58,8 @@ class StepReport:
                    changed_tiles=int(stats.raw_changed),
                    computed_tiles=int(stats.computed),
                    launched_tiles=int(stats.launched),
-                   cold=cold, dispatches=dict(counts))
+                   cold=cold, dispatches=dict(counts),
+                   canvas_bytes=int(getattr(stats, "canvas_bytes", 0)))
 
     def to_dict(self) -> Dict:
         return {"step": self.step, "wall_s": self.wall_s,
@@ -65,7 +69,8 @@ class StepReport:
                 "launched_tiles": self.launched_tiles,
                 "changed_fraction": self.changed_fraction,
                 "compute_fraction": self.compute_fraction,
-                "cold": self.cold, "dispatches": self.dispatches}
+                "cold": self.cold, "dispatches": self.dispatches,
+                "canvas_bytes": self.canvas_bytes}
 
 
 @dataclass
@@ -96,6 +101,12 @@ class FleetSLOReport:
     compute_tile_fraction: float = 0.0
     step_wall_p50_s: float = 0.0
     step_wall_p99_s: float = 0.0
+    # persistent-canvas traffic: mean bytes scattered per step, and the
+    # bytes-written-vs-changed-fraction ratio (bytes per changed tile —
+    # flat when writes scale with change, inflated when static tiles
+    # are being rewritten)
+    canvas_bytes_per_step: float = 0.0
+    canvas_bytes_per_changed_tile: float = 0.0
     cache: Dict[str, float] = field(default_factory=dict)
     # degraded-mode coverage (fault failover): fraction of ground-truth
     # appearances NO surviving camera's mask covers — 0.0 in healthy
@@ -143,6 +154,10 @@ class FleetSLOReport:
             walls = np.asarray([s.wall_s for s in rep.steps])
             rep.step_wall_p50_s = float(np.percentile(walls, 50))
             rep.step_wall_p99_s = float(np.percentile(walls, 99))
+            cbytes = sum(s.canvas_bytes for s in rep.steps)
+            rep.canvas_bytes_per_step = cbytes / len(rep.steps)
+            changed = sum(s.changed_tiles for s in rep.steps)
+            rep.canvas_bytes_per_changed_tile = cbytes / max(changed, 1)
         if len(uncovered_frac):
             uf = np.asarray(uncovered_frac, np.float64)
             rep.uncovered_frac_mean = float(uf.mean())
@@ -166,6 +181,7 @@ class FleetSLOReport:
             "shed_body_bytes", "quality_min", "accuracy_floor",
             "accuracy_mean", "changed_tile_fraction",
             "compute_tile_fraction", "step_wall_p50_s", "step_wall_p99_s",
+            "canvas_bytes_per_step", "canvas_bytes_per_changed_tile",
             "cache", "uncovered_frac_mean", "uncovered_frac_p99")}
         d["n_steps"] = len(self.steps)
         d["steps"] = [s.to_dict() for s in self.steps]

@@ -68,7 +68,7 @@ class ReuseStats:
     computed: int                  # compact-set tiles (changed_out + the
     #                                zero-halo margin) — the semantic
     #                                quantity the dilation bound describes;
-    #                                0 = all-static, scatter-only step
+    #                                0 = all-static, gate-only step
     launched: int                  # tiles the launch ACTUALLY convolved:
     #                                ``computed`` padded to its power-of-
     #                                two shape bucket (inert rows are real
@@ -87,86 +87,163 @@ class ReuseStats:
     # activations were built from; content oscillating back to that
     # reference prices low even if it moved in between)
     gate_stats: Optional[np.ndarray] = None
+    # bytes scattered into the persistent head-map canvas this step:
+    # n_written_tiles * th * tw * head_ch * itemsize.  0 on an all-static
+    # step (no scatter launch at all); the full active set on a cold
+    # step.  Padding rewrites of the last real tile are NOT counted —
+    # they land on already-written bytes.
+    canvas_bytes: int = 0
 
 
-def gate_changed_rows(stats, threshold, cam_of_row) -> np.ndarray:
+TILE_CLASS_BODY = 0      # interior tile: full 8-neighbor ring active
+TILE_CLASS_HALO = 1      # boundary tile: >= 1 neighbor missing (zero halo)
+N_TILE_CLASSES = 2
+
+
+def tile_class_rows(nbr_np) -> np.ndarray:
+    """Static per-tile class vector from the fleet neighbor table:
+    TILE_CLASS_HALO for tiles with any missing (inactive or off-frame)
+    neighbor — the rows whose entry windows carry synthesized zero halo
+    and sit on the RoI boundary — else TILE_CLASS_BODY.  Feeds the
+    per-tile-class gate-threshold schedule
+    (``net.encoder.gate_threshold_schedule(halo_gain=...)``)."""
+    nbr = np.asarray(nbr_np)
+    if nbr.size == 0:
+        return np.zeros((nbr.shape[0],), np.int64)
+    return np.where((nbr < 0).any(axis=1), TILE_CLASS_HALO,
+                    TILE_CLASS_BODY).astype(np.int64)
+
+
+def _per_row_threshold(thr: np.ndarray, cam_of_row,
+                       class_of_row) -> np.ndarray:
+    """(C,) per-camera or (C, n_classes) per-camera-per-tile-class
+    threshold table -> (n,) per-row thresholds."""
+    if thr.ndim == 1:
+        return thr[np.asarray(cam_of_row)]
+    if class_of_row is None:
+        raise ValueError(
+            "per-tile-class thresholds (2-D) need class_of_row "
+            "(see tile_class_rows)")
+    return thr[np.asarray(cam_of_row), np.asarray(class_of_row)]
+
+
+def gate_changed_rows(stats, threshold, cam_of_row,
+                      class_of_row=None) -> np.ndarray:
     """Host-side gate thresholding shared by the single-device and the
     sharded reuse paths: (n, STATS_WIDTH) ``tile_delta_gate`` stats rows
     -> (n,) bool raw-changed mask.
 
-    ``threshold`` is a scalar, or a PER-CAMERA array indexed by
-    ``cam_of_row`` (the idx table's camera column) — the rate
-    controller's per-camera gate-threshold schedule
-    (``net.encoder.gate_threshold_schedule``) raises thresholds on
-    cameras it is already shedding without touching the rest.  A
-    threshold <= 0 selects the exact bitwise change count for that
-    camera's rows (bit-identical reuse); a positive threshold gates on
-    the quantized window byte estimate."""
+    ``threshold`` is a scalar, a PER-CAMERA (C,) array indexed by
+    ``cam_of_row`` (the idx table's camera column), or a PER-CAMERA,
+    PER-TILE-CLASS (C, n_classes) array additionally indexed by
+    ``class_of_row`` (``tile_class_rows``: body vs halo/boundary rows)
+    — the rate controller's gate-threshold schedule raises thresholds
+    on cameras it is already shedding, and the tile-class axis lets it
+    hold boundary tiles (whose zero-halo windows price noisier) to a
+    different bar than interiors.  A threshold <= 0 selects the exact
+    bitwise change count for those rows (bit-identical reuse); a
+    positive threshold gates on the quantized window byte estimate."""
     s = np.asarray(stats)
     thr = np.asarray(threshold, np.float64)
     if thr.ndim == 0:
         if float(thr) <= 0:
             return s[:, kops.GATE_WIN_EXACT] > 0
         return s[:, kops.GATE_WIN_BYTES] > float(thr)
-    per_row = thr[np.asarray(cam_of_row)]
+    per_row = _per_row_threshold(thr, cam_of_row, class_of_row)
     return np.where(per_row <= 0, s[:, kops.GATE_WIN_EXACT] > 0,
                     s[:, kops.GATE_WIN_BYTES] > per_row)
 
 
-def ref_advance_rows(threshold, cam_of_row, changed) -> Optional[np.ndarray]:
-    """Which reference-window rows advance to the current content this
-    step: ``None`` = every row (the scalar threshold <= 0 fast path — one
+def ref_advance_rows(threshold, cam_of_row, changed,
+                     class_of_row=None) -> Optional[np.ndarray]:
+    """Which reference rows advance to the current content this step:
+    ``None`` = every row (the scalar threshold <= 0 fast path — one
     wholesale assignment, previous-frame semantics), else a (n,) bool
-    mask — exact-gated cameras' rows always advance, lossy-gated cameras
-    advance only refreshed rows so sub-threshold drift accumulates
-    against each tile's own reference (see PackedActivationCache)."""
+    mask — exact-gated rows always advance, lossy-gated rows advance
+    only when refreshed so sub-threshold drift accumulates against each
+    tile's own reference (see PackedActivationCache).  With a
+    (C, n_classes) threshold table the exact/lossy split is per
+    (camera, tile-class) row, mirroring ``gate_changed_rows``."""
     thr = np.asarray(threshold, np.float64)
     if thr.ndim == 0:
         return None if float(thr) <= 0 else np.asarray(changed, bool)
-    return (thr[np.asarray(cam_of_row)] <= 0) | np.asarray(changed, bool)
+    per_row = _per_row_threshold(thr, cam_of_row, class_of_row)
+    return (per_row <= 0) | np.asarray(changed, bool)
 
 
 class PackedActivationCache:
     """Per-fleet persistent packed-activation cache for temporal reuse.
 
     Holds the final conv layer's packed (n, th, tw, C_last) activations
-    for EVERY active tile of the fleet, plus PACKED per-tile reference
-    windows (``ref_win``, (n, th+2, tw+2, 3)) the delta gate compares
-    against.  References are packed rows, not a canvas, so each tile's
-    reference is exactly its haloed window content as of ITS last
-    refresh — one tile's advance can never alias a neighbor's reference
-    through the window overlap.  At threshold 0 every row advances each
-    step (equivalent to previous-frame comparison: unchanged windows are
-    bitwise equal to their reference); under a lossy threshold only
-    refreshed tiles' rows advance, so each tile's sub-threshold drift
-    ACCUMULATES against its own reference and trips the gate once it
-    crosses the threshold instead of creeping into the cache
-    unboundedly.  Content-keyed on the fleet's grid digests and canvas
-    shape, so any mask change — a drift re-solve, a shrink adoption, a
-    different camera set — misses the key and forces a full recompute;
+    for EVERY active tile of the fleet, the persistent HEAD-MAP CANVAS
+    (``canvas``, (C, H, W, A) head-space, device-resident across steps
+    — warm steps scatter only this step's changed tiles into it, an
+    all-static step writes 0 canvas bytes with no scatter launch), and
+    the delta gate's reference content in one of two modes:
+
+    * ``ref_mode="canvas"`` (default): a second padded canvas
+      (``ref_canvas``, (C, H+2, W+2, 3), same shape as the stacked
+      frames the gate reads) holding each tile's window content as of
+      its last refresh, plus an (n,) per-tile refresh-EPOCH vector
+      advanced by ``ref_advance_rows`` — no per-tile window duplication
+      (packed windows store every overlap rim twice, ~1.3x the canvas
+      bytes on halo-heavy masks).  Reference advancement writes the
+      advanced rows' FULL haloed window regions from the current frame,
+      so overlap writes between simultaneously-advanced neighbors carry
+      identical content; at threshold <= 0 the wholesale assignment is
+      a free alias of the current padded frame (previous-frame
+      semantics, bit-identical to the packed mode by construction).
+    * ``ref_mode="packed"``: the legacy PACKED per-tile windows
+      (``ref_win``, (n, th+2, tw+2, 3)) — each tile's reference is
+      private, so one tile's advance can never alias a neighbor's
+      reference through the window overlap.  Kept as the semantics
+      oracle the canvas mode is asserted bit-exact against at every
+      threshold (tests/test_canvas.py).
+
+    Under a lossy threshold only refreshed rows advance in either mode,
+    so each tile's sub-threshold drift ACCUMULATES against its own
+    reference and trips the gate once it crosses the threshold instead
+    of creeping into the cache unboundedly.  Content-keyed on the
+    fleet's grid digests and canvas shape, so any mask change — a drift
+    re-solve, a shrink adoption, a different camera set — misses the
+    key and forces a full recompute (cold scatter rebuilds the canvas
+    from zeros: stale canvas content can never leak across a re-solve);
     ``invalidate`` is the explicit hook ``fleet/drift.DriftAdapter``
     mask listeners call for the same effect (belt and braces: the
     digest key alone already invalidates)."""
 
-    def __init__(self):
+    def __init__(self, ref_mode: str = "canvas"):
+        if ref_mode not in ("canvas", "packed"):
+            raise ValueError(f"unknown ref_mode {ref_mode!r}")
+        self.ref_mode = ref_mode
         self.key: Optional[tuple] = None
         self.packed: Optional[jax.Array] = None   # (n, th, tw, C_last)
+        self.canvas: Optional[jax.Array] = None   # (C, H, W, A) head maps
         self.ref_win: Optional[jax.Array] = None  # (n, th+2, tw+2, 3)
+        self.ref_canvas: Optional[jax.Array] = None  # (C, H+2, W+2, 3)
+        self.epoch_np: Optional[np.ndarray] = None   # (n,) last refresh
         self.idx_np: Optional[np.ndarray] = None  # (n, 3) static tables
         self.nbr_np: Optional[np.ndarray] = None  # (n, 8)
+        self.cls_np: Optional[np.ndarray] = None  # (n,) tile_class_rows
         self.invalidations = 0
         self.steps = 0
         self.cold_steps = 0
         self.launched_tiles = 0
         self.total_tiles = 0
+        self.canvas_bytes_last = 0
+        self.canvas_bytes_total = 0
 
     def invalidate(self) -> None:
         """Drop all cached state; the next reuse step recomputes fully."""
         self.key = None
         self.packed = None
+        self.canvas = None
         self.ref_win = None
+        self.ref_canvas = None
+        self.epoch_np = None
         self.idx_np = None
         self.nbr_np = None
+        self.cls_np = None
         self.invalidations += 1
 
     @property
@@ -199,6 +276,11 @@ class ShardedActivationCache:
         self.valid = np.zeros(plan.n_shards, bool)
         self.packed = None      # (S, n_max, th, tw, C_last) mesh-sharded
         self.ref_win = None     # (S, n_max, th+2, tw+2, 3) mesh-sharded
+        self.canvas = None      # (S, F_max+1, H, W, A) persistent heads
+        self.ref_canvas = None  # (S, F_max+1, H+2, W+2, 3) references
+        self.epoch_np = None    # (S, n_max) per-tile last-refresh step
+        self.canvas_bytes_last = 0
+        self.canvas_bytes_total = 0
         self.invalidations = 0
         self.shard_invalidations = np.zeros(plan.n_shards, np.int64)
         self.steps = 0
@@ -227,6 +309,9 @@ class ShardedActivationCache:
         self.valid[:] = False
         self.packed = None
         self.ref_win = None
+        self.canvas = None
+        self.ref_canvas = None
+        self.epoch_np = None
         self.invalidations += 1
 
     @property
@@ -234,6 +319,60 @@ class ShardedActivationCache:
         """Lifetime convolved-tile fraction vs full recompute (padding
         rows included — they are real launched GEMM work)."""
         return self.launched_tiles / max(self.total_tiles, 1)
+
+
+@jax.jit
+def _head_rows(packed: jax.Array, head: jax.Array) -> jax.Array:
+    """Apply the 1x1 head to packed tiles PRE-scatter: (n, th, tw, C) @
+    (C, A) -> (n, th, tw, A).  The head is a per-pixel dot product, so
+    head-then-scatter is bit-identical to scatter-then-head — which is
+    what lets the persistent canvas hold HEAD-space values and a warm
+    step write only the changed tiles' head rows (pure jnp, not a
+    counted kernel dispatch, like ``ops.gather_windows``)."""
+    n, th, tw, c = packed.shape
+    return (packed.reshape(n * th * tw, c) @ head).reshape(
+        n, th, tw, head.shape[-1])
+
+
+def _window_region_mask(idx_rows, t: int, shape) -> np.ndarray:
+    """(m, 3) advanced (cam, ty, tx) rows -> bool (C, H+2, W+2, 1) mask
+    over their haloed window regions on the padded reference canvas
+    (broadcasts over channels).  Host-built from the static tables —
+    overlapping window writes are safe because every advanced region is
+    filled from the SAME current frame."""
+    m = np.zeros(tuple(shape[:3]) + (1,), bool)
+    for cam, ty, tx in np.asarray(idx_rows):
+        m[cam, ty * t:ty * t + t + 2, tx * t:tx * t + t + 2, 0] = True
+    return m
+
+
+def _advance_refs(cache: "PackedActivationCache", xp: jax.Array,
+                  adv: Optional[np.ndarray], windows: Optional[jax.Array],
+                  t: int) -> None:
+    """Advance the gate references per ``ref_advance_rows``'s verdict and
+    stamp the per-tile refresh epochs.  ``adv is None`` = every row: in
+    canvas mode that is a FREE alias of the current padded frame (the
+    threshold <= 0 previous-frame fast path); a partial advance writes
+    the advanced rows' full window regions via one masked select."""
+    step = cache.steps
+    if cache.ref_mode == "packed":
+        if adv is None:
+            cache.ref_win = windows
+        elif adv.any():
+            rows = jnp.asarray(np.nonzero(adv)[0])
+            cache.ref_win = cache.ref_win.at[rows].set(windows[rows])
+    else:
+        if adv is None:
+            cache.ref_canvas = xp
+        elif adv.any():
+            mask = _window_region_mask(cache.idx_np[adv], t,
+                                       cache.ref_canvas.shape)
+            cache.ref_canvas = jnp.where(jnp.asarray(mask), xp,
+                                         cache.ref_canvas)
+    if adv is None:
+        cache.epoch_np[:] = step
+    elif adv.any():
+        cache.epoch_np[adv] = step
 
 
 class RoIDetector:
@@ -286,6 +425,21 @@ class RoIDetector:
         # stats make one grid step per block a measured win even
         # interpreted.
         self.chain_block = 1 if kops.INTERPRET else self.block
+        # whether the persistent head canvas is donated to the changed-
+        # only scatter (resolved lazily from the serving engine's shared
+        # ring-donation idiom: in-place off-CPU, copy on CPU)
+        self._donate_canvas_flag: Optional[bool] = None
+
+    def _donate_canvas(self) -> bool:
+        """Donate the head-canvas buffer to ``sbnet_scatter_changed``?
+        Same rule as ``ServingEngine``'s group-cache ring
+        (``engine.ring_donate_argnums``): donate off-CPU so the warm-step
+        canvas update is in-place (O(changed) traffic), never on CPU
+        (donation is ignored there and tests read pre-step canvases)."""
+        if self._donate_canvas_flag is None:
+            from repro.serving.engine import ring_donate_argnums
+            self._donate_canvas_flag = bool(ring_donate_argnums(0))
+        return self._donate_canvas_flag
 
     # -- dense path ----------------------------------------------------------
     def dense_forward(self, x: jax.Array) -> jax.Array:
@@ -501,12 +655,16 @@ class RoIDetector:
         changed-OUTPUT set, once more per layer into the compute margin
         (``ops.reuse_sets``), compacted into the superlaunch tables
         (``ops.compact_tables``) and run through the blocked entry +
-        stack chain; unchanged tiles serve their final activations from
-        ``cache``, and one blocked ``sbnet_scatter_fleet`` composites
-        cached + fresh tiles.  An all-static frame dispatches only the
-        gate and the composite scatter; a cache miss (first frame, mask
-        re-solve, canvas change) recomputes fully and seeds the cache.
-        """
+        stack chain; unchanged tiles keep their bytes in the PERSISTENT
+        head-map canvas (written by the step that last computed them),
+        and one ``sbnet_scatter_changed`` writes ONLY the refreshed
+        tiles' head rows into it — both sides of a step are O(changed)
+        bytes.  An all-static frame dispatches the gate ALONE: no conv,
+        no scatter, 0 canvas bytes written.  A cache miss (first frame,
+        mask re-solve, canvas change) recomputes fully and seeds the
+        cache + canvas from zeros.  ``threshold`` may also be a
+        (C, N_TILE_CLASSES) per-camera-per-tile-class table (body vs
+        halo rows, see ``tile_class_rows``)."""
         t = self.cfg.tile
         idx, nbr = self._fleet_tables(grids)
         n = int(idx.shape[0])
@@ -521,29 +679,55 @@ class RoIDetector:
         n_layers = self.num_conv_layers
         cache.steps += 1
         cache.total_tiles += n
+        A = self.head.shape[-1]
+        tile_bytes = t * t * A * jnp.dtype(self.head.dtype).itemsize
         cold = (cache.key != key or cache.packed is None
-                or cache.ref_win is None)
+                or cache.canvas is None
+                or (cache.ref_win is None if cache.ref_mode == "packed"
+                    else cache.ref_canvas is None))
         if cold:
             # miss: mask/canvas changed (or first frame) — recompute all
-            # tiles through the fused chain and seed the cache tables
+            # tiles through the fused chain, seed the cache tables and
+            # rebuild the head canvas from zeros (stale canvas content
+            # can never survive a re-solve)
             cache.key = key
             cache.packed = self._stack_chain(x, idx, nbr)
-            cache.ref_win = kops.gather_windows(xp, idx, t, t)
+            if cache.ref_mode == "packed":
+                cache.ref_win = kops.gather_windows(xp, idx, t, t)
+                cache.ref_canvas = None
+            else:
+                cache.ref_canvas = xp      # free alias, full advance
+                cache.ref_win = None
             cache.idx_np = np.asarray(idx)
             cache.nbr_np = np.asarray(nbr)
+            cache.cls_np = tile_class_rows(cache.nbr_np)
+            cache.epoch_np = np.zeros(n, np.int64)
+            base = jnp.zeros((len(frames), canvas_h, canvas_w, A),
+                             self.head.dtype)
+            cache.canvas = kops.sbnet_scatter_fleet(
+                _head_rows(cache.packed, self.head), idx, base,
+                block=self.chain_block)
             cache.cold_steps += 1
             cache.launched_tiles += n
-            stats = ReuseStats(n, n, n, n, n, cold=True)
+            stats = ReuseStats(n, n, n, n, n, cold=True,
+                               canvas_bytes=n * tile_bytes)
         else:
-            gate, windows = kops.tile_delta_gate(
-                xp, cache.ref_win, idx, t, t, qstep=qstep,
-                block=self.block)
+            if cache.ref_mode == "packed":
+                gate, windows = kops.tile_delta_gate(
+                    xp, cache.ref_win, idx, t, t, qstep=qstep,
+                    block=self.block)
+            else:
+                gate = kops.tile_delta_gate_canvas(
+                    xp, cache.ref_canvas, idx, t, t, qstep=qstep,
+                    block=self.block)
+                windows = None
             s = np.asarray(gate)
-            # exact gate (threshold <= 0, possibly per camera):
+            # exact gate (threshold <= 0, possibly per camera / class):
             # quantization rounds small deltas to zero and even an
             # all-zero delta prices its run tokens, so bit-identity keys
             # on the raw bitwise comparison
-            raw = gate_changed_rows(s, threshold, cache.idx_np[:, 0])
+            raw = gate_changed_rows(s, threshold, cache.idx_np[:, 0],
+                                    cache.cls_np)
             changed, compute = kops.reuse_sets(raw, cache.nbr_np,
                                                n_layers)
             n_changed = int(changed.sum())
@@ -572,41 +756,54 @@ class RoIDetector:
                 # cached values are still exact
                 slots = np.nonzero(compute)[0]
                 upd = changed[slots]
+                fresh_rows = fresh[jnp.asarray(np.nonzero(upd)[0])]
                 cache.packed = cache.packed.at[
-                    jnp.asarray(slots[upd])].set(
-                    fresh[jnp.asarray(np.nonzero(upd)[0])])
+                    jnp.asarray(slots[upd])].set(fresh_rows)
+                # ... and only those rows' head tiles hit the canvas:
+                # O(changed) write bytes, pow-of-two repeat-last padding
+                # so the scatter jit buckets like the conv chain (padding
+                # stores rewrite the last real tile's bytes in place)
+                scidx = cache.idx_np[slots[upd]]
+                ph = _head_rows(fresh_rows, self.head)
+                m = scidx.shape[0]
+                m_pad = 1
+                while m_pad < m:
+                    m_pad *= 2
+                if m_pad > m:
+                    scidx = np.concatenate(
+                        [scidx, np.broadcast_to(scidx[-1:],
+                                                (m_pad - m, 3))])
+                    ph = jnp.concatenate(
+                        [ph, jnp.broadcast_to(
+                            ph[-1:], (m_pad - m,) + ph.shape[1:])])
+                cache.canvas = kops.sbnet_scatter_changed(
+                    ph, jnp.asarray(scidx), cache.canvas,
+                    block=self.chain_block, donate=self._donate_canvas())
                 cache.launched_tiles += k_pad
                 stats = ReuseStats(n, int(raw.sum()), n_changed, k,
-                                   k_pad, cold=False, gate_stats=s)
-                # advance the references of the REFRESHED tiles from the
-                # gate's own windows output — on device, row-for-row, no
-                # overlap with any other tile's reference.  Threshold 0
-                # advances every row (bitwise identity on unchanged
-                # windows = previous-frame semantics, one assignment)
+                                   k_pad, cold=False, gate_stats=s,
+                                   canvas_bytes=m * tile_bytes)
+                # advance the references of the REFRESHED tiles —
+                # packed mode row-for-row from the gate's own windows
+                # output, canvas mode by masked window-region writes
+                # from the current frame (threshold 0 advances every
+                # row: previous-frame semantics, one free assignment)
                 adv = ref_advance_rows(threshold, cache.idx_np[:, 0],
-                                       changed)
-                if adv is None:
-                    cache.ref_win = windows
-                elif adv.any():
-                    rows = jnp.asarray(np.nonzero(adv)[0])
-                    cache.ref_win = cache.ref_win.at[rows].set(
-                        windows[rows])
+                                       changed, cache.cls_np)
+                _advance_refs(cache, xp, adv, windows, t)
             else:
+                # ALL-STATIC: the gate dispatch is the whole step — no
+                # conv, no scatter, the canvas is served as-is with 0
+                # bytes written
                 adv = ref_advance_rows(threshold, cache.idx_np[:, 0],
-                                       np.zeros(n, bool))
-                if adv is None:
-                    cache.ref_win = windows
-                elif adv.any():
-                    rows = jnp.asarray(np.nonzero(adv)[0])
-                    cache.ref_win = cache.ref_win.at[rows].set(
-                        windows[rows])
+                                       np.zeros(n, bool), cache.cls_np)
+                _advance_refs(cache, xp, adv, windows, t)
                 stats = ReuseStats(n, int(raw.sum()), 0, 0, 0,
-                                   cold=False, gate_stats=s)
-        base = jnp.zeros((len(frames), canvas_h, canvas_w,
-                          cache.packed.shape[-1]), cache.packed.dtype)
-        full = kops.sbnet_scatter_fleet(cache.packed, idx, base,
-                                        block=self.chain_block)
-        heads = full @ self.head
+                                   cold=False, gate_stats=s,
+                                   canvas_bytes=0)
+        cache.canvas_bytes_last = stats.canvas_bytes
+        cache.canvas_bytes_total += stats.canvas_bytes
+        heads = cache.canvas
         return ([heads[c, :f.shape[0], :f.shape[1]]
                  for c, f in enumerate(frames)], stats)
 

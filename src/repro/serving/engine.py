@@ -78,6 +78,16 @@ def _round_up(x: int, block: int) -> int:
     return -(-x // block) * block
 
 
+def ring_donate_argnums(*argnums: int) -> Tuple[int, ...]:
+    """The donation idiom shared by every persistent device-resident ring
+    in the system (the engine's group-cache ring, the detector's head-map
+    canvas): donate the named positional args so on hardware the update
+    is in-place (O(written) traffic, not O(buffer)), but donate NOTHING
+    on CPU — the CPU backend ignores donation and warns, and tests read
+    pre-update buffers the donation would have poisoned."""
+    return () if jax.default_backend() == "cpu" else tuple(argnums)
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params: Dict,
                  dist: Optional[DistContext] = None):
@@ -105,7 +115,7 @@ class ServingEngine:
         # go through one jit'd dynamic-update with the ring donated, so on
         # hardware the update is in-place (O(slot) traffic per request,
         # not O(ring)); CPU ignores donation and falls back to a copy.
-        donate = () if jax.default_backend() == "cpu" else (0,)
+        donate = ring_donate_argnums(0)
         self._ring_write = jax.jit(
             lambda ring, slot, gi: jax.tree.map(
                 lambda full, s: jax.lax.dynamic_update_index_in_dim(

@@ -280,7 +280,9 @@ def test_reuse_threshold0_bitwise_on_ragged_fleet_trace():
     assert cache.compute_fraction < 1.0
 
 
-def test_all_static_frame_dispatches_scatter_only():
+def test_all_static_frame_dispatches_gate_only():
+    """Zero-copy static step: the persistent canvas is served as-is —
+    the gate is the ONLY launch and not one canvas byte is written."""
     det = RoIDetector(DetectorConfig(), jax.random.PRNGKey(0))
     rng = _rng(9)
     frames, grids = _mk_fleet(rng, det, [[(3, 4), (4, 3)]])
@@ -289,13 +291,13 @@ def test_all_static_frame_dispatches_scatter_only():
     outs, counts, st = fleet_reuse_step(det, _as_jnp(frames), grids,
                                         cache)
     assert st.computed == 0 and st.raw_changed == 0
-    assert dict(counts) == {"tile_delta_gate": 1,
-                            "sbnet_scatter_fleet": 1}
+    assert dict(counts) == {"tile_delta_gate": 1}
+    assert st.canvas_bytes == 0 and cache.canvas_bytes_last == 0
     # and a third static step stays that way
     outs, counts, st = fleet_reuse_step(det, _as_jnp(frames), grids,
                                         cache)
-    assert dict(counts) == {"tile_delta_gate": 1,
-                            "sbnet_scatter_fleet": 1}
+    assert dict(counts) == {"tile_delta_gate": 1}
+    assert st.canvas_bytes == 0
 
 
 def test_dilation_never_leaks_across_cameras_or_groups():
@@ -389,10 +391,10 @@ def test_cache_invalidate_recomputes_and_reference_advances():
     cache = PackedActivationCache()
     for _ in range(4):
         fleet_reuse_step(det, _as_jnp(frames), grids, cache)
-    assert cache.cold_steps == 1 and cache.ref_win is not None
+    assert cache.cold_steps == 1 and cache.ref_canvas is not None
     cache.invalidate()
     assert cache.packed is None and cache.invalidations == 1
-    assert cache.ref_win is None
+    assert cache.ref_canvas is None and cache.canvas is None
     _, counts, st = fleet_reuse_step(det, _as_jnp(frames), grids, cache)
     assert st.cold and st.computed == st.total_tiles
     assert counts.get("tile_delta_gate", 0) == 0

@@ -131,7 +131,7 @@ def test_mesh1_bit_identical_with_dispatch_ceiling(small_det, ragged_grids):
     assert 0 < scache.compute_fraction
 
 
-def test_mesh1_all_static_step_is_scatter_only(small_det, ragged_grids):
+def test_mesh1_all_static_step_is_gate_only(small_det, ragged_grids):
     det, grids = small_det, ragged_grids
     rt = ShardedSuperlaunch(det, grids, make_fleet_mesh(1))
     cache = rt.make_cache()
@@ -139,7 +139,8 @@ def test_mesh1_all_static_step_is_scatter_only(small_det, ragged_grids):
     sharded_fleet_step(rt, f, cache, 0.0)
     _, counts, stats = sharded_fleet_step(rt, f, cache, 0.0)  # same frames
     assert stats.computed == 0 and stats.k_max == 0
-    assert dict(counts) == {"tile_delta_gate": 1, "sbnet_scatter_fleet": 1}
+    assert dict(counts) == {"tile_delta_gate": 1}
+    assert stats.canvas_bytes == 0 and cache.canvas_bytes_last == 0
 
 
 def test_mesh1_step_full_matches_superlaunch(small_det, ragged_grids):
